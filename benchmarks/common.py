@@ -1,0 +1,56 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Graphs are degree-matched scaled twins (SNAP data is not redistributable
+offline; see DESIGN.md §5.6). ``SCALE`` trades fidelity for runtime; the
+fig11 vertex-scale sweep demonstrates the reported ratios are stable in
+scale, which is what makes the twin methodology sound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.config import GCNConfig, get_gcn_config
+from repro.core import cost_model as cm
+from repro.core.partition import TorusMesh, make_partition
+from repro.core.rmat import build_graph
+
+SCALES = {"rd": 20, "or": 40, "lj": 40, "rm19": 8, "rm20": 16, "rm21": 32}
+MESH_4X4 = TorusMesh((4, 4))
+
+
+def load(gname: str, model: str = "gcn", scale: int | None = None):
+    cfg = get_gcn_config(f"gcn-{model}-{gname}")
+    g = build_graph(cfg.graph, scale_factor=scale or SCALES.get(gname, 32))
+    return cfg, g
+
+
+def suite_for(cfg: GCNConfig, g, mesh: TorusMesh):
+    part = make_partition(cfg, mesh.num_nodes, num_vertices=g.num_vertices)
+
+    def an(mpm, rounds, name):
+        c = dataclasses.replace(cfg, message_passing=mpm, use_rounds=rounds)
+        return cm.analyze(c, g, mesh, part=part, name=name)
+
+    return {
+        "oppe": an("oppe", False, "oppe"),
+        "oppr": an("oppr", False, "oppr"),
+        "tmm": an("oppm", False, "tmm"),
+        "srem": an("oppe", True, "srem"),
+        "tmm+srem": an("oppm", True, "tmm+srem"),
+    }
+
+
+def timed(fn, *args, reps: int = 1):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6  # us
+
+
+def gm(xs):
+    xs = np.asarray(list(xs), np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

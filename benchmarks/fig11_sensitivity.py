@@ -1,0 +1,78 @@
+"""Fig. 11: hardware & graph-characteristic sensitivity of MultiGCN.
+
+(a) speedup vs node count (paper: linear to 32 on RD/OR; LJ flattens)
+(b) transmissions/DRAM vs round count (paper: transmissions grow with R)
+(c) execution time vs feature length (paper: superlinear, >2x per 2x)
+(d) execution time vs vertex scale (paper: >2x per 2x)"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import gm, load, suite_for
+from repro.core import cost_model as cm
+from repro.core.partition import TorusMesh, make_partition
+
+
+def run():
+    rows = []
+    # (a) node scaling
+    for gname in ("rd", "lj"):
+        cfg, g = load(gname, "gcn")
+        t_base = None
+        for dims in ((2, 2), (4, 2), (4, 4), (8, 4)):
+            mesh = TorusMesh(dims)
+            part = make_partition(cfg, mesh.num_nodes,
+                                  num_vertices=g.num_vertices)
+            c = dataclasses.replace(cfg, message_passing="oppm",
+                                    use_rounds=True)
+            rep = cm.analyze(c, g, mesh, part=part)
+            t = rep.time_model()["time_s"]
+            t_base = t_base or t
+            rows.append((f"fig11a.{gname}.n{mesh.num_nodes}", 0.0,
+                         f"speedup={t_base / t:.2f}"))
+    # (b) round count: shrink the aggregation buffer to force more rounds
+    cfg, g = load("lj", "gcn")
+    mesh = TorusMesh((4, 4))
+    base_t = base_d = None
+    for frac in (4, 2, 1):
+        c = dataclasses.replace(cfg, message_passing="oppm", use_rounds=True,
+                                agg_buffer_bytes=cfg.agg_buffer_bytes // frac)
+        part = make_partition(c, 16, num_vertices=g.num_vertices)
+        rep = cm.analyze(c, g, mesh, part=part)
+        t = rep.totals()
+        base_t = base_t or t["net_bytes"]
+        base_d = base_d or t["dram_bytes"]
+        rows.append((f"fig11b.lj.R{rep.num_rounds}", 0.0,
+                     f"trans={t['net_bytes'] / base_t:.2f};"
+                     f"dram={t['dram_bytes'] / base_d:.2f}"))
+    # (c) feature length: 2x features -> >2x time (network superlinear)
+    cfg, g = load("rm19", "gcn")
+    t_prev = None
+    for mult in (1, 2):
+        f = cfg.graph.feat_in * mult
+        c = dataclasses.replace(cfg, message_passing="oppm", use_rounds=True)
+        part = make_partition(c, 16, num_vertices=g.num_vertices)
+        rep = cm.analyze(c, g, mesh, part=part, feat_in=f)
+        t = rep.time_model()["time_s"]
+        if t_prev:
+            rows.append((f"fig11c.rm19.h{f}", 0.0,
+                         f"time_ratio={t / t_prev:.2f} (paper >2x)"))
+        t_prev = t
+    # (d) vertex scale: RM19 -> RM20 at same degree (same twin scale -> 2x V)
+    t_prev = None
+    for gname in ("rm19", "rm20"):
+        cfg, g = load(gname, "gcn", scale=8)
+        c = dataclasses.replace(cfg, message_passing="oppm", use_rounds=True)
+        part = make_partition(c, 16, num_vertices=g.num_vertices)
+        rep = cm.analyze(c, g, TorusMesh((4, 4)), part=part)
+        t = rep.time_model()["time_s"]
+        if t_prev:
+            rows.append((f"fig11d.{gname}", 0.0,
+                         f"time_ratio={t / t_prev:.2f} per 2x vertices"))
+        t_prev = t
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,31 @@
+"""Fig. 8: speedup of MultiGCN-TMM / -SREM / -TMM+SREM over the
+OPPE-based MultiAccSys across GCN/GIN/SAGE x RD/OR/LJ (twins).
+
+Paper: TMM 2.9x GM, SREM 1.9x GM, TMM+SREM 4~12x (GM 5.8x)."""
+from __future__ import annotations
+
+from benchmarks.common import MESH_4X4, gm, load, suite_for, timed
+
+
+def run():
+    rows = []
+    speedups = {"tmm": [], "srem": [], "tmm+srem": []}
+    for model in ("gcn", "gin", "sage"):
+        for gname in ("rd", "or", "lj"):
+            cfg, g = load(gname, model)
+            (suite), us = timed(lambda: suite_for(cfg, g, MESH_4X4))
+            t = {k: v.time_model()["time_s"] for k, v in suite.items()}
+            for k in speedups:
+                sp = t["oppe"] / t[k]
+                speedups[k].append(sp)
+                rows.append((f"fig8.{model}.{gname}.{k}", us,
+                             f"speedup_vs_oppe={sp:.2f}"))
+    for k, v in speedups.items():
+        rows.append((f"fig8.GM.{k}", 0.0, f"gm_speedup={gm(v):.2f}"
+                     f" (paper: tmm 2.9 / srem 1.9 / both 5.8)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,52 @@
+"""Framework overhead microbench: wall time of jit'd train / prefill /
+decode steps on reduced configs (CPU — measures the framework, not the
+TPU; TPU projections live in the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_lm_config
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.train import optimizer as optlib
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)  # compile + warm
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    for arch in ("glm4-9b", "mixtral-8x7b", "rwkv6-1.6b", "zamba2-2.7b"):
+        cfg = get_lm_config(arch, "smoke")
+        params = lm.lm_init(cfg, jax.random.PRNGKey(0))
+        B, S = 2, 64
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+                 "labels": jnp.zeros((B, S), jnp.int32)}
+        step = jax.jit(make_train_step(cfg, None))
+        opt_state = optlib.init(params)
+        us = _time(step, params, opt_state, batch)
+        rows.append((f"lm_step.train.{arch}", round(us, 1),
+                     f"tokens_per_s={B * S / (us / 1e6):.0f}"))
+
+        st = lm.init_decode_state(cfg, B, 128)
+        dec = jax.jit(lambda p, s, t: lm.decode_step(cfg, p, t, s))
+        tok = jnp.zeros((B, 1), jnp.int32)
+        us = _time(dec, params, st, tok)
+        rows.append((f"lm_step.decode.{arch}", round(us, 1),
+                     f"tokens_per_s={B / (us / 1e6):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,25 @@
+"""Beyond-paper: OPPM deduplication applied to MoE expert-parallel
+dispatch — replica savings for the two assigned MoE archs across EP shard
+counts (deepseek 64e top-6 benefits most, as predicted in DESIGN.md)."""
+from __future__ import annotations
+
+from repro.config import get_lm_config
+from repro.core.moe_dispatch import dispatch_stats
+
+
+def run():
+    rows = []
+    for arch, shards in (("deepseek-v2-lite-16b", (4, 8, 16, 32)),
+                         ("mixtral-8x7b", (2, 4, 8))):
+        cfg = get_lm_config(arch)
+        for s in shards:
+            st = dispatch_stats(cfg, s, tokens=8192)
+            rows.append((f"moe_oppm.{arch}.ep{s}", 0.0,
+                         f"replica_savings={st['savings']:.1%};"
+                         f"a2a_bytes_ratio={1 - st['savings']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

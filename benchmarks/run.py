@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure + framework
+microbenches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig8,table6]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig3_characterization",
+    "fig8_speedup",
+    "table6_comm",
+    "table7_reduction",
+    "fig11_sensitivity",
+    "moe_dispatch_bench",
+    "lm_step_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list of module stems")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for stem in MODULES:
+        if only and not any(stem.startswith(o) or o in stem for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{stem}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us},{derived}", flush=True)
+            print(f"# {stem} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {stem} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

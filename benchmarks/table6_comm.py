@@ -1,0 +1,36 @@
+"""Table 6: network transmissions and DRAM accesses of MultiGCN
+configurations, normalized to the OPPE baseline.
+
+Paper GM: TMM 13%/75%, SREM 100%/66%, TMM+SREM 68%/27%."""
+from __future__ import annotations
+
+from benchmarks.common import MESH_4X4, gm, load, suite_for, timed
+
+
+def run():
+    rows = []
+    agg = {k: {"t": [], "d": []} for k in ("tmm", "srem", "tmm+srem")}
+    for model in ("gcn", "gin", "sage"):
+        for gname in ("rd", "or", "lj"):
+            cfg, g = load(gname, model)
+            suite, us = timed(lambda: suite_for(cfg, g, MESH_4X4))
+            base = suite["oppe"].totals()
+            for k in agg:
+                t = suite[k].totals()
+                nt = t["net_bytes"] / base["net_bytes"]
+                nd = t["dram_bytes"] / base["dram_bytes"]
+                agg[k]["t"].append(nt)
+                agg[k]["d"].append(nd)
+                rows.append((f"table6.{model}.{gname}.{k}", us,
+                             f"trans={nt:.1%};dram={nd:.1%}"))
+    paper = {"tmm": "13%/75%", "srem": "100%/66%", "tmm+srem": "68%/27%"}
+    for k, v in agg.items():
+        rows.append((f"table6.GM.{k}", 0.0,
+                     f"trans={gm(v['t']):.1%};dram={gm(v['d']):.1%}"
+                     f" (paper GM {paper[k]})"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

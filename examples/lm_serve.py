@@ -1,0 +1,47 @@
+"""Serve a small model with batched requests: continuous-batching engine,
+prefill + lockstep decode over slot pool, per-request completion.
+
+    PYTHONPATH=src python examples/lm_serve.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.config import get_lm_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_lm_config("minitron-8b", "smoke")
+    params = lm.lm_init(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, slots=4, max_len=96)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 5),
+                    max_new=8)
+            for i in range(10)]
+    for r in reqs:
+        engine.submit(r)
+
+    t0 = time.perf_counter()
+    ticks = 0
+    while engine.queue or any(engine.active):
+        engine.step()
+        ticks += 1
+        if ticks > 500:
+            raise RuntimeError("engine did not drain")
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in reqs)
+    print(f"served {len(reqs)} requests / {tokens} tokens in {dt:.2f}s "
+          f"({ticks} ticks, {tokens / dt:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> {r.out}")
+    assert all(len(r.out) >= r.max_new for r in reqs)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+on CPU with the full production substrate — config registry, synthetic
+data pipeline with prefetch, AdamW, async checkpointing, preemption-safe
+resume.
+
+    PYTHONPATH=src python examples/lm_train.py [--steps 200] [--arch glm4-9b]
+
+(The arch's *smoke-family* config is widened to ~100M params; the same
+driver lowers the full config on the 512-chip mesh via the dry-run.)
+"""
+import argparse
+import dataclasses
+
+from repro.config import get_lm_config
+from repro.train import optimizer as optlib
+from repro.train.loop import TrainConfig, train
+
+
+def hundred_m(arch: str):
+    cfg = get_lm_config(arch, "smoke")
+    return dataclasses.replace(
+        cfg, name=cfg.name.replace("smoke", "100m"),
+        num_layers=4, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=50_304, blocks=())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = hundred_m(args.arch)
+    print(f"model: {cfg.name} params={cfg.param_count() / 1e6:.0f}M")
+    tcfg = TrainConfig(
+        steps=args.steps, log_every=10, ckpt_every=50, ckpt_dir=args.ckpt,
+        opt=optlib.AdamWConfig(lr=1e-3, warmup_steps=20,
+                               total_steps=args.steps))
+    out = train(cfg, tcfg)
+    h = out["history"]
+    if not h:
+        print(f"checkpoint already at/past step {args.steps}; nothing to do "
+              f"(use --steps higher or a fresh --ckpt dir)")
+        return
+    print(f"loss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+          f"over {args.steps} steps")
+    assert h[-1]["loss"] < h[0]["loss"]
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Checkpointing: atomic npz + manifest, async save thread, and
+reshard-on-load (elastic scaling: a checkpoint written on one mesh can be
+restored onto a different device count/mesh — shardings are reapplied at
+load time from the target mesh's spec tree).
+
+Layout:
+  <dir>/step_<n>/arrays.npz     flat {path -> np.ndarray}
+  <dir>/step_<n>/manifest.json  {step, treedef paths, dtypes, meta}
+  <dir>/LATEST                  text file with the newest complete step
+
+Writes are atomic (tmp dir + rename) so a preemption mid-save never
+corrupts the latest pointer — restart-safe by construction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str | Path, step: int, tree, meta: dict | None = None):
+    """Synchronous atomic save."""
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind not in "fiub":  # bf16/fp8 (kind 'V'): npz-unsupported
+            a = a.astype(np.float32)  # bf16 -> f32 is exact
+        arrays[k] = a
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "dtypes": dtypes,  # ORIGINAL dtypes (restore casts back)
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "meta": meta or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    (ckpt_dir / "LATEST.tmp").write_text(str(step))
+    os.replace(ckpt_dir / "LATEST.tmp", ckpt_dir / "LATEST")
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in flight)."""
+
+    def __init__(self, ckpt_dir: str | Path):
+        self.ckpt_dir = Path(ckpt_dir)
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree, meta: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree, meta),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    p = Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def restore(ckpt_dir: str | Path, like, step: int | None = None,
+            mesh=None, specs=None):
+    """Restore into the structure of ``like``.
+
+    ``mesh``+``specs`` (same pytree structure as ``like``) reshard the
+    loaded arrays onto the *current* mesh — the elastic-scaling path: the
+    saved mesh shape is irrelevant, only logical shapes must match.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    z = np.load(ckpt_dir / f"step_{step}" / "arrays.npz")
+    flat_like = _flatten_with_paths(like)
+    out_flat = {}
+    for k, leaf in flat_like.items():
+        arr = z[k]
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        out_flat[k] = arr
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = list(_flatten_with_paths(like).keys())
+    restored = treedef.unflatten([out_flat[p] for p in paths])
+    if mesh is not None and specs is not None:
+        from jax.sharding import NamedSharding
+
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            restored, specs,
+            is_leaf=lambda x: isinstance(x, np.ndarray))
+    return restored, step

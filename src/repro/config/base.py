@@ -1,0 +1,324 @@
+"""Typed configuration system for the repro framework.
+
+Every architecture in ``repro.configs`` produces an :class:`LMConfig` (or
+:class:`GCNConfig` for the paper's own graph workloads) via two factory
+functions: ``full()`` (the exact published configuration, exercised only by
+the compile-only dry-run) and ``smoke()`` (a reduced same-family config that
+runs a real forward/train step on CPU in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal, Sequence
+
+# --------------------------------------------------------------------------
+# Per-layer block description
+# --------------------------------------------------------------------------
+
+MixerKind = Literal["gqa", "mla", "mamba2", "wkv6", "none"]
+FFNKind = Literal["dense", "moe", "none"]
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One transformer block = token mixer + channel FFN."""
+
+    mixer: MixerKind = "gqa"
+    ffn: FFNKind = "dense"
+    # zamba2-style shared-weight attention block applied alongside this layer
+    shared_attn: bool = False
+
+
+# --------------------------------------------------------------------------
+# Model configs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # block layout; empty -> num_layers x BlockSpec(default_mixer, default_ffn)
+    blocks: tuple[BlockSpec, ...] = ()
+    default_mixer: MixerKind = "gqa"
+    default_ffn: FFNKind = "dense"
+
+    # attention details
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0  # 0 -> full causal attention
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM / linear attention
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    wkv_head_dim: int = 64
+    # chunk sizes (perf levers: interior working set ~ S*chunk per layer)
+    ssm_chunk: int = 128
+    wkv_chunk: int = 64
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0  # >0 -> enc-dec; num_layers = decoder layers
+    encoder_seq_len: int = 1500  # whisper frame count after conv frontend
+
+    # modality frontend stub: inputs carry precomputed embeddings
+    frontend: Literal["none", "audio_stub", "patch_stub"] = "none"
+    frontend_seq_len: int = 0  # patches/frames prepended to the text stream
+
+    # numerics / structure
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    act: Literal["swiglu", "gelu", "relu2"] = "swiglu"
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # citation tier from the assignment table
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if not self.blocks:
+            object.__setattr__(
+                self,
+                "blocks",
+                tuple(
+                    BlockSpec(self.default_mixer, self.default_ffn)
+                    for _ in range(self.num_layers)
+                ),
+            )
+        assert len(self.blocks) == self.num_layers, (
+            f"{self.name}: blocks={len(self.blocks)} != num_layers={self.num_layers}"
+        )
+
+    # ---------------- derived quantities ----------------
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(b.mixer in ("gqa", "mla") or b.shared_attn for b in self.blocks)
+
+    @property
+    def pure_full_attention(self) -> bool:
+        """True when every mixer is unwindowed softmax attention
+        (-> long_500k is skipped per the assignment)."""
+        return (
+            all(b.mixer in ("gqa", "mla") for b in self.blocks)
+            and self.sliding_window == 0
+        )
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (used for 6ND roofline checks)."""
+        d, h = self.d_model, self.head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        v_head = self.v_head_dim or h
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        if self.is_encdec:
+            total += self.encoder_layers * self._attn_params() + (
+                self.encoder_layers * self._ffn_params("dense")
+            )
+
+        for b in self.blocks:
+            if b.mixer == "gqa":
+                total += self._attn_params()
+            elif b.mixer == "mla":
+                total += self._mla_params()
+            elif b.mixer == "mamba2":
+                total += self._mamba_params()
+            elif b.mixer == "wkv6":
+                total += self._wkv_params()
+            if b.shared_attn:
+                pass  # shared weights counted once below
+            total += self._ffn_params(b.ffn)
+            total += 2 * d  # norms
+        if any(b.shared_attn for b in self.blocks):
+            total += self._attn_params() + self._ffn_params("dense") + 2 * self.d_model
+        if self.is_encdec:  # cross attention in each decoder layer
+            total += self.num_layers * self._attn_params()
+        return total
+
+    def _attn_params(self) -> int:
+        d, h = self.d_model, self.head_dim
+        return d * (self.num_heads * h) + 2 * d * (self.num_kv_heads * h) + (
+            self.num_heads * h
+        ) * d
+
+    def _mla_params(self) -> int:
+        d = self.d_model
+        r = self.kv_lora_rank
+        qk = self.qk_nope_dim + self.qk_rope_dim
+        n = self.num_heads
+        return (
+            d * n * qk  # q proj (no q-lora in v2-lite)
+            + d * (r + self.qk_rope_dim)  # kv down
+            + r * n * (self.qk_nope_dim + self.v_head_dim)  # kv up
+            + n * self.v_head_dim * d  # o proj
+        )
+
+    def _mamba_params(self) -> int:
+        d = self.d_model
+        d_in = self.ssm_expand * d
+        nh = d_in // self.ssm_head_dim
+        # in_proj covers z, x, B, C, dt  (mamba2 fused projection)
+        return (
+            d * (2 * d_in + 2 * self.ssm_state + nh)
+            + d_in * d  # out proj
+            + self.ssm_conv_width * (d_in + 2 * self.ssm_state)
+            + 2 * nh  # A, D
+        )
+
+    def _wkv_params(self) -> int:
+        d = self.d_model
+        # r, k, v, g, w projections + output
+        return 5 * d * d + d * d
+
+    def _ffn_params(self, kind: str) -> int:
+        d = self.d_model
+        n_mat = 3 if self.act == "swiglu" else 2
+        if kind == "dense":
+            return n_mat * d * self.d_ff
+        if kind == "moe":
+            p = self.num_experts * n_mat * d * self.moe_d_ff
+            p += self.num_shared_experts * n_mat * d * self.moe_d_ff
+            p += d * self.num_experts  # router
+            return p
+        return 0
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE counts top_k + shared experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        n_mat = 3 if self.act == "swiglu" else 2
+        per_expert = n_mat * self.d_model * self.moe_d_ff
+        n_moe_layers = sum(1 for b in self.blocks if b.ffn == "moe")
+        inactive = n_moe_layers * (self.num_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+# --------------------------------------------------------------------------
+# Input shapes (assigned per-arch shape set)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+LM_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------------------------
+# GCN configs (the paper's own workloads)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GraphSpec:
+    """A graph dataset (Table 3). Real SNAP graphs are represented by
+    degree/size-matched RMAT twins in this offline container."""
+
+    name: str
+    num_vertices: int
+    num_edges: int
+    feat_in: int  # |h^0|
+    feat_hidden: int  # |h^1|
+    avg_degree: float = 0.0
+    rmat_seed: int = 0
+    synthetic_twin_of: str = ""  # e.g. "Reddit" when degree-matched
+
+    @property
+    def topology_bytes(self) -> int:
+        return self.num_edges * 4
+
+    @property
+    def feature_bytes(self) -> int:
+        return self.num_vertices * self.feat_in * 4
+
+
+@dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    model: Literal["gcn", "gin", "sage"]
+    graph: GraphSpec
+    num_layers: int = 2
+    # message-passing model: oppe | oppr | oppm ; rounds via SREM
+    message_passing: Literal["oppe", "oppr", "oppm"] = "oppm"
+    use_rounds: bool = True
+    agg_buffer_bytes: int = 1 << 20  # paper: 1 MB aggregation buffer
+    alpha: float = 0.75  # paper's buffer reservation factor
+    dtype: str = "float32"
+    source: str = "MultiGCN paper, Table 3"
+
+
+# --------------------------------------------------------------------------
+# Mesh / hardware description
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants. Defaults = TPU v5e per chip."""
+
+    peak_bf16_flops: float = 197e12
+    hbm_bandwidth: float = 819e9
+    ici_link_bandwidth: float = 50e9  # per link per direction
+    ici_links_per_chip: int = 4  # 2D torus
+    hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 128 * 1024**2
+
+
+@dataclass(frozen=True)
+class PaperNodeSpec:
+    """The paper's processing-node constants (Table 2) for table-for-table
+    reproduction inside core/cost_model.py."""
+
+    clock_hz: float = 1e9
+    num_nodes: int = 16
+    net_bandwidth: float = 600e9  # NVLink-class per node
+    net_latency_cycles: int = 500
+    hbm_bandwidth: float = 256e9
+    peak_ops: float = 8 * 128 * 2 * 1e9  # 8 arrays x 1x128 MAC @ 1GHz
+    agg_buffer_bytes: int = 1 << 20
+    edge_buffer_bytes: int = 128 << 10
+    weight_buffer_bytes: int = 2 << 20
+    router_buffer_bytes: int = 3 << 19  # 1.5 MB
+    nvlink_pj_per_bit: float = 8.0
+    hbm_pj_per_bit: float = 7.0
+
+
+DEFAULT_HW = HardwareSpec()
+PAPER_NODE = PaperNodeSpec()

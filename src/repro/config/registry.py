@@ -1,0 +1,70 @@
+"""Architecture registry: ``--arch <id>`` lookup for launchers and tests."""
+from __future__ import annotations
+
+from typing import Callable
+
+from .base import GCNConfig, LMConfig, LM_SHAPES, ShapeConfig
+
+_LM_REGISTRY: dict[str, dict[str, Callable[[], LMConfig]]] = {}
+_GCN_REGISTRY: dict[str, dict[str, Callable[[], GCNConfig]]] = {}
+
+
+def register_lm(name: str, *, full: Callable[[], LMConfig], smoke: Callable[[], LMConfig]):
+    assert name not in _LM_REGISTRY, f"duplicate arch {name}"
+    _LM_REGISTRY[name] = {"full": full, "smoke": smoke}
+
+
+def register_gcn(name: str, *, full: Callable[[], GCNConfig], smoke: Callable[[], GCNConfig]):
+    assert name not in _GCN_REGISTRY, f"duplicate gcn arch {name}"
+    _GCN_REGISTRY[name] = {"full": full, "smoke": smoke}
+
+
+def _ensure_loaded():
+    # configs/__init__ registers everything on import
+    import repro.configs  # noqa: F401
+
+
+def get_lm_config(name: str, variant: str = "full") -> LMConfig:
+    _ensure_loaded()
+    if name not in _LM_REGISTRY:
+        raise KeyError(f"unknown LM arch {name!r}; have {sorted(_LM_REGISTRY)}")
+    return _LM_REGISTRY[name][variant]()
+
+
+def get_gcn_config(name: str, variant: str = "full") -> GCNConfig:
+    _ensure_loaded()
+    if name not in _GCN_REGISTRY:
+        raise KeyError(f"unknown GCN arch {name!r}; have {sorted(_GCN_REGISTRY)}")
+    return _GCN_REGISTRY[name][variant]()
+
+
+def list_lm_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_LM_REGISTRY)
+
+
+def list_gcn_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_GCN_REGISTRY)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return LM_SHAPES[name]
+
+
+def lm_cells(include_skipped: bool = False) -> list[tuple[str, str, str]]:
+    """All (arch, shape, status) dry-run cells. status in {run, skip:<why>}."""
+    _ensure_loaded()
+    cells = []
+    for arch in list_lm_archs():
+        cfg = _LM_REGISTRY[arch]["full"]()
+        for shape in LM_SHAPES.values():
+            status = "run"
+            if shape.name == "long_500k":
+                if cfg.is_encdec:
+                    status = "skip:enc-dec decoder context << 500k"
+                elif cfg.pure_full_attention:
+                    status = "skip:pure full attention (assignment: sub-quadratic only)"
+            if status == "run" or include_skipped:
+                cells.append((arch, shape.name, status))
+    return cells

@@ -1,0 +1,14 @@
+"""Importing this package registers every assigned architecture."""
+from . import (  # noqa: F401
+    deepseek_v2_lite_16b,
+    gcn_paper,
+    glm4_9b,
+    internvl2_76b,
+    minitron_8b,
+    mistral_large_123b,
+    mixtral_8x7b,
+    rwkv6_1p6b,
+    starcoder2_15b,
+    whisper_tiny,
+    zamba2_2p7b,
+)

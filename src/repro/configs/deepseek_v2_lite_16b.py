@@ -1,0 +1,64 @@
+"""deepseek-v2-lite-16b — MLA + fine-grained MoE [arXiv:2405.04434; hf].
+
+27L d_model=2048 16H (MLA kv_lora=512, rope_dim=64) vocab=102400.
+MoE: 64 routed experts top-6 + 2 shared, moe_d_ff=1408; first layer is a
+dense MLP with d_ff=10944 (hf config)."""
+from repro.config import BlockSpec, LMConfig, register_lm
+
+
+def _blocks(n: int) -> tuple[BlockSpec, ...]:
+    return tuple(
+        BlockSpec(mixer="mla", ffn="dense" if i == 0 else "moe") for i in range(n)
+    )
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        num_layers=27,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,  # MLA: latent shared across heads; kept for bookkeeping
+        head_dim=192,  # qk_nope 128 + qk_rope 64
+        d_ff=10944,  # dense first layer
+        vocab_size=102_400,
+        blocks=_blocks(27),
+        kv_lora_rank=512,
+        qk_rope_dim=64,
+        qk_nope_dim=128,
+        v_head_dim=128,
+        num_experts=64,
+        num_shared_experts=2,
+        top_k=6,
+        moe_d_ff=1408,
+        rope_theta=10_000.0,
+        act="swiglu",
+        source="arXiv:2405.04434; hf",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v2-lite-16b-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=24,
+        d_ff=160,
+        vocab_size=512,
+        blocks=_blocks(2),
+        kv_lora_rank=32,
+        qk_rope_dim=8,
+        qk_nope_dim=16,
+        v_head_dim=16,
+        num_experts=8,
+        num_shared_experts=1,
+        top_k=2,
+        moe_d_ff=48,
+    )
+
+
+register_lm("deepseek-v2-lite-16b", full=full, smoke=smoke)

@@ -1,0 +1,38 @@
+"""glm4-9b [hf:THUDM/glm-4-9b; hf].
+
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552. RoPE, SwiGLU."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="glm4-9b",
+        family="dense",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=13696,
+        vocab_size=151_552,
+        rope_theta=10_000.0,
+        act="swiglu",
+        source="hf:THUDM/glm-4-9b; hf",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="glm4-9b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=16,
+        d_ff=96,
+        vocab_size=512,
+    )
+
+
+register_lm("glm4-9b", full=full, smoke=smoke)

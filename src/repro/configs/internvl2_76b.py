@@ -1,0 +1,43 @@
+"""internvl2-76b — InternViT + LLM backbone [arXiv:2404.16821; unverified].
+
+Backbone only per the assignment: 80L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256. The InternViT frontend is a STUB: input_specs()
+provides precomputed patch embeddings prepended to the token stream."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="internvl2-76b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128_256,
+        rope_theta=500_000.0,
+        frontend="patch_stub",
+        frontend_seq_len=256,  # one image tile = 256 patch embeddings
+        source="arXiv:2404.16821; unverified",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="internvl2-76b-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        frontend="patch_stub",
+        frontend_seq_len=8,
+    )
+
+
+register_lm("internvl2-76b", full=full, smoke=smoke)

@@ -1,0 +1,42 @@
+"""minitron-8b — width-pruned Nemotron-4 [arXiv:2407.14679; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000. RoPE, squared-ReLU
+MLP family (Nemotron uses relu^2, non-gated)."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="minitron-8b",
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=256_000,
+        rope_theta=500_000.0,
+        act="relu2",
+        norm="layernorm",
+        source="arXiv:2407.14679; hf",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="minitron-8b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        act="relu2",
+        norm="layernorm",
+    )
+
+
+register_lm("minitron-8b", full=full, smoke=smoke)

@@ -1,0 +1,38 @@
+"""mistral-large-123b [hf:mistralai/Mistral-Large-Instruct-2407; unverified].
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768. RoPE, SwiGLU."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="mistral-large-123b",
+        family="dense",
+        num_layers=88,
+        d_model=12288,
+        num_heads=96,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=32_768,
+        rope_theta=1_000_000.0,
+        act="swiglu",
+        source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="mistral-large-123b-smoke",
+        family="dense",
+        num_layers=3,
+        d_model=96,
+        num_heads=6,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=512,
+    )
+
+
+register_lm("mistral-large-123b", full=full, smoke=smoke)

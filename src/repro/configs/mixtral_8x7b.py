@@ -1,0 +1,50 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8e top-2, SWA
+window 4096 (the SWA makes long_500k decode O(window))."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=32_000,
+        default_ffn="moe",
+        num_experts=8,
+        top_k=2,
+        moe_d_ff=14336,
+        sliding_window=4096,
+        rope_theta=1_000_000.0,
+        act="swiglu",
+        source="arXiv:2401.04088; hf",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="mixtral-8x7b-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        default_ffn="moe",
+        num_experts=4,
+        top_k=2,
+        moe_d_ff=128,
+        sliding_window=32,
+    )
+
+
+register_lm("mixtral-8x7b", full=full, smoke=smoke)

@@ -1,0 +1,46 @@
+"""rwkv6-1.6b (Finch) — attention-free, data-dependent decay
+[arXiv:2404.05892; unverified].
+
+24L d_model=2048 d_ff=7168 vocab=65536. Token mixer = WKV6 linear
+attention with per-channel data-dependent decay; O(1) state per token."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="rwkv6-1.6b",
+        family="ssm",
+        num_layers=24,
+        d_model=2048,
+        num_heads=32,  # wkv heads = d_model / wkv_head_dim
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=7168,
+        vocab_size=65_536,
+        default_mixer="wkv6",
+        wkv_head_dim=64,
+        act="relu2",  # rwkv channel-mix uses squared relu
+        norm="layernorm",
+        source="arXiv:2404.05892; unverified",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="rwkv6-1.6b-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        default_mixer="wkv6",
+        wkv_head_dim=16,
+        act="relu2",
+        norm="layernorm",
+    )
+
+
+register_lm("rwkv6-1.6b", full=full, smoke=smoke)

@@ -1,0 +1,42 @@
+"""starcoder2-15b [arXiv:2402.19173; hf].
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152. RoPE, GeLU MLP,
+LayerNorm (starcoder2 uses standard LN + gelu)."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="starcoder2-15b",
+        family="dense",
+        num_layers=40,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=24576,
+        vocab_size=49_152,
+        rope_theta=100_000.0,
+        act="gelu",
+        norm="layernorm",
+        source="arXiv:2402.19173; hf",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="starcoder2-15b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=96,
+        num_heads=6,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=512,
+        act="gelu",
+        norm="layernorm",
+    )
+
+
+register_lm("starcoder2-15b", full=full, smoke=smoke)

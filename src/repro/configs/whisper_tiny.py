@@ -1,0 +1,54 @@
+"""whisper-tiny — encoder-decoder audio model [arXiv:2212.04356; unverified].
+
+4L (enc) + 4L (dec) d_model=384 6H (kv=6) d_ff=1536 vocab=51865. The conv
+audio frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, 1500, d_model)."""
+from repro.config import LMConfig, register_lm
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="whisper-tiny",
+        family="audio",
+        num_layers=4,  # decoder layers
+        encoder_layers=4,
+        encoder_seq_len=1500,
+        d_model=384,
+        num_heads=6,
+        num_kv_heads=6,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=51_865,
+        frontend="audio_stub",
+        frontend_seq_len=1500,
+        norm="layernorm",
+        act="gelu",
+        rope_theta=0.0,  # whisper uses learned/sinusoidal positions
+        tie_embeddings=True,
+        source="arXiv:2212.04356; unverified",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="whisper-tiny-smoke",
+        family="audio",
+        num_layers=2,
+        encoder_layers=2,
+        encoder_seq_len=64,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        frontend="audio_stub",
+        frontend_seq_len=64,
+        norm="layernorm",
+        act="gelu",
+        rope_theta=0.0,
+        tie_embeddings=True,
+    )
+
+
+register_lm("whisper-tiny", full=full, smoke=smoke)

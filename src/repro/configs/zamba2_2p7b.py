@@ -1,0 +1,58 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242; hf].
+
+54L d_model=2560 32H (GQA kv=32, used only in the shared block) d_ff=10240
+vocab=32000, ssm_state=64. Mamba2 layers carry no per-layer MLP; the MLP
+(d_ff=10240) lives inside the shared transformer block (one set of weights,
+reused), applied every 6th layer per the paper's interleaving. (The
+published model adds per-invocation LoRA deltas to the shared block; we
+share the weights exactly — noted in DESIGN.md.)"""
+from repro.config import BlockSpec, LMConfig, register_lm
+
+
+def _blocks(n: int, period: int) -> tuple[BlockSpec, ...]:
+    return tuple(
+        BlockSpec(mixer="mamba2", ffn="none", shared_attn=(i % period == period - 1))
+        for i in range(n)
+    )
+
+
+def full() -> LMConfig:
+    return LMConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab_size=32_000,
+        blocks=_blocks(54, 6),
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        tie_embeddings=True,
+        source="arXiv:2411.15242; hf",
+    )
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="zamba2-2.7b-smoke",
+        family="hybrid",
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        blocks=_blocks(4, 2),
+        ssm_state=16,
+        ssm_expand=2,
+        ssm_head_dim=16,
+        tie_embeddings=True,
+    )
+
+
+register_lm("zamba2-2.7b", full=full, smoke=smoke)

@@ -1,0 +1,30 @@
+"""MultiGCN core: the paper's contribution as composable JAX modules.
+
+* graph / rmat / partition — graph substrate + §4.3 bit-field round partition
+* plan — static dimension-ordered multicast plans (OPPE/OPPR/OPPM)
+* message_passing — shard_map executor (ppermute relay, SREM round scan)
+* gcn_models — GCN/GIN/GraphSAGE + single-device oracles
+* cost_model — paper-table analytical counters (transmissions/DRAM/energy)
+* moe_dispatch — the paper's one-put-per-multicast applied to MoE all-to-all
+"""
+from . import (
+    cost_model,
+    gcn_models,
+    graph,
+    message_passing,
+    moe_dispatch,
+    partition,
+    plan,
+    rmat,
+)
+
+__all__ = [
+    "cost_model",
+    "gcn_models",
+    "graph",
+    "message_passing",
+    "moe_dispatch",
+    "partition",
+    "plan",
+    "rmat",
+]

@@ -1,0 +1,66 @@
+"""Graph structures for the MultiGCN core.
+
+Graphs are host-side numpy edge lists (the partitioner and communication
+planner run on host, exactly like the paper's one-time graph mapping);
+device-side structures (replica buffers, padded neighbor lists) are built
+by ``repro.core.plan``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Graph:
+    """Directed graph; edge (src[i], dst[i]) means src's feature is
+    aggregated into dst (dst's in-neighbor set contains src)."""
+
+    num_vertices: int
+    src: np.ndarray  # (E,) int32
+    dst: np.ndarray  # (E,) int32
+    name: str = "graph"
+
+    def __post_init__(self):
+        self.src = np.asarray(self.src, np.int32)
+        self.dst = np.asarray(self.dst, np.int32)
+        assert self.src.shape == self.dst.shape
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.size)
+
+    @property
+    def avg_degree(self) -> float:
+        return self.num_edges / max(self.num_vertices, 1)
+
+    def in_degrees(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.num_vertices).astype(np.int32)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.num_vertices).astype(np.int32)
+
+    def csr_in(self):
+        """CSR over destinations: (indptr, src_indices) sorted by dst."""
+        order = np.argsort(self.dst, kind="stable")
+        dsts = self.dst[order]
+        indptr = np.zeros(self.num_vertices + 1, np.int64)
+        np.add.at(indptr, dsts + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return indptr, self.src[order]
+
+    def with_self_loops(self) -> "Graph":
+        """GCN aggregates over {v} ∪ N(v); add v->v edges."""
+        loops = np.arange(self.num_vertices, dtype=np.int32)
+        return Graph(self.num_vertices,
+                     np.concatenate([self.src, loops]),
+                     np.concatenate([self.dst, loops]),
+                     name=self.name + "+self")
+
+
+def erdos(num_vertices: int, num_edges: int, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, num_vertices, num_edges, dtype=np.int32)
+    dst = rng.integers(0, num_vertices, num_edges, dtype=np.int32)
+    return Graph(num_vertices, src, dst, name=f"er-{num_vertices}")

@@ -1,0 +1,162 @@
+"""One-put-per-multicast applied to MoE expert-parallel dispatch.
+
+The paper's insight transfers directly: a token routed to top-k experts is
+a vertex whose "neighbors" are experts; with experts sharded over the
+"model" axis, several of a token's experts often co-reside on one shard.
+The baseline all-to-all ships one activation copy per (token, expert) —
+the OPPE pattern. The OPPM dispatch ships one copy per (token,
+destination shard) and shares it among that shard's experts — the paper's
+"one replica shared by all neighbors in the processing node".
+
+Executable via shard_map over the "model" axis:
+  1. route: top-k experts per token (local tokens)
+  2. dedup: sort each token's shard list, keep first occurrences
+  3. pack per-destination send buffers (capacity-padded)
+  4. all_to_all (the torus multicast degenerates to A2A here because every
+     shard pair exchanges — the dedup is where the paper's savings live)
+  5. local second-level dispatch to this shard's experts (one replica,
+     many experts), expert FFN, weighted partial sums
+  6. reverse all_to_all, combine at the origin.
+
+``dispatch_stats`` reports the measured byte savings (deduped vs per-pair)
+— benchmarked in benchmarks/moe_dispatch_bench.py against deepseek's
+64-expert top-6 routing where the savings are largest.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LMConfig
+from repro.nn.layers import ffn_apply
+from repro.nn import moe as moe_lib
+
+
+@dataclass(frozen=True)
+class EPConfig:
+    axis: str = "model"
+    num_shards: int = 1
+    capacity_factor: float = 1.5
+    dedup: bool = True  # False -> OPPE-style per-(token, expert) baseline
+
+
+def _dedup_shards(shard_ids: jax.Array, dedup: bool):
+    """shard_ids: (T, K). Returns (ids, keep_mask) with duplicates (same
+    token -> same shard) masked when dedup is on."""
+    if not dedup:
+        return shard_ids, jnp.ones_like(shard_ids, bool)
+    s = jnp.sort(shard_ids, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones_like(s[:, :1], bool), s[:, 1:] != s[:, :-1]], axis=1)
+    return s, first
+
+
+def ep_moe_apply(cfg: LMConfig, ep: EPConfig, p, x):
+    """Expert-parallel MoE layer body — call inside shard_map over ep.axis.
+
+    p: local expert weights {w_gate,w_up,w_down: (E_local, d, ff)} +
+       router (d, E) replicated.
+    x: (T_loc, D) local tokens. Returns (y (T_loc, D), stats dict).
+    """
+    T, D = x.shape
+    S = ep.num_shards
+    E = cfg.num_experts
+    E_loc = E // S
+    K = cfg.top_k
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    gates, experts, aux = moe_lib.route(cfg, logits)  # (T,K)
+    shard_of = experts // E_loc  # (T,K)
+
+    # ---- dedup per (token, shard): one replica per destination shard ----
+    sorted_shards, keep = _dedup_shards(shard_of, ep.dedup)
+    # capacity per destination shard
+    cap = int(ep.capacity_factor * T * K / S)
+    cap = max(8, -(-cap // 8) * 8)
+
+    # duplicates (same token -> same shard) masked to sentinel shard S;
+    # dispatch over S+1 "experts" whose overflow row is S+1
+    flat_dst = jnp.where(keep, sorted_shards, S).reshape(T, K)
+    dest_e, dest_r, kept = moe_lib.dispatch_indices(flat_dst, S + 1, cap)
+    tok_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    send = jnp.zeros((S + 2, cap, D), x.dtype).at[dest_e, dest_r].set(x[tok_idx])
+    send_tok = jnp.full((S + 2, cap), -1, jnp.int32).at[dest_e, dest_r].set(tok_idx)
+
+    # replica row of token t on shard s (only kept first-occurrences land
+    # in columns < S; duplicates/overflow land in sentinel columns)
+    rep_row = jnp.zeros((T, S + 2), jnp.int32).at[tok_idx, dest_e].set(dest_r)
+    exists = jnp.zeros((T, S + 2), jnp.int32).at[tok_idx, dest_e].add(1)
+    # per-replica gate rows: every (t,k) adds its gate to the SHARED
+    # replica of (t, shard_of[t,k]) at its local expert column — the
+    # paper's "one replica shared by all neighbors on the node"
+    row_tk = rep_row[jnp.arange(T)[:, None], shard_of]  # (T, K)
+    ok_tk = exists[jnp.arange(T)[:, None], shard_of] > 0
+    gate_rows = jnp.zeros((S + 2, cap, E_loc), jnp.float32).at[
+        shard_of.reshape(-1), row_tk.reshape(-1),
+        (experts % E_loc).reshape(-1)].add(
+        (gates * ok_tk).reshape(-1))
+    send, gate_rows, send_tok = send[:S], gate_rows[:S], send_tok[:S]
+
+    # ---- exchange ----
+    recv = jax.lax.all_to_all(send, ep.axis, 0, 0, tiled=False)
+    recv_gates = jax.lax.all_to_all(gate_rows, ep.axis, 0, 0, tiled=False)
+    # recv: (S, cap, D) — tokens from every source shard
+
+    # ---- local expert compute: one replica serves all local experts ----
+    xr = recv.reshape(S * cap, D)
+    gr = recv_gates.reshape(S * cap, E_loc)
+    h_g = jnp.einsum("td,edf->etf", xr, p["w_gate"].astype(xr.dtype))
+    h_u = jnp.einsum("td,edf->etf", xr, p["w_up"].astype(xr.dtype))
+    h = jax.nn.silu(h_g) * h_u
+    out_e = jnp.einsum("etf,efd->etd", h, p["w_down"].astype(xr.dtype))
+    # weighted combine over local experts per replica
+    part = jnp.einsum("etd,te->td", out_e.astype(jnp.float32), gr)
+    part = part.reshape(S, cap, D)
+
+    # ---- return partials to origins ----
+    # A2A is symmetric: back[s, c] is the partial result for MY send row
+    # (s, c), so the local send_tok gives the reverse-scatter indices.
+    back = jax.lax.all_to_all(part.astype(x.dtype), ep.axis, 0, 0,
+                              tiled=False)
+    flat_back = back.reshape(S * cap, D).astype(jnp.float32)
+    flat_tok = send_tok.reshape(S * cap)
+    y = jnp.zeros((T + 1, D), jnp.float32).at[
+        jnp.where(flat_tok >= 0, flat_tok, T)].add(flat_back)
+    y = y[:T]
+
+    if "shared" in p:
+        y = y + ffn_apply(cfg, p["shared"], x).astype(jnp.float32)
+
+    sent_replicas = jnp.sum(kept & (dest_e < S))  # real cross-shard copies
+    stats = {
+        "aux": aux,
+        "replicas": sent_replicas,
+        "naive_replicas": jnp.asarray(T * K, jnp.int32),
+        "bytes_saved_frac": 1.0 - sent_replicas / (T * K),
+    }
+    return y.astype(x.dtype), stats
+
+
+def dispatch_stats(cfg: LMConfig, num_shards: int, tokens: int,
+                   seed: int = 0) -> dict:
+    """Analytical/Monte-Carlo measurement of OPPM dedup savings for an
+    arch's routing shape (used by the MoE dispatch benchmark)."""
+    rng = np.random.default_rng(seed)
+    E, K = cfg.num_experts, cfg.top_k
+    E_loc = E // num_shards
+    # uniform routing (trained routers are flatter than random — this is
+    # the conservative case for dedup savings)
+    picks = np.stack([rng.choice(E, size=K, replace=False)
+                      for _ in range(tokens)])
+    shards = picks // E_loc
+    dedup = sum(len(set(row)) for row in shards)
+    return {
+        "tokens": tokens,
+        "per_edge_replicas": tokens * K,  # OPPE baseline
+        "per_shard_replicas": int(dedup),  # OPPM
+        "savings": 1.0 - dedup / (tokens * K),
+    }

@@ -1,0 +1,109 @@
+"""Bit-field vertex mapping and round partition (paper §4.3, Fig. 7).
+
+vID bit layout:  [ round | slot (x bits) | node (n bits) ]
+  * node  = vID[0:n)        — which processing node owns the vertex
+  * slot  = vID[n:n+x)      — local index within a round (2^x per node)
+  * round = vID[n+x:)       — execution round (SREM)
+
+``x`` is sized by the paper's rule 2^x <= alpha * M / S (aggregation buffer
+capacity over aggregated-feature bytes), alpha = 0.75.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.config import GCNConfig
+
+
+@dataclass(frozen=True)
+class TorusMesh:
+    """d-dimensional torus of processing nodes. dims row-major; node id =
+    mixed-radix encoding of coordinates (last dim fastest)."""
+
+    dims: tuple[int, ...]
+
+    @property
+    def num_nodes(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    def coords(self, node: np.ndarray | int):
+        node = np.asarray(node)
+        out = []
+        for d in reversed(self.dims):
+            out.append(node % d)
+            node = node // d
+        return tuple(reversed(out))
+
+    def node_id(self, coords) -> np.ndarray | int:
+        nid = 0
+        for c, d in zip(coords, self.dims):
+            nid = nid * d + c
+        return nid
+
+    def ring_dist(self, a, b, dim: int, bidir: bool = False):
+        """Hops from coord a to b along ``dim`` (unidirectional ring by
+        default; ``bidir`` takes the shorter way — a perf-iteration lever)."""
+        d = self.dims[dim]
+        fwd = (np.asarray(b) - np.asarray(a)) % d
+        if not bidir:
+            return fwd
+        return np.minimum(fwd, d - fwd)
+
+
+@dataclass(frozen=True)
+class RoundPartition:
+    num_nodes: int  # power of two
+    n_bits: int
+    x_bits: int
+    num_rounds: int
+    num_vertices: int
+
+    def node_of(self, v):
+        return np.asarray(v) & (self.num_nodes - 1)
+
+    def slot_of(self, v):
+        return (np.asarray(v) >> self.n_bits) & ((1 << self.x_bits) - 1)
+
+    def round_of(self, v):
+        return np.asarray(v) >> (self.n_bits + self.x_bits)
+
+    @property
+    def slots_per_round(self) -> int:
+        return 1 << self.x_bits
+
+    def local_index(self, v):
+        """Index of v within its node's full vertex table (round-major)."""
+        return (self.round_of(v) << self.x_bits) | self.slot_of(v)
+
+    def vertices_per_node(self) -> int:
+        return self.num_rounds << self.x_bits
+
+
+def choose_x_bits(cfg: GCNConfig, num_nodes: int) -> int:
+    """Paper: 2^x <= alpha*M/S < 2^(x+1); S = aggregated feature bytes."""
+    S = cfg.graph.feat_in * 4  # replicas hold |h^(k-1)| floats
+    budget = cfg.alpha * cfg.agg_buffer_bytes / S
+    x = max(0, int(math.floor(math.log2(max(budget, 1.0)))))
+    return x
+
+
+def make_partition(cfg: GCNConfig, num_nodes: int,
+                   num_vertices: int | None = None) -> RoundPartition:
+    assert num_nodes & (num_nodes - 1) == 0, "node count must be 2^n"
+    n_bits = int(math.log2(num_nodes))
+    V = num_vertices if num_vertices is not None else cfg.graph.num_vertices
+    if cfg.use_rounds:
+        x_bits = choose_x_bits(cfg, num_nodes)
+        per_round_capacity = num_nodes << x_bits
+        num_rounds = max(1, -(-V // per_round_capacity))
+    else:
+        # no SREM: a single round spanning the whole vertex range
+        x_bits = max(0, (V - 1).bit_length() - n_bits)
+        num_rounds = 1
+    return RoundPartition(num_nodes, n_bits, x_bits, num_rounds, V)

@@ -1,0 +1,443 @@
+"""Static communication plans for MultiGCN message passing.
+
+This is the host-side "graph mapping" stage of the paper (§4.3): given a
+graph, a torus mesh, a round partition, and a message-passing model, build
+the static relay schedule that the SPMD executor (``message_passing.py``)
+replays with ``ppermute`` collectives.
+
+Message-passing models (paper §2, §4):
+  * ``oppe``            — one put per edge  (Tesseract-style baseline)
+  * ``oppr``            — one put per (vertex, destination node) (GraphP)
+  * ``oppm``            — one put per multicast (the paper's TMM): one item
+                          per vertex, forked along a dimension-ordered tree
+Rounds (SREM) are orthogonal: any model can run round-partitioned.
+
+Relay encoding ("sorted-prefix relay"): per phase (= torus dimension), each
+node's outgoing items are sorted by descending remaining travel distance H.
+At ring hop h only the prefix of items with H >= h is still in flight, so
+the ppermute payload at hop h has static length L_h = max over nodes of
+|{H >= h}|. A multicast deposit at hop h is a static (mask, slot) pair
+into the receiving node's next-phase buffer (or, at the last dimension,
+into its replica buffer — the paper's aggregation buffer).
+
+Every byte the executor moves is therefore also countable analytically;
+``CommPlan.stats`` carries the counts the cost model cross-checks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.config import GCNConfig
+from repro.core.graph import Graph
+from repro.core.partition import RoundPartition, TorusMesh, make_partition
+
+
+# ---------------------------------------------------------------------------
+# Plan containers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PhasePlan:
+    """Relay schedule for one torus dimension (all rounds stacked).
+
+    With ``bidir`` plans a second relay runs in the -1 ring direction
+    (``hop_len_rev``/``dep_rev``...); each item picks the direction with
+    the shorter maximum travel — the bidirectional-torus optimization the
+    paper's DyXY routing gets for free and our unidirectional baseline
+    deliberately omitted (see EXPERIMENTS.md §Perf, GCN cell)."""
+
+    dim_size: int
+    capacity: int  # origination buffer length C0 (max over nodes & rounds)
+    hop_len: list[int]  # L_h for h = 1..dim_size-1 (static, max over rounds)
+    # deposit schedule: at hop h node n takes masked rows into next buffer
+    dep: np.ndarray  # (R, N, dim_size-1, Lmax) bool
+    dep_slot: np.ndarray  # (R, N, dim_size-1, Lmax) int32
+    # local (h=0) copies: obuf_k[src] -> next buffer [dst]
+    lc_src: np.ndarray  # (R, N, CL) int32
+    lc_dst: np.ndarray  # (R, N, CL) int32
+    lc_valid: np.ndarray  # (R, N, CL) bool
+    # reverse-direction relay (bidir plans; empty hop_len_rev otherwise)
+    hop_len_rev: list[int] = field(default_factory=list)
+    dep_rev: np.ndarray | None = None
+    dep_slot_rev: np.ndarray | None = None
+    # direction-split duplication copies within this phase's buffer
+    dup: tuple | None = None  # (dup_src, dup_dst, dup_valid) (R, N, CD)
+    cap_fwd: int = 0  # forward-section length (== capacity when not bidir)
+
+
+@dataclass
+class CommPlan:
+    mesh: TorusMesh
+    part: RoundPartition
+    model: str
+    num_rounds: int
+    # phase-0 originations: rows of the node-local feature table
+    orig_rows: np.ndarray  # (R, N, C0) int32
+    orig_valid: np.ndarray  # (R, N, C0) bool
+    phases: list[PhasePlan]
+    replica_rows: int
+    # local source vertices copied straight into the replica buffer
+    repl_lc_src: np.ndarray  # (R, N, CRL) int32 rows of local feature table
+    repl_lc_dst: np.ndarray  # (R, N, CRL) int32 replica rows
+    repl_lc_valid: np.ndarray  # (R, N, CRL) bool
+    # aggregation edge list (COO into the replica buffer)
+    edge_repl: np.ndarray  # (R, N, E) int32
+    edge_slot: np.ndarray  # (R, N, E) int32  (destination slot in round)
+    edge_w: np.ndarray  # (R, N, E) float32 (0 = invalid)
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.mesh.num_nodes
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+class _Item:
+    """One in-flight payload during planning."""
+
+    __slots__ = ("src_ref", "dests", "H", "children", "slot", "repl_rows",
+                 "dir", "dup_of")
+
+    def __init__(self, src_ref: int, dests):
+        self.src_ref = src_ref  # slot in previous buffer (or feat row, ph 0)
+        self.dests = dests  # list of destination node ids
+        self.H = 0
+        self.children = []  # (hop h, node, child) — child=_Item or ("repl", row)
+        self.slot = -1
+        self.repl_rows: dict[int, int] = {}
+        self.dir = 0  # 0 = +1 ring, 1 = -1 ring (bidir plans)
+        self.dup_of: "_Item | None" = None  # sibling created by a dir split
+
+
+def _expand_groups(mesh, my, k, ndim, groups, it, phase_items, stats, bidir):
+    """Expand one item's coord groups along dim k in its chosen direction."""
+    Dk = mesh.dims[k]
+    H = 0
+    for c, dn_list in groups.items():
+        h = int((c - my[k]) % Dk) if it.dir == 0 else int((my[k] - c) % Dk)
+        H = max(H, h)
+        child_coords = my.copy()
+        child_coords[k] = c
+        child_node = int(mesh.node_id(tuple(child_coords)))
+        if k == ndim - 1:
+            assert len(dn_list) == 1 and dn_list[0] == child_node
+            row = it.repl_rows[child_node]
+            it.children.append((h, child_node, ("repl", row)))
+            stats["deposits"] += 1
+        else:
+            ch = _Item(-1, dn_list)
+            ch.repl_rows = it.repl_rows
+            it.children.append((h, child_node, ch))
+            phase_items[k + 1][child_node].append(ch)
+    it.H = H
+    stats["items"] += 1
+    stats["link_feat_hops"] += H
+
+
+def build_plan(cfg: GCNConfig, graph: Graph, mesh: TorusMesh,
+               part: RoundPartition | None = None,
+               edge_weights: np.ndarray | None = None,
+               bidir: bool = False) -> CommPlan:
+    part = part or make_partition(cfg, mesh.num_nodes)
+    N = mesh.num_nodes
+    R = part.num_rounds
+    model = cfg.message_passing
+    ndim = len(mesh.dims)
+
+    src, dst = graph.src, graph.dst
+    w = edge_weights if edge_weights is not None else np.ones(src.size, np.float32)
+    src_node = part.node_of(src)
+    dst_node = part.node_of(dst)
+    dst_round = np.minimum(part.round_of(dst), R - 1)
+    dst_slot = part.slot_of(dst)
+    src_row = part.local_index(src)
+
+    all_coords = np.stack(mesh.coords(np.arange(N)), axis=1)  # (N, ndim)
+
+    # ---------------- per-round item construction ----------------
+    rounds_phase_items: list[list[list[list[_Item]]]] = []  # [r][k][n] -> items
+    rounds_repl_lc: list[list[list[tuple[int, int]]]] = []  # [r][n] -> (feat_row, repl_row)
+    rounds_edges: list[list[list[tuple[int, int, float]]]] = []  # [r][n] -> (repl_row, slot, w)
+    repl_count = np.zeros((R, N), np.int64)
+    stats = {"items": 0, "deposits": 0, "link_feat_hops": 0, "local_copies": 0}
+
+    # group edges by round
+    order = np.argsort(dst_round, kind="stable")
+    bounds = np.searchsorted(dst_round[order], np.arange(R + 1))
+
+    for r in range(R):
+        sel = order[bounds[r]:bounds[r + 1]]
+        phase_items: list[list[list[_Item]]] = [
+            [[] for _ in range(N)] for _ in range(ndim)]
+        repl_lc: list[list[tuple[int, int]]] = [[] for _ in range(N)]
+        edges: list[list[tuple[int, int, float]]] = [[] for _ in range(N)]
+
+        # replica row allocation per (origin item, dst node) — dict per node
+        def alloc_repl(n: int) -> int:
+            row = int(repl_count[r, n])
+            repl_count[r, n] += 1
+            return row
+
+        # organize edges: (src vertex, dst node) -> dst slots
+        if sel.size:
+            s_, d_, dn_, ds_, w_, sr_, sn_ = (
+                src[sel], dst[sel], dst_node[sel], dst_slot[sel], w[sel],
+                src_row[sel], src_node[sel])
+        else:
+            s_ = d_ = dn_ = ds_ = sn_ = np.zeros(0, np.int32)
+            w_ = np.zeros(0, np.float32)
+            sr_ = np.zeros(0, np.int64)
+
+        if model == "oppe":
+            # one item per cut edge; local edges copy directly
+            for i in range(s_.size):
+                n_s, n_d = int(sn_[i]), int(dn_[i])
+                if n_s == n_d:
+                    row = alloc_repl(n_d)
+                    repl_lc[n_d].append((int(sr_[i]), row))
+                    edges[n_d].append((row, int(ds_[i]), float(w_[i])))
+                else:
+                    it = _Item(int(sr_[i]), [n_d])
+                    phase_items[0][n_s].append(it)
+                    row = alloc_repl(n_d)
+                    it.repl_rows = {n_d: row}
+                    edges[n_d].append((row, int(ds_[i]), float(w_[i])))
+        else:
+            # group by (src vertex, ...) for dedup
+            key = s_.astype(np.int64) * N + dn_
+            gorder = np.argsort(key, kind="stable")
+            ks = key[gorder]
+            # iterate groups of identical (src, dst_node)
+            grp_bounds = np.flatnonzero(
+                np.concatenate([[True], ks[1:] != ks[:-1], [True]]))
+            # per (src vertex): collect (dst node -> [(slot, w)])
+            per_vertex: dict[int, dict[int, list[tuple[int, float]]]] = {}
+            for gi in range(grp_bounds.size - 1):
+                lo, hi = grp_bounds[gi], grp_bounds[gi + 1]
+                idxs = gorder[lo:hi]
+                u = int(s_[idxs[0]])
+                nd = int(dn_[idxs[0]])
+                per_vertex.setdefault(u, {})[nd] = [
+                    (int(ds_[j]), float(w_[j])) for j in idxs]
+            for u, node_map in per_vertex.items():
+                n_s = int(part.node_of(u))
+                u_row = int(part.local_index(u))
+                # local destinations: direct replica copy
+                if n_s in node_map:
+                    row = alloc_repl(n_s)
+                    repl_lc[n_s].append((u_row, row))
+                    for slot, ww in node_map[n_s]:
+                        edges[n_s].append((row, slot, ww))
+                remote = sorted(nd for nd in node_map if nd != n_s)
+                if not remote:
+                    continue
+                repl_rows = {}
+                for nd in remote:
+                    row = alloc_repl(nd)
+                    repl_rows[nd] = row
+                    for slot, ww in node_map[nd]:
+                        edges[nd].append((row, slot, ww))
+                if model == "oppm":
+                    it = _Item(u_row, remote)
+                    it.repl_rows = repl_rows  # type: ignore[attr-defined]
+                    phase_items[0][n_s].append(it)
+                else:  # oppr: unicast per destination node
+                    for nd in remote:
+                        it = _Item(u_row, [nd])
+                        it.repl_rows = {nd: repl_rows[nd]}  # type: ignore[attr-defined]
+                        phase_items[0][n_s].append(it)
+
+        # ---------------- multicast tree expansion per phase ----------------
+        for k in range(ndim):
+            Dk = mesh.dims[k]
+            for n in range(N):
+                my = all_coords[n]
+                items_here = list(phase_items[k][n])  # splits append below
+                for it in items_here:
+                    dest_coords = all_coords[np.asarray(it.dests)]
+                    groups: dict[int, list[int]] = {}
+                    for dnode, dc in zip(it.dests, dest_coords):
+                        groups.setdefault(int(dc[k]), []).append(int(dnode))
+                    if bidir:
+                        fwd = {c: g for c, g in groups.items()
+                               if (c - my[k]) % Dk <= (my[k] - c) % Dk}
+                        bwd = {c: g for c, g in groups.items() if c not in fwd}
+                        if fwd and bwd:
+                            # direction split: sibling item carries the
+                            # backward-going share of the payload
+                            sib = _Item(it.src_ref, sorted(
+                                d for g in bwd.values() for d in g))
+                            sib.repl_rows = it.repl_rows
+                            sib.dir = 1
+                            sib.dup_of = it
+                            phase_items[k][n].append(sib)
+                            _expand_groups(mesh, my, k, ndim, bwd, sib,
+                                           phase_items, stats, bidir)
+                            it.dests = sorted(
+                                d for g in fwd.values() for d in g)
+                            groups = fwd
+                        elif bwd:
+                            it.dir = 1
+                            groups = bwd
+                    _expand_groups(mesh, my, k, ndim, groups, it,
+                                   phase_items, stats, bidir)
+
+        rounds_phase_items.append(phase_items)
+        rounds_repl_lc.append(repl_lc)
+        rounds_edges.append(edges)
+        stats["local_copies"] += sum(len(l) for l in repl_lc)
+
+    # ---------------- flatten into static arrays ----------------
+    # per (round, phase, node): forward items (sorted desc H) occupy the
+    # buffer prefix; backward items the section after the static split
+    # point C_fwd (max forward count) — both sections keep the prefix
+    # property for their own relay direction.
+    cap_fwd = [1] * ndim
+    cap_bwd = [0] * ndim
+    for r in range(R):
+        for k in range(ndim):
+            for n in range(N):
+                items = rounds_phase_items[r][k][n]
+                f = sum(1 for it in items if it.dir == 0)
+                cap_fwd[k] = max(cap_fwd[k], f)
+                cap_bwd[k] = max(cap_bwd[k], len(items) - f)
+    for r in range(R):
+        for k in range(ndim):
+            for n in range(N):
+                items = rounds_phase_items[r][k][n]
+                fwd = sorted((it for it in items if it.dir == 0),
+                             key=lambda it: -it.H)
+                bwd = sorted((it for it in items if it.dir == 1),
+                             key=lambda it: -it.H)
+                for pos, it in enumerate(fwd):
+                    it.slot = pos
+                for pos, it in enumerate(bwd):
+                    it.slot = cap_fwd[k] + pos
+
+    caps = [cap_fwd[k] + cap_bwd[k] for k in range(ndim)]
+    C0 = caps[0]
+    orig_rows = np.zeros((R, N, C0), np.int32)
+    orig_valid = np.zeros((R, N, C0), bool)
+    for r in range(R):
+        for n in range(N):
+            for it in rounds_phase_items[r][0][n]:
+                orig_rows[r, n, it.slot] = it.src_ref
+                orig_valid[r, n, it.slot] = True
+
+    phases: list[PhasePlan] = []
+    for k in range(ndim):
+        Dk = mesh.dims[k]
+
+        def _hop_lens(direction: int) -> list[int]:
+            out = []
+            for h in range(1, Dk):
+                L = 0
+                for r in range(R):
+                    for n in range(N):
+                        L = max(L, sum(
+                            1 for it in rounds_phase_items[r][k][n]
+                            if it.dir == direction and it.H >= h))
+                out.append(L)
+            return out
+
+        hop_len = _hop_lens(0)
+        hop_len_rev = _hop_lens(1) if bidir else []
+        Lmax = max(hop_len) if hop_len else 0
+        Lmax_r = max(hop_len_rev) if hop_len_rev else 0
+        dep = np.zeros((R, N, max(Dk - 1, 1), max(Lmax, 1)), bool)
+        dep_slot = np.zeros((R, N, max(Dk - 1, 1), max(Lmax, 1)), np.int32)
+        dep_r = np.zeros((R, N, max(Dk - 1, 1), max(Lmax_r, 1)), bool)
+        dep_slot_r = np.zeros((R, N, max(Dk - 1, 1), max(Lmax_r, 1)), np.int32)
+        lc: list[list[tuple[int, int]]] = [[] for _ in range(R * N)]
+        for r in range(R):
+            for n in range(N):
+                for it in rounds_phase_items[r][k][n]:
+                    for (h, child_node, child) in it.children:
+                        tgt = (child.slot if not isinstance(child, tuple)
+                               else child[1])
+                        if h == 0:
+                            lc[r * N + n].append((it.slot, tgt))
+                        elif it.dir == 0:
+                            dep[r, child_node, h - 1, it.slot] = True
+                            dep_slot[r, child_node, h - 1, it.slot] = tgt
+                        else:
+                            row = it.slot - cap_fwd[k]
+                            dep_r[r, child_node, h - 1, row] = True
+                            dep_slot_r[r, child_node, h - 1, row] = tgt
+        CL = max(1, max(len(x) for x in lc))
+        lc_src = np.zeros((R, N, CL), np.int32)
+        lc_dst = np.zeros((R, N, CL), np.int32)
+        lc_valid = np.zeros((R, N, CL), bool)
+        for r in range(R):
+            for n in range(N):
+                for j, (s0, d0) in enumerate(lc[r * N + n]):
+                    lc_src[r, n, j] = s0
+                    lc_dst[r, n, j] = d0
+                    lc_valid[r, n, j] = True
+        phases.append(PhasePlan(Dk, caps[k], hop_len, dep, dep_slot,
+                                lc_src, lc_dst, lc_valid,
+                                hop_len_rev=hop_len_rev, dep_rev=dep_r,
+                                dep_slot_rev=dep_slot_r,
+                                cap_fwd=cap_fwd[k]))
+
+    # dup copies: phase k>0 direction-split siblings (obuf_k internal)
+    for k in range(1, ndim):
+        dups: list[list[tuple[int, int]]] = [[] for _ in range(R * N)]
+        for r in range(R):
+            for n in range(N):
+                for it in rounds_phase_items[r][k][n]:
+                    if it.dup_of is not None:
+                        dups[r * N + n].append((it.dup_of.slot, it.slot))
+        CD = max(1, max(len(x) for x in dups))
+        dup_src = np.zeros((R, N, CD), np.int32)
+        dup_dst = np.zeros((R, N, CD), np.int32)
+        dup_valid = np.zeros((R, N, CD), bool)
+        for r in range(R):
+            for n in range(N):
+                for j, (s0, d0) in enumerate(dups[r * N + n]):
+                    dup_src[r, n, j] = s0
+                    dup_dst[r, n, j] = d0
+                    dup_valid[r, n, j] = True
+        phases[k].dup = (dup_src, dup_dst, dup_valid)
+
+    replica_rows = int(repl_count.max()) if repl_count.size else 1
+    CRL = max(1, max(len(l) for r in range(R) for l in rounds_repl_lc[r]))
+    repl_lc_src = np.zeros((R, N, CRL), np.int32)
+    repl_lc_dst = np.zeros((R, N, CRL), np.int32)
+    repl_lc_valid = np.zeros((R, N, CRL), bool)
+    for r in range(R):
+        for n in range(N):
+            for j, (s0, d0) in enumerate(rounds_repl_lc[r][n]):
+                repl_lc_src[r, n, j] = s0
+                repl_lc_dst[r, n, j] = d0
+                repl_lc_valid[r, n, j] = True
+
+    Emax = max(1, max(len(e) for r in range(R) for e in rounds_edges[r]))
+    edge_repl = np.zeros((R, N, Emax), np.int32)
+    edge_slot = np.zeros((R, N, Emax), np.int32)
+    edge_w = np.zeros((R, N, Emax), np.float32)
+    for r in range(R):
+        for n in range(N):
+            for j, (row, slot, ww) in enumerate(rounds_edges[r][n]):
+                edge_repl[r, n, j] = row
+                edge_slot[r, n, j] = slot
+                edge_w[r, n, j] = ww
+
+    # executor byte accounting (per feature element, x4 bytes x feat later)
+    exec_slots = 0
+    for k, ph in enumerate(phases):
+        exec_slots += (sum(ph.hop_len) + sum(ph.hop_len_rev)) * N * R
+    stats["executor_feat_slots"] = exec_slots  # includes SPMD padding
+    stats["replica_rows"] = replica_rows
+    stats["num_rounds"] = R
+
+    return CommPlan(mesh, part, model, R, orig_rows, orig_valid, phases,
+                    max(replica_rows, 1), repl_lc_src, repl_lc_dst,
+                    repl_lc_valid, edge_repl, edge_slot, edge_w, stats)

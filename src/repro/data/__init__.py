@@ -1,0 +1,3 @@
+from . import tokens
+
+__all__ = ["tokens"]

@@ -1,0 +1,3 @@
+from . import compression, fault_tolerance
+
+__all__ = ["compression", "fault_tolerance"]

@@ -1,0 +1,117 @@
+"""Fault tolerance for long-running multi-pod jobs.
+
+Pieces (each independently testable on CPU):
+
+* PreemptionGuard — SIGTERM/SIGINT handler that flips a flag; the train
+  loop checkpoints and exits cleanly at the next step boundary (standard
+  TPU-preemption protocol).
+* HeartbeatMonitor — per-host heartbeat files + stale-host detection; on a
+  real cluster this feeds the controller that shrinks the mesh (elastic
+  restart); here it drives the elastic-resume test.
+* elastic_resume — restore a checkpoint written on any mesh onto the
+  current mesh (delegates to checkpoint.restore's reshard-on-load), then
+  re-lower the step: this is the restart path after a node failure with a
+  different healthy-device count.
+* StragglerPolicy — bounded-staleness data handling: the prefetch queue
+  plus a deadline; a host that misses the deadline reuses its previous
+  batch (documented bounded-staleness semantics) instead of stalling the
+  collective.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._flag = threading.Event()
+        self._prev = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+        return self
+
+    def _handler(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+    def request_stop(self):
+        self._flag.set()
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+@dataclass
+class HeartbeatMonitor:
+    dir: Path
+    host_id: int
+    stale_after_s: float = 30.0
+
+    def __post_init__(self):
+        self.dir = Path(self.dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def beat(self):
+        p = self.dir / f"host_{self.host_id}"
+        p.write_text(str(time.time()))
+
+    def stale_hosts(self) -> list[int]:
+        now = time.time()
+        out = []
+        for p in self.dir.glob("host_*"):
+            try:
+                t = float(p.read_text())
+            except ValueError:
+                t = 0.0
+            if now - t > self.stale_after_s:
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+
+def elastic_resume(ckpt_dir, like_tree, mesh, specs):
+    """Restore latest checkpoint onto the CURRENT mesh (any device count).
+
+    Returns (tree_on_mesh, step). Raises FileNotFoundError when there is
+    nothing to resume from (fresh start)."""
+    from repro.checkpoint import ckpt
+
+    return ckpt.restore(ckpt_dir, like_tree, mesh=mesh, specs=specs)
+
+
+@dataclass
+class StragglerPolicy:
+    """Bounded-staleness batch fetch: never stall the collective on a slow
+    data host; reuse the last batch after ``deadline_s``."""
+
+    deadline_s: float = 5.0
+    _last_batch: dict | None = field(default=None, repr=False)
+    reused: int = 0
+
+    def fetch(self, q) -> tuple[int, dict] | None:
+        import queue as _q
+
+        try:
+            step, batch = q.get(timeout=self.deadline_s)
+            self._last_batch = (step, batch)
+            return step, batch
+        except _q.Empty:
+            if self._last_batch is None:
+                raise TimeoutError("no batch ever produced")
+            self.reused += 1
+            return self._last_batch

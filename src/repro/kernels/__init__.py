@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle (``ref.py``) and a jit'd platform-dispatching wrapper (``ops.py``).
+
+* flash_attention — the LM prefill/train attention hot-spot
+* spmm            — GCN aggregation as blocked indicator matmuls (MXU)
+* matmul          — fused combination matmul (bias + activation)
+"""
+from . import flash_attention, matmul, spmm
+
+__all__ = ["flash_attention", "matmul", "spmm"]

@@ -1,0 +1,129 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid: (batch*kv_heads, num_q_blocks, num_kv_blocks) — the kv dimension is
+innermost so the online-softmax state for one q block lives in VMEM
+scratch across kv iterations (canonical TPU flash pattern). GQA folds the
+q-head group into the q block rows so the MXU sees (G*bq, D) x (D, bk)
+matmuls.
+
+Causal/sliding-window masking is applied in-kernel; fully-masked kv blocks
+are skipped by the index-map-free @pl.when guard (they still iterate but
+do no FLOPs on the MXU path — the XLA fallback in repro.nn.attention skips
+them structurally instead; both are validated against ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref, *,
+               scale, causal, window, block_q, block_k, q_offset, seq_kv):
+    bh, qi, ki = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]  # (G*bq, D)
+    k = k_ref[0]  # (bk, D)
+    v = v_ref[0]
+    G_bq, D = q.shape
+    bk = k.shape[0]
+    G = G_bq // block_q
+
+    s = jax.lax.dot_general(q.astype(jnp.float32), k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ()))) * scale  # (G*bq, bk)
+
+    # absolute row/col positions: q rows repeat per group member
+    row_in_blk = jax.lax.broadcasted_iota(jnp.int32, (G_bq, bk), 0) % block_q
+    rows = q_offset + qi * block_q + row_in_blk
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (G_bq, bk), 1)
+    mask = cols < seq_kv
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v).astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, scale: float, causal: bool = True,
+                        window: int = 0, q_offset: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """q: (B, Hkv, G, Sq, D); k, v: (B, Hkv, Skv, D).
+
+    Returns (out (B, Hkv, G, Sq, D), lse (B, Hkv, G, Sq))."""
+    B, Hkv, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+
+    # fold (B, Hkv) and (G, bq): q view (B*Hkv, nq, G*bq, D)
+    qf = q.transpose(0, 1, 3, 2, 4).reshape(B * Hkv, Sq, G, D)
+    # block rows: group-major within a q block -> (G*bq, D)
+    qf = qf.reshape(B * Hkv, nq, block_q, G, D).transpose(0, 1, 3, 2, 4) \
+        .reshape(B * Hkv, nq, G * block_q, D)
+    kf = k.reshape(B * Hkv, Skv, D)
+    vf = v.reshape(B * Hkv, Skv, D)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset, seq_kv=Skv)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G * block_q, D), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G * block_q, D), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, G * block_q), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, nq, G * block_q, D), q.dtype),
+            jax.ShapeDtypeStruct((B * Hkv, nq, G * block_q), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, D), jnp.float32),
+            pltpu.VMEM((G * block_q,), jnp.float32),
+            pltpu.VMEM((G * block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    # unfold back to (B, Hkv, G, Sq, D)
+    out = out.reshape(B * Hkv, nq, G, block_q, D).transpose(0, 1, 3, 2, 4) \
+        .reshape(B, Hkv, Sq, G, D).transpose(0, 1, 3, 2, 4)
+    lse = lse.reshape(B * Hkv, nq, G, block_q).transpose(0, 1, 3, 2) \
+        .reshape(B, Hkv, Sq, G).transpose(0, 1, 3, 2)
+    return out, lse

@@ -1,0 +1,61 @@
+"""Jit'd wrapper for the flash-attention kernel with platform dispatch.
+
+``flash_attention`` takes the model-layout tensors used by
+``repro.nn.attention`` (q: (B, Sq, Hkv, G, D); k/v: (B, Skv, Hkv, D)),
+runs the Pallas kernel on TPU (interpret-mode elsewhere), and provides a
+custom VJP whose backward is the blockwise XLA flash backward from
+``repro.nn.attention`` (identical math; kernelizing the backward is a
+listed follow-up, not a correctness gap).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, scale: float, causal: bool = True,
+                    window: int = 0, q_offset: int = 0):
+    """q: (B, Sq, Hkv, G, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hkv, G, D)."""
+    out, _ = _fwd_impl(q, k, v, scale, causal, window, q_offset)
+    return out
+
+
+def _fwd_impl(q, k, v, scale, causal, window, q_offset):
+    # kernel layout: (B, Hkv, G, Sq, D) / (B, Hkv, Skv, D)
+    qk = q.transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    out, lse = _k.flash_attention_fwd(
+        qk, kk, vk, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, interpret=_use_interpret())
+    return out.transpose(0, 3, 1, 2, 4), lse
+
+
+def _fa_fwd(q, k, v, scale, causal, window, q_offset):
+    out, lse = _fwd_impl(q, k, v, scale, causal, window, q_offset)
+    # lse layout from kernel: (B, Hkv, G, Sq) -> attention.py's (B,Sq,Hkv,G)
+    lse_m = lse.transpose(0, 3, 1, 2)
+    return out, (q, k, v, out, lse_m)
+
+
+def _fa_bwd(scale, causal, window, q_offset, res, dout):
+    from repro.nn import attention as xattn
+
+    q, k, v, out, lse = res
+    Sq, Skv = q.shape[1], k.shape[1]
+    q_chunk = min(512, Sq)
+    kv_chunk = min(512, Skv)
+    return xattn._bw_attn_bwd(scale, causal, window, q_chunk, kv_chunk,
+                              q_offset, (q, k, v, out, lse), dout)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

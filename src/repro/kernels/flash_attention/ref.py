@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (naive masked softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  window: int = 0, q_offset: int = 0):
+    """q: (B, Hkv, G, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hkv, G, Sq, D).
+
+    Materializes the full score matrix — oracle only."""
+    B, Hkv, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rows = q_offset + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

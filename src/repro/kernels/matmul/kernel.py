@@ -1,0 +1,68 @@
+"""Pallas TPU fused matmul kernel: Y = act(X @ W + b).
+
+Used for the GCN Combination phase (the paper's systolic-array MLP) and as
+the building block the LM stack's hot matmuls map onto on real TPUs.
+Canonical tiling: grid (M/bm, N/bn, K/bk), K innermost, f32 VMEM
+accumulator, activation fused into the final K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...], w_ref[...],
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif act == "gelu":
+            y = jax.nn.gelu(y)
+        elif act == "silu":
+            y = y * jax.nn.sigmoid(y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def matmul_fused(x, w, b=None, *, act: str = "none", block_m: int = 128,
+                 block_n: int = 128, block_k: int = 512,
+                 interpret: bool = False):
+    """x: (M, K); w: (K, N); b: (N,) -> act(x @ w + b) (M, N)."""
+    M, K = x.shape
+    _, N = w.shape
+    if b is None:
+        b = jnp.zeros((N,), x.dtype)
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+
+    kernel = functools.partial(_mm_kernel, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, N // block_n, K // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_n,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the fused matmul kernel with platform dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.matmul import kernel as _k
+from repro.kernels.matmul import ref as _ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("act", "impl"))
+def matmul_fused(x, w, b=None, *, act: str = "none", impl: str = "auto"):
+    if impl == "xla":
+        return _ref.matmul_fused_ref(x, w, b, act=act)
+    return _k.matmul_fused(x, w, b, act=act, interpret=_use_interpret())

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_fused_ref(x, w, b=None, *, act: str = "none"):
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "silu":
+        y = y * jax.nn.sigmoid(y)
+    return y.astype(x.dtype)

@@ -1,0 +1,56 @@
+"""Jit'd wrapper + layout builder for the aggregation SpMM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spmm import kernel as _k
+from repro.kernels.spmm import ref as _ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def build_ell_layout(edge_repl: np.ndarray, edge_slot: np.ndarray,
+                     edge_w: np.ndarray, num_slots: int,
+                     block_slots: int = 128, edge_align: int = 512):
+    """Host-side: sort COO edges by slot block and pad per block.
+
+    Returns (seg (nb, Eb), gather_rows (nb, Eb), weights (nb, Eb)) where
+    seg is the within-block slot index (-1 pad)."""
+    nb = max(1, -(-num_slots // block_slots))
+    blk = edge_slot // block_slots
+    order = np.argsort(blk, kind="stable")
+    counts = np.bincount(blk, minlength=nb)
+    Eb = max(edge_align, -(-int(counts.max(initial=1)) // edge_align) * edge_align)
+    seg = np.full((nb, Eb), -1, np.int32)
+    rows = np.zeros((nb, Eb), np.int32)
+    w = np.zeros((nb, Eb), np.float32)
+    starts = np.zeros(nb + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for b in range(nb):
+        sel = order[starts[b]:starts[b + 1]]
+        seg[b, :sel.size] = edge_slot[sel] - b * block_slots
+        rows[b, :sel.size] = edge_repl[sel]
+        w[b, :sel.size] = edge_w[sel]
+    return seg, rows, w
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "block_slots",
+                                             "impl"))
+def aggregate(replica, seg, rows, weights, *, num_slots: int,
+              block_slots: int = 128, impl: str = "auto"):
+    """replica: (R, F). Returns (num_slots, F) aggregated accumulators."""
+    nb, Eb = seg.shape
+    msgs = replica[rows.reshape(-1)].reshape(nb, Eb, -1)
+    msgs = msgs * weights[..., None].astype(msgs.dtype)
+    if impl == "xla":
+        acc = _ref.spmm_ell_ref(seg, msgs, block_slots)
+    else:
+        acc = _k.spmm_ell(seg, msgs, block_slots=block_slots,
+                          interpret=_use_interpret())
+    return acc.reshape(nb * block_slots, -1)[:num_slots]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the aggregation SpMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_coo_ref(replica, edge_repl, edge_slot, edge_w, num_slots: int):
+    """Weighted COO segment-sum: acc[slot] += w * replica[row]."""
+    msgs = replica[edge_repl] * edge_w[:, None].astype(replica.dtype)
+    acc = jnp.zeros((num_slots, replica.shape[-1]), replica.dtype)
+    return acc.at[edge_slot].add(msgs)
+
+
+def spmm_ell_ref(seg, messages, block_slots: int):
+    """Blocked-ELL oracle matching kernel.spmm_ell."""
+    nb, Eb, F = messages.shape
+    acc = jnp.zeros((nb, block_slots, F), messages.dtype)
+    b_idx = jnp.repeat(jnp.arange(nb), Eb)
+    s_idx = seg.reshape(-1)
+    valid = s_idx >= 0
+    acc = acc.at[b_idx, jnp.maximum(s_idx, 0)].add(
+        jnp.where(valid[:, None], messages.reshape(-1, F), 0))
+    return acc

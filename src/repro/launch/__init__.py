@@ -1,0 +1,2 @@
+# NOTE: repro.launch.dryrun must be executed as __main__ (it sets XLA_FLAGS
+# before importing jax); import the submodules you need directly.

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, prove the sharding is coherent, and save
+memory/cost/collective artifacts for the roofline analysis.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init) — hence the two lines above.
+
+Usage:
+  python -m repro.launch.dryrun --sweep                 # all cells, both meshes
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --gcn                   # GCN workload cells
+Artifacts land in artifacts/dryrun/<cell>.json (+ .hlo.gz with --save-hlo);
+completed cells are skipped unless --force.
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from collections import Counter
+from pathlib import Path
+
+import jax
+
+ART = Path(os.environ.get("REPRO_ARTIFACTS", "artifacts")) / "dryrun"
+
+
+def _mesh(kind: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(kind == "multipod"))
+
+
+def cell_name(arch: str, shape: str, mesh_kind: str) -> str:
+    return f"{arch}__{shape}__{mesh_kind}"
+
+
+def collective_histogram(hlo: str) -> dict:
+    ops = re.findall(
+        r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)\b", hlo)
+    return dict(Counter(ops))
+
+
+def run_lm_cell(arch: str, shape_name: str, mesh_kind: str,
+                save_hlo: bool = True, seq_par: bool = True,
+                overrides: dict | None = None,
+                rule_overrides: dict | None = None) -> dict:
+    import dataclasses
+
+    from repro.config import get_lm_config, get_shape
+    from repro.launch.steps import build_cell
+    from jax.sharding import NamedSharding
+
+    cfg = get_lm_config(arch)
+    if overrides:
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(v) if cur is not None else v
+        cfg = dataclasses.replace(cfg, **typed)
+    shape = get_shape(shape_name)
+    mesh = _mesh(mesh_kind)
+    cell = build_cell(cfg, shape, mesh, sequence_parallel=seq_par,
+                      rule_overrides=rule_overrides)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    in_sh = jax.tree.map(ns, cell.in_shardings,
+                         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out_sh = jax.tree.map(ns, cell.out_shardings,
+                          is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)) \
+        if cell.out_shardings is not None else None
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(cell.step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind,
+        "num_devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "cost": {k: ca.get(k) for k in ("flops", "bytes accessed")},
+        "collectives": collective_histogram(hlo),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    return rec, hlo
+
+
+def run_gcn_cell(arch: str, mesh_kind: str, save_hlo: bool = True) -> dict:
+    from repro.launch.gcn_dryrun import lower_gcn_cell
+
+    return lower_gcn_cell(arch, mesh_kind, _mesh(mesh_kind))
+
+
+def save_cell(name: str, rec: dict, hlo: str | None, save_hlo: bool):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    if hlo is not None and save_hlo:
+        with gzip.open(ART / f"{name}.hlo.gz", "wt") as f:
+            f.write(hlo)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("pod", "multipod"), default="pod")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--gcn", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--no-seq-par", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for experiment variants")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override k=v (perf experiments)")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule override logical=axis")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+    rule_overrides = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rule_overrides[k] = None if v in ("none", "None") else \
+            (tuple(v.split("+")) if "+" in v else v)
+
+    from repro.config import lm_cells, list_gcn_archs
+
+    jobs: list[tuple[str, str, str]] = []
+    if args.sweep:
+        for mesh_kind in ("pod", "multipod"):
+            for arch, shape, status in lm_cells(include_skipped=True):
+                if status == "run":
+                    jobs.append((arch, shape, mesh_kind))
+        if args.gcn:
+            for mesh_kind in ("pod", "multipod"):
+                for arch in ("gcn-gcn-rd", "gcn-gin-or", "gcn-sage-lj",
+                             "gcn-gcn-rm23"):
+                    jobs.append((arch, "graph", mesh_kind))
+    elif args.gcn:
+        archs = [args.arch] if args.arch else ["gcn-gcn-rd", "gcn-gin-or",
+                                               "gcn-sage-lj", "gcn-gcn-rm23"]
+        jobs = [(a, "graph", args.mesh) for a in archs]
+    else:
+        assert args.arch and args.shape
+        jobs = [(args.arch, args.shape, args.mesh)]
+
+    results = []
+    for arch, shape, mesh_kind in jobs:
+        name = cell_name(arch, shape, mesh_kind) + args.tag
+        if (ART / f"{name}.json").exists() and not args.force:
+            print(f"[skip] {name}")
+            continue
+        print(f"[run ] {name} ...", flush=True)
+        try:
+            if shape == "graph":
+                rec, hlo = run_gcn_cell(arch, mesh_kind)
+            else:
+                rec, hlo = run_lm_cell(arch, shape, mesh_kind,
+                                       seq_par=not args.no_seq_par,
+                                       overrides=overrides,
+                                       rule_overrides=rule_overrides)
+            save_cell(name, rec, hlo, save_hlo=not args.no_hlo)
+            m = rec["memory"]
+            print(f"[ ok ] {name}: compile={rec['compile_s']}s "
+                  f"args={m['argument_bytes']/2**30:.2f}GiB "
+                  f"temp={m['temp_bytes']/2**30:.2f}GiB "
+                  f"colls={rec['collectives']}", flush=True)
+            results.append((name, "ok"))
+        except Exception as e:
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+            ART.mkdir(parents=True, exist_ok=True)
+            (ART / f"{name}.fail.txt").write_text(traceback.format_exc())
+            results.append((name, "fail"))
+    ok = sum(1 for _, s in results if s == "ok")
+    print(f"done: {ok}/{len(results)} newly passed")
+
+
+if __name__ == "__main__":
+    main()

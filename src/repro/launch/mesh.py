@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing never touches JAX
+device state. The single-pod mesh is a 16x16 slice (256 chips); multi-pod
+adds a "pod" axis (2 pods = 512 chips). The GCN runtime treats the same
+meshes as tori: ("data", "model") = (X, Y) rings, with "pod" a third ring.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (host platform devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

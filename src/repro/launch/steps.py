@@ -1,0 +1,218 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+These are shared by the real launchers (train.py / serve.py) and the
+compile-only multi-pod dry-run: the same step function is either executed
+on concrete arrays or lowered against the ShapeDtypeStructs returned by
+``input_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import LMConfig, ShapeConfig
+from repro.models import lm
+from repro.nn import transformer as tfm
+from repro.sharding import ShardingRules, decode_rules, prefill_rules, train_rules
+from repro.train import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# Rules per (cfg, shape, mesh)
+# ---------------------------------------------------------------------------
+
+
+def rules_for(cfg: LMConfig, shape: ShapeConfig, mesh,
+              sequence_parallel: bool = True) -> ShardingRules:
+    multi_pod = "pod" in mesh.axis_names
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.kind == "train":
+        r = train_rules(multi_pod, sequence_parallel=sequence_parallel)
+    elif shape.kind == "prefill":
+        r = prefill_rules(multi_pod)
+    else:
+        r = decode_rules(multi_pod)
+        if cfg.num_kv_heads >= sizes.get("model", 1) and cfg.uses_attention:
+            # enough KV heads to shard them instead of the cache length
+            r = r.with_(act_kv_seq=None, act_heads="model")
+    if shape.global_batch < dp:
+        # e.g. long_500k (batch 1): nothing to shard on the batch axis
+        r = r.with_(act_batch=None)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: LMConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        S_text = S - (cfg.frontend_seq_len if cfg.frontend == "patch_stub" else 0)
+        b = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+        if cfg.is_encdec:
+            b["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq_len, cfg.d_model), jnp.bfloat16)
+        if cfg.frontend == "patch_stub":
+            b["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq_len, cfg.d_model), jnp.bfloat16)
+        return b
+    if shape.kind == "prefill":
+        S_text = S - (cfg.frontend_seq_len if cfg.frontend == "patch_stub" else 0)
+        b = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+        if cfg.is_encdec:
+            b["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq_len, cfg.d_model), jnp.bfloat16)
+        if cfg.frontend == "patch_stub":
+            b["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq_len, cfg.d_model), jnp.bfloat16)
+        return b
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_specs(cfg: LMConfig, shape: ShapeConfig, rules: ShardingRules):
+    bspec = rules.spec("act_batch")
+    # every input is sharded on its leading (batch) dim only
+    return {k: bspec for k in batch_struct(cfg, shape)}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: LMConfig, rules: ShardingRules | None,
+                    opt_cfg: opt.AdamWConfig = opt.AdamWConfig(),
+                    impl: str = "auto"):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return lm.lm_loss(cfg, p, batch, rules=rules, impl=impl)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt2, om = opt.apply_updates(opt_cfg, params, grads, opt_state)
+        return params2, opt2, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, rules: ShardingRules | None,
+                      max_len: int, impl: str = "auto"):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        memory = None
+        if cfg.is_encdec:
+            memory = lm.encode(cfg, params, batch["frames"], rules=rules,
+                               remat=False)
+        state = lm.init_decode_state(cfg, B, max_len, memory=memory)
+        last_h, state = lm.prefill(cfg, params, tokens, state, rules=rules,
+                                   impl=impl,
+                                   extra_embeds=batch.get("patches"))
+        W = lm.lm_head_matrix(params.get("head", {}), params["embed"], cfg)
+        logits = (last_h @ W.astype(last_h.dtype)).astype(jnp.float32)
+        return logits, state
+
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig, rules: ShardingRules | None,
+                     impl: str = "auto"):
+    def decode_step(params, state, batch):
+        return lm.decode_step(cfg, params, batch["token"], state,
+                              rules=rules, impl=impl)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs + shardings for the dry-run
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CellSpec:
+    step: Callable  # the function to lower
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple  # PartitionSpec pytrees
+    out_shardings: Any  # PartitionSpec pytrees or None
+
+
+def decode_state_struct(cfg: LMConfig, batch: int, max_len: int):
+    segs = tfm.segment_layout(cfg)
+    caches = tfm.stack_abstract_cache(cfg, segs, batch, max_len)
+    memory = None
+    if cfg.is_encdec:
+        memory = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return lm.DecodeState(caches=caches,
+                          pos=jax.ShapeDtypeStruct((), jnp.int32),
+                          memory=memory)
+
+
+def decode_state_specs(cfg: LMConfig, rules: ShardingRules):
+    segs = tfm.segment_layout(cfg)
+    cspecs = tfm.stack_cache_specs(cfg, segs, rules)
+    mem = rules.spec("act_batch") if cfg.is_encdec else None
+    return lm.DecodeState(caches=cspecs, pos=P(), memory=mem)
+
+
+def cache_len_for(cfg: LMConfig, shape: ShapeConfig) -> int:
+    if cfg.sliding_window > 0:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def build_cell(cfg: LMConfig, shape: ShapeConfig, mesh,
+               sequence_parallel: bool = True, impl: str = "auto",
+               opt_cfg: opt.AdamWConfig = opt.AdamWConfig(),
+               rule_overrides: dict | None = None) -> CellSpec:
+    from repro.sharding.rules import sanitize_tree
+
+    rules = rules_for(cfg, shape, mesh, sequence_parallel)
+    if rule_overrides:
+        rules = rules.with_(**rule_overrides)
+    params_abs = lm.lm_abstract(cfg)
+    params_spec = sanitize_tree(params_abs, lm.lm_specs(cfg, rules), mesh)
+    b_abs = batch_struct(cfg, shape)
+    b_spec = sanitize_tree(b_abs, batch_specs(cfg, shape, rules), mesh)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, rules, opt_cfg, impl)
+        opt_abs = opt.abstract_state(params_abs)
+        opt_spec = sanitize_tree(opt_abs, opt.state_specs(params_spec), mesh)
+        return CellSpec(step, (params_abs, opt_abs, b_abs),
+                        (params_spec, opt_spec, b_spec),
+                        (params_spec, opt_spec, None))
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, rules, max_len=shape.seq_len, impl=impl)
+        st_abs = decode_state_struct(cfg, shape.global_batch,
+                                     cache_len_for(cfg, shape))
+        st_spec = sanitize_tree(st_abs, decode_state_specs(cfg, rules), mesh)
+        logit_spec = sanitize_spec_for_logits(cfg, shape, rules, mesh)
+        return CellSpec(step, (params_abs, b_abs), (params_spec, b_spec),
+                        (logit_spec, st_spec))
+    # decode
+    step = make_decode_step(cfg, rules, impl)
+    st_abs = decode_state_struct(cfg, shape.global_batch,
+                                 cache_len_for(cfg, shape))
+    st_spec = sanitize_tree(st_abs, decode_state_specs(cfg, rules), mesh)
+    logit_spec = sanitize_spec_for_logits(cfg, shape, rules, mesh)
+    return CellSpec(step, (params_abs, st_abs, b_abs),
+                    (params_spec, st_spec, b_spec),
+                    (logit_spec, st_spec))
+
+
+def sanitize_spec_for_logits(cfg, shape, rules, mesh):
+    from repro.sharding.rules import sanitize_spec
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sanitize_spec(rules.spec("act_batch", "act_vocab"),
+                         (shape.global_batch, cfg.vocab_size), sizes)

@@ -1,0 +1,43 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch glm4-9b \
+        --variant smoke --steps 50
+
+On a real TPU pod this launcher is invoked once per host (jax.distributed
+initializes from the TPU environment); in this container it runs the same
+code single-process. ``--variant full`` requires pod hardware; the
+compile-only proof for full configs is ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke", choices=("smoke", "full"))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.config import get_lm_config
+    from repro.train import optimizer as optlib
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_lm_config(args.arch, args.variant)
+    print(f"[launch] {cfg.name}: {cfg.param_count() / 1e9:.2f}B params")
+    tcfg = TrainConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir,
+        opt=optlib.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                               total_steps=args.steps))
+    out = train(cfg, tcfg, resume=not args.no_resume)
+    print(f"[launch] final loss "
+          f"{out['history'][-1]['loss'] if out['history'] else float('nan')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import lm
+
+__all__ = ["lm"]

@@ -1,0 +1,233 @@
+"""Top-level language models: parameter construction, forward, chunked
+vocab-parallel loss, prefill and decode steps — for all 10 assigned
+architectures (dense / MoE / SSM / hybrid / enc-dec / VLM-backbone).
+
+All entry points work both with concrete arrays (smoke tests, examples)
+and with ``jax.eval_shape``-style abstract values (the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.nn import transformer as tfm
+from repro.nn.layers import (
+    embedding_apply,
+    embedding_defs,
+    lm_head_defs,
+    lm_head_matrix,
+    norm_apply,
+    norm_defs,
+    sinusoidal_positions,
+)
+from repro.nn.module import abstract_tree, init_tree, shard, spec_tree
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+
+def lm_defs(cfg: LMConfig):
+    seg_defs, segs = tfm.stack_defs(cfg, cross=cfg.is_encdec)
+    defs: dict[str, Any] = {
+        "embed": embedding_defs(cfg),
+        "segments": seg_defs,
+        "final_norm": norm_defs(cfg),
+        "head": lm_head_defs(cfg),
+    }
+    if any(b.shared_attn for b in cfg.blocks):
+        defs["shared_attn"] = tfm.shared_attn_defs(cfg)
+    if cfg.is_encdec:
+        enc_cfg = _encoder_cfg(cfg)
+        enc_segs, enc_layout = tfm.stack_defs(enc_cfg)
+        defs["encoder"] = {"segments": enc_segs, "final_norm": norm_defs(cfg)}
+    return defs, segs
+
+
+def _encoder_cfg(cfg: LMConfig) -> LMConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, blocks=(), encoder_layers=0,
+        default_mixer="gqa", default_ffn="dense", frontend="none")
+
+
+def lm_init(cfg: LMConfig, key: jax.Array):
+    defs, _ = lm_defs(cfg)
+    return init_tree(defs, key)
+
+
+def lm_abstract(cfg: LMConfig):
+    defs, _ = lm_defs(cfg)
+    return abstract_tree(defs)
+
+
+def lm_specs(cfg: LMConfig, rules):
+    defs, _ = lm_defs(cfg)
+    return spec_tree(defs, rules)
+
+
+def lm_segments(cfg: LMConfig):
+    return tfm.segment_layout(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward (hidden states)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: LMConfig, params, frames, rules=None, remat=True):
+    """Whisper encoder over precomputed frame embeddings (audio stub)."""
+    enc_cfg = _encoder_cfg(cfg)
+    S = frames.shape[1]
+    x = frames + sinusoidal_positions(S, cfg.d_model)[None].astype(frames.dtype)
+    segs = tfm.segment_layout(enc_cfg)
+    x, _, _ = tfm.stack_apply(enc_cfg, segs, params["encoder"]["segments"], x,
+                              positions=jnp.arange(S)[None], rules=rules,
+                              causal=False, remat=remat)
+    return norm_apply(params["encoder"]["final_norm"], x)
+
+
+def forward_hidden(cfg: LMConfig, params, tokens, *, extra_embeds=None,
+                   memory=None, rules=None, impl="auto", remat=True,
+                   caches=None, pos=None, positions=None):
+    """tokens: (B, S_text) -> hidden (B, S, D), new_caches, aux.
+
+    extra_embeds: (B, S_front, D) precomputed modality embeddings (VLM/audio
+    stubs) prepended to the token embeddings.
+    """
+    segs = tfm.segment_layout(cfg)
+    x = embedding_apply(params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        start = 0 if pos is None else pos
+        positions = (jnp.arange(S, dtype=jnp.int32) + start)[None]
+    if cfg.is_encdec and cfg.rope_theta <= 0:
+        # whisper: learned-position stand-in = sinusoidal added to embeddings,
+        # indexed by absolute position (prefill: 0..S-1; decode: pos)
+        table_len = 65536
+        sp = sinusoidal_positions(table_len, cfg.d_model).astype(x.dtype)
+        idx = jnp.minimum(positions, table_len - 1)
+        x = x + jnp.take(sp, idx, axis=0)  # (1,S,D) or (B,1,D), broadcasts
+    if rules is not None:
+        x = shard(x, rules, "act_batch", "act_seq", "act_embed")
+
+    shared = params.get("shared_attn")
+    x, new_caches, aux = tfm.stack_apply(
+        cfg, segs, params["segments"], x, positions=positions, rules=rules,
+        caches=caches, pos=pos, shared_params=shared, impl=impl, remat=remat,
+        memory=memory)
+    x = norm_apply(params["final_norm"], x)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Chunked vocab-parallel cross entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(cfg: LMConfig, params, hidden, labels, *, chunk: int = 512,
+                 rules=None):
+    """Never materializes (B, S, V) logits: scans sequence chunks.
+
+    labels: (B, S) int32, -1 = masked (e.g. image positions in VLM).
+    Returns (mean_nll, token_count).
+    """
+    W = lm_head_matrix(params.get("head", {}), params["embed"], cfg)
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    h = hidden.reshape(B, nc, chunk, D)
+    y = labels.reshape(B, nc, chunk)
+
+    def body(carry, inp):
+        nll_sum, cnt = carry
+        hc, yc = inp  # (B, chunk, D), (B, chunk)
+        logits = (hc @ W.astype(hc.dtype)).astype(jnp.float32)  # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(yc, 0), cfg.vocab_size,
+                                dtype=logits.dtype)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        w = (yc >= 0).astype(jnp.float32)
+        nll_sum = nll_sum + jnp.sum((logz - ll) * w)
+        cnt = cnt + jnp.sum(w)
+        return (nll_sum, cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(h, 1, 0), jnp.moveaxis(y, 1, 0)))
+    return nll / jnp.maximum(cnt, 1.0), cnt
+
+
+# ---------------------------------------------------------------------------
+# Steps: train loss, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: LMConfig, params, batch, *, rules=None, impl="auto",
+            remat=True, aux_weight: float = 0.01):
+    """batch: dict(tokens (B,S), labels (B,S) [, frames/patches (B,F,D)])."""
+    memory = None
+    extra = None
+    if cfg.is_encdec:
+        memory = encode(cfg, params, batch["frames"], rules=rules, remat=remat)
+    elif cfg.frontend == "patch_stub":
+        extra = batch["patches"]
+
+    hidden, _, aux = forward_hidden(cfg, params, batch["tokens"],
+                                    extra_embeds=extra, memory=memory,
+                                    rules=rules, impl=impl, remat=remat)
+    labels = batch["labels"]
+    if extra is not None:  # image positions carry no next-token loss
+        pad = jnp.full(extra.shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    nll, cnt = chunked_xent(cfg, params, hidden, labels, rules=rules)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux, "tokens": cnt}
+
+
+class DecodeState(NamedTuple):
+    caches: Any
+    pos: jax.Array  # () int32 — tokens already cached
+    memory: Any = None  # enc-dec cross memory
+
+
+def init_decode_state(cfg: LMConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, memory=None):
+    segs = tfm.segment_layout(cfg)
+    caches = tfm.stack_cache(cfg, segs, batch, max_len, dtype)
+    return DecodeState(caches=caches, pos=jnp.zeros((), jnp.int32),
+                       memory=memory)
+
+
+def prefill(cfg: LMConfig, params, tokens, state: DecodeState, *, rules=None,
+            impl="auto", extra_embeds=None):
+    """Run the prompt through the stack, filling caches. Returns
+    (last_hidden (B, D), new state)."""
+    hidden, caches, _ = forward_hidden(
+        cfg, params, tokens, rules=rules, impl=impl, remat=False,
+        caches=state.caches, pos=state.pos, memory=state.memory,
+        extra_embeds=extra_embeds)
+    new_len = tokens.shape[1] + (extra_embeds.shape[1] if extra_embeds is not None else 0)
+    return hidden[:, -1], DecodeState(caches, state.pos + new_len,
+                                      state.memory)
+
+
+def decode_step(cfg: LMConfig, params, token, state: DecodeState, *,
+                rules=None, impl="auto"):
+    """token: (B, 1) -> (logits (B, V), new state). One-token serve step."""
+    hidden, caches, _ = forward_hidden(
+        cfg, params, token, rules=rules, impl=impl, remat=False,
+        caches=state.caches, pos=state.pos, memory=state.memory)
+    W = lm_head_matrix(params.get("head", {}), params["embed"], cfg)
+    logits = (hidden[:, -1] @ W.astype(hidden.dtype)).astype(jnp.float32)
+    if rules is not None:
+        logits = shard(logits, rules, "act_batch", "act_vocab")
+    return logits, DecodeState(caches, state.pos + 1, state.memory)

@@ -1,0 +1,12 @@
+from . import attention, layers, linear_attn, mixers, module, moe, ssm, transformer
+
+__all__ = [
+    "attention",
+    "layers",
+    "linear_attn",
+    "mixers",
+    "module",
+    "moe",
+    "ssm",
+    "transformer",
+]

@@ -1,0 +1,280 @@
+"""Attention: blockwise (flash-style) causal attention with a custom
+blockwise VJP, decode attention over KV caches, and the GQA wrapper.
+
+The blockwise implementation is the portable XLA path (used by CPU tests
+and the compile-only dry-run); on real TPUs ``repro.kernels.flash_attention``
+provides the Pallas kernel with identical semantics. Both share the oracle
+in ``repro.kernels.flash_attention.ref``.
+
+Causality is exploited *structurally*: we scan over the statically-known
+list of (q-block, kv-block) pairs that intersect the causal/sliding-window
+band, so compiled FLOPs ~ S^2/2 (matching a real flash kernel), not S^2.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LMConfig
+from repro.nn.module import fan_in_init, param
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Static block-pair schedule
+# ---------------------------------------------------------------------------
+
+
+def _block_pairs(n_q: int, n_kv: int, q_chunk: int, kv_chunk: int,
+                 causal: bool, window: int, q_offset: int = 0):
+    """Statically enumerate (i, j) block pairs intersecting the mask band.
+
+    q block i covers absolute rows [q_offset + i*q_chunk, +q_chunk);
+    kv block j covers cols [j*kv_chunk, +kv_chunk). Keep pair if some
+    (r, c) with c <= r and (window == 0 or r - c < window) intersects.
+    """
+    pairs = []
+    for i in range(n_q):
+        r_lo = q_offset + i * q_chunk
+        r_hi = r_lo + q_chunk - 1
+        for j in range(n_kv):
+            c_lo = j * kv_chunk
+            c_hi = c_lo + kv_chunk - 1
+            if causal and c_lo > r_hi:
+                continue  # fully above diagonal
+            if window > 0 and c_hi < r_lo - window + 1:
+                continue  # fully outside the sliding window
+            pairs.append((i, j))
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def _band_mask(r0, c0, q_chunk, kv_chunk, causal, window):
+    rows = r0 + jnp.arange(q_chunk)[:, None]
+    cols = c0 + jnp.arange(kv_chunk)[None, :]
+    m = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+    if causal:
+        m &= cols <= rows
+    if window > 0:
+        m &= cols > rows - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def blockwise_attention(q, k, v, scale: float, causal: bool, window: int,
+                        q_chunk: int, kv_chunk: int, q_offset: int = 0):
+    """q: (B, Sq, Hkv, G, D); k, v: (B, Skv, Hkv, D). Returns (B,Sq,Hkv,G,D)."""
+    out, _ = _bw_attn_fwd_impl(q, k, v, scale, causal, window, q_chunk,
+                               kv_chunk, q_offset)
+    return out
+
+
+def _bw_attn_fwd_impl(q, k, v, scale, causal, window, q_chunk, kv_chunk,
+                      q_offset):
+    with jax.named_scope("blockwise_attention"):
+        return _bw_attn_fwd_scoped(q, k, v, scale, causal, window, q_chunk,
+                                   kv_chunk, q_offset)
+
+
+def _bw_attn_fwd_scoped(q, k, v, scale, causal, window, q_chunk, kv_chunk,
+                        q_offset):
+    B, Sq, Hkv, G, D = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[1]
+    n_q, n_kv = Sq // q_chunk, Skv // kv_chunk
+    pairs = _block_pairs(n_q, n_kv, q_chunk, kv_chunk, causal, window, q_offset)
+
+    acc = jnp.zeros((B, Sq, Hkv, G, Dv), jnp.float32)
+    m = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        i, j = ij[0], ij[1]
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, 1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, 1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, 1)
+        # scores: (B, Hkv, G, qc, kc)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        mask = _band_mask(q_offset + i * q_chunk, j * kv_chunk, q_chunk,
+                          kv_chunk, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+        mi = jax.lax.dynamic_slice_in_dim(m, i * q_chunk, q_chunk, 1)
+        li = jax.lax.dynamic_slice_in_dim(l, i * q_chunk, q_chunk, 1)
+        acci = jax.lax.dynamic_slice_in_dim(acc, i * q_chunk, q_chunk, 1)
+        # carried stats are (B, Sq, Hkv, G) -> block view (B, qc, Hkv, G)
+        mi_ = jnp.moveaxis(mi, 1, 3)  # (B, Hkv, G, qc)
+        li_ = jnp.moveaxis(li, 1, 3)
+        m_new = jnp.maximum(mi_, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi_ - m_new)
+        l_new = li_ * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vj.astype(jnp.float32))
+        acc_new = acci * jnp.moveaxis(corr, 3, 1)[..., None] + pv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, acc_new, i * q_chunk, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(
+            m, jnp.moveaxis(m_new, 3, 1), i * q_chunk, 1)
+        l = jax.lax.dynamic_update_slice_in_dim(
+            l, jnp.moveaxis(l_new, 3, 1), i * q_chunk, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), pairs)
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _bw_attn_fwd(q, k, v, scale, causal, window, q_chunk, kv_chunk, q_offset):
+    out, lse = _bw_attn_fwd_impl(q, k, v, scale, causal, window, q_chunk,
+                                 kv_chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _bw_attn_bwd(scale, causal, window, q_chunk, kv_chunk, q_offset,
+                 res, dout):
+    with jax.named_scope("blockwise_attention"):
+        return _bw_attn_bwd_scoped(scale, causal, window, q_chunk, kv_chunk,
+                                   q_offset, res, dout)
+
+
+def _bw_attn_bwd_scoped(scale, causal, window, q_chunk, kv_chunk, q_offset,
+                        res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    n_q, n_kv = Sq // q_chunk, Skv // kv_chunk
+    pairs = _block_pairs(n_q, n_kv, q_chunk, kv_chunk, causal, window, q_offset)
+
+    dof = dout.astype(jnp.float32)
+    # delta_i = rowsum(dO_i * O_i): (B, Sq, Hkv, G)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)
+
+    dq = jnp.zeros(q.shape, jnp.float32)
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+
+    def body(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij[0], ij[1]
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, 1).astype(jnp.float32)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, 1).astype(jnp.float32)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, 1).astype(jnp.float32)
+        doi = jax.lax.dynamic_slice_in_dim(dof, i * q_chunk, q_chunk, 1)
+        lsei = jax.lax.dynamic_slice_in_dim(lse, i * q_chunk, q_chunk, 1)
+        di = jax.lax.dynamic_slice_in_dim(delta, i * q_chunk, q_chunk, 1)
+
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj) * scale
+        mask = _band_mask(q_offset + i * q_chunk, j * kv_chunk, q_chunk,
+                          kv_chunk, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - jnp.moveaxis(lsei, 1, 3)[..., None])  # (B,Hkv,G,qc,kc)
+
+        dvj = jnp.einsum("bhgqk,bqhgd->bkhd", p, doi)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", doi, vj)
+        ds = p * (dp - jnp.moveaxis(di, 1, 3)[..., None]) * scale
+        dqi = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kj)
+        dkj = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qi)
+
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * q_chunk, q_chunk, 1) + dqi,
+            i * q_chunk, 1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * kv_chunk, kv_chunk, 1) + dkj,
+            j * kv_chunk, 1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * kv_chunk, kv_chunk, 1) + dvj,
+            j * kv_chunk, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq, dk, dv), pairs)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+blockwise_attention.defvjp(_bw_attn_fwd, _bw_attn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def causal_attention(q, k, v, *, num_kv_heads: int, window: int = 0,
+                     q_chunk: int = 512, kv_chunk: int = 512,
+                     q_offset: int = 0, scale: float | None = None,
+                     impl: str = "auto"):
+    """q: (B, Sq, Hq, D); k: (B, Skv, Hkv, D); v: (B, Skv, Hkv, Dv)
+    -> (B, Sq, Hq, Dv). D and Dv may differ (MLA)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Dv = k.shape[1], v.shape[-1]
+    G = Hq // num_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, num_kv_heads, G, D)
+
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(qg, k, v, scale=scale, causal=True,
+                                     window=window, q_offset=q_offset)
+        return out.reshape(B, Sq, Hq, Dv)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    out = blockwise_attention(qg, k, v, scale, True, window, q_chunk,
+                              kv_chunk, q_offset)
+    return out.reshape(B, Sq, Hq, Dv)
+
+
+def full_attention(q, k, v, *, num_kv_heads: int, q_chunk: int = 512,
+                   kv_chunk: int = 512, scale: float | None = None):
+    """Non-causal (encoder / cross) attention."""
+    B, Sq, Hq, D = q.shape
+    Dv = v.shape[-1]
+    G = Hq // num_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, num_kv_heads, G, D)
+    out = blockwise_attention(qg, k, v, scale, False, 0,
+                              min(q_chunk, Sq), min(kv_chunk, k.shape[1]), 0)
+    return out.reshape(B, Sq, Hq, Dv)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, num_kv_heads: int,
+                     window: int = 0, scale: float | None = None):
+    """Single-token decode. q: (B, 1, Hq, D); caches: (B, S, Hkv, D);
+    pos: () current position (number of valid cached tokens incl. new one).
+
+    Written as plain masked softmax so XLA SPMD can partition the length
+    dim of the cache (seq-sharded KV) with small all-reduces over the
+    softmax statistics — this is how glm4 (kv=2) shards 16-way.
+    """
+    B, _, Hq, D = q.shape
+    S = k_cache.shape[1]
+    G = Hq // num_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, num_kv_heads, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    idx = jnp.arange(S)
+    posv = jnp.reshape(pos, (-1, 1)) if jnp.ndim(pos) else pos  # (B,1) or ()
+    valid = idx[None, :] < posv if jnp.ndim(pos) else (idx < pos)[None]
+    if window > 0:
+        # sliding window over absolute positions (non-ring caches)
+        valid = valid & (idx[None, :] >= (posv if jnp.ndim(pos) else pos) - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -1,0 +1,144 @@
+"""Basic layers: norms, embeddings, positional encodings, FFNs."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.nn.module import (
+    ParamDef,
+    fan_in_init,
+    normal_init,
+    ones_init,
+    param,
+    zeros_init,
+)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(cfg: LMConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": param((d,), ("embed",), ones_init(), jnp.float32)}
+    return {
+        "scale": param((d,), ("embed",), ones_init(), jnp.float32),
+        "bias": param((d,), ("embed",), zeros_init(), jnp.float32),
+    }
+
+
+def norm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_defs(cfg: LMConfig):
+    d = {"table": param((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                        normal_init(1.0 / math.sqrt(cfg.d_model)))}
+    return d
+
+
+def embedding_apply(p, tokens):
+    # vocab-parallel gather: one-hot matmul keeps the vocab dim sharded and
+    # reduces with a small psum instead of all-gathering the table.
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_defs(cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": param((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                       normal_init(1.0 / math.sqrt(cfg.d_model)))}
+
+
+def lm_head_matrix(head_params, embed_params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return embed_params["table"].T
+    return head_params["w"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0:
+        return x
+    dim = x.shape[-1]
+    freqs = rope_frequencies(dim, theta)  # (dim/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dim/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style sinusoidal position embeddings."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense)
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(cfg: LMConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": param((d, d_ff), ("embed", "mlp"), fan_in_init()),
+            "w_up": param((d, d_ff), ("embed", "mlp"), fan_in_init()),
+            "w_down": param((d_ff, d), ("mlp", "embed"), fan_in_init()),
+        }
+    return {
+        "w_up": param((d, d_ff), ("embed", "mlp"), fan_in_init()),
+        "w_down": param((d_ff, d), ("mlp", "embed"), fan_in_init()),
+    }
+
+
+def _act(cfg: LMConfig, h):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(h)
+    if cfg.act == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(cfg.act)
+
+
+def ffn_apply(cfg: LMConfig, p, x):
+    if cfg.act == "swiglu":
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        h = jax.nn.silu(g) * u
+    else:
+        h = _act(cfg, x @ p["w_up"])
+    return h @ p["w_down"]

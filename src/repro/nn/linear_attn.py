@@ -1,0 +1,163 @@
+"""RWKV6 ("Finch") WKV mixer — linear attention with data-dependent
+per-channel decay, in chunked (GLA-style) form plus the O(1) recurrence.
+
+Recurrence per head (K = V = head dim):
+    out_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+with w_t in (0,1)^K produced by a decay LoRA over the token-shifted input
+(the data-dependent decay that defines RWKV6). Token-shift mixing uses the
+static (RWKV-5 style) learned lerp; the per-token dynamic mix LoRA of the
+full Finch release is an orthogonal refinement (noted in DESIGN.md).
+
+Chunked form: all exponentials are differences of within-chunk cumulative
+log-decays, arranged so every factor is <= 1.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.nn.module import const_init, fan_in_init, normal_init, ones_init, param, zeros_init
+
+
+def wkv_dims(cfg: LMConfig):
+    K = cfg.wkv_head_dim
+    H = cfg.d_model // K
+    return H, K
+
+
+def wkv6_defs(cfg: LMConfig):
+    d = cfg.d_model
+    H, K = wkv_dims(cfg)
+    lora = max(32, d // 32)
+    return {
+        "mix_r": param((d,), ("embed",), const_init(0.5), jnp.float32),
+        "mix_k": param((d,), ("embed",), const_init(0.5), jnp.float32),
+        "mix_v": param((d,), ("embed",), const_init(0.5), jnp.float32),
+        "mix_g": param((d,), ("embed",), const_init(0.5), jnp.float32),
+        "mix_w": param((d,), ("embed",), const_init(0.5), jnp.float32),
+        "w_r": param((d, d), ("embed", "heads"), fan_in_init(0)),
+        "w_k": param((d, d), ("embed", "heads"), fan_in_init(0)),
+        "w_v": param((d, d), ("embed", "heads"), fan_in_init(0)),
+        "w_g": param((d, d), ("embed", "heads"), fan_in_init(0)),
+        # decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": param((d,), ("embed",), const_init(-1.0), jnp.float32),
+        "w_lora_a": param((d, lora), ("embed", None), normal_init(0.02)),
+        "w_lora_b": param((lora, d), (None, "heads"), zeros_init()),
+        "u": param((H, K), (None, None), const_init(0.5), jnp.float32),
+        "ln_scale": param((d,), ("embed",), ones_init(), jnp.float32),
+        "w_o": param((d, d), ("heads", "embed"), fan_in_init(0)),
+    }
+
+
+def wkv6_init_cache(cfg: LMConfig, batch: int, dtype=jnp.bfloat16):
+    H, K = wkv_dims(cfg)
+    return {
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B, S, D); prev: (B, D) last token of previous step/segment."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int, S0=None):
+    """r,k,v: (B, S, H, K); logw: (B, S, H, K) (<0); u: (H, K);
+    S0: optional initial state (B, H, K, K).
+    Returns y: (B, S, H, K), final state (B, H, K, K)."""
+    Bn, S, H, K = r.shape
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape(Bn, nc, chunk, H, K), 1, 0)
+
+    rs, ks, vs, lws = resh(r), resh(k), resh(v), resh(logw)
+
+    def body(Sst, inp):
+        with jax.named_scope("wkv_chunk"):
+            return _wkv_chunk_body(Sst, inp, u, chunk)
+
+    def _wkv_chunk_body(Sst, inp, u, chunk):
+        rc, kc, vc, lwc = (t.astype(jnp.float32) for t in inp)  # (B, C, H, K)
+        cl = jnp.cumsum(lwc, axis=1)  # inclusive cumulative log decay
+        cl_prev = cl - lwc  # exclusive (decay before applying step t)
+        # intra-chunk scores s_ti = sum_k r_tk k_ik exp(cl_prev_t - cl_i), i<t
+        diff = cl_prev[:, :, None] - cl[:, None, :, :]  # (B, t, i, H, K) <= 0 for i<t
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        dec = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        s = jnp.einsum("bthk,bihk,btihk->bthi", rc, kc, dec)
+        # diagonal bonus term
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc, u.astype(jnp.float32), kc)
+        y = jnp.einsum("bthi,bihk->bthk", s, vc) + diag[..., None] * vc
+        # inter-chunk
+        y += jnp.einsum("bthk,bhkv->bthv", rc * jnp.exp(cl_prev), Sst)
+        # state update: S = diag(exp(cl_C)) S + sum_i (k_i exp(cl_C - cl_i))^T v_i
+        tail = jnp.exp(cl[:, -1:] - cl)  # (B, C, H, K) <= 1
+        S_new = jnp.exp(cl[:, -1])[..., None] * Sst + jnp.einsum(
+            "bihk,bihv->bhkv", kc * tail, vc)
+        return S_new, y.astype(r.dtype)
+
+    if S0 is None:
+        S0 = jnp.zeros((Bn, H, K, K), jnp.float32)
+    S_fin, ys = jax.lax.scan(body, S0, (rs, ks, vs, lws))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bn, S, H, K)
+    return y, S_fin
+
+
+def wkv_step(Sst, r1, k1, v1, logw1, u):
+    """One-token recurrence. r1,k1,v1,logw1: (B, H, K); Sst: (B, H, K, K)."""
+    r1, k1, v1 = (t.astype(jnp.float32) for t in (r1, k1, v1))
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1, Sst + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S_new = jnp.exp(logw1.astype(jnp.float32))[..., None] * Sst + kv
+    return S_new, y
+
+
+def wkv6_apply(cfg: LMConfig, p, x, *, cache=None, chunk: int = 64):
+    """x: (B, S, D) -> (y, new_cache)."""
+    B, S, d = x.shape
+    H, K = wkv_dims(cfg)
+    prev = cache["shift"].astype(x.dtype) if cache is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev)
+
+    def mix(name):
+        m = p[f"mix_{name}"].astype(x.dtype)
+        return x * m + xs * (1 - m)
+
+    r = (mix("r") @ p["w_r"].astype(x.dtype)).reshape(B, S, H, K)
+    k = (mix("k") @ p["w_k"].astype(x.dtype)).reshape(B, S, H, K)
+    v = (mix("v") @ p["w_v"].astype(x.dtype)).reshape(B, S, H, K)
+    g = mix("g") @ p["w_g"].astype(x.dtype)
+    wx = mix("w")
+    lora = jnp.tanh(wx @ p["w_lora_a"].astype(x.dtype)) @ p["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    logw = logw.reshape(B, S, H, K)
+
+    if cache is None:
+        y, _ = wkv_chunked(r, k, v, logw, p["u"], min(chunk, S))
+        new_cache = None
+    elif S == 1:
+        S_new, y1 = wkv_step(cache["wkv"], r[:, 0], k[:, 0], v[:, 0],
+                             logw[:, 0], p["u"])
+        y = y1[:, None].astype(x.dtype)
+        new_cache = {"shift": x[:, -1].astype(cache["shift"].dtype), "wkv": S_new}
+    else:  # prefill into cache
+        y, S_new = wkv_chunked(r, k, v, logw, p["u"], min(chunk, S),
+                               S0=cache["wkv"])
+        new_cache = {"shift": x[:, -1].astype(cache["shift"].dtype), "wkv": S_new}
+
+    # per-head group norm then gate
+    y = y.reshape(B, S, H, K).astype(jnp.float32)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = (y.reshape(B, S, d) * p["ln_scale"]).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    return y @ p["w_o"].astype(x.dtype), new_cache

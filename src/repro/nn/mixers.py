@@ -1,0 +1,234 @@
+"""Token mixers: GQA attention (with KV cache), MLA (DeepSeek-V2),
+including cache layouts for prefill/decode.
+
+Cache conventions
+-----------------
+GQA cache: dict(k=(B, S, Hkv, D), v=(B, S, Hkv, D), pos=()) where S is
+``min(max_len, window)`` — sliding-window archs keep a ring buffer.
+MLA cache: dict(ckv=(B, S, r), krope=(B, S, 1, rope_d), pos=()).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.nn import attention as attn
+from repro.nn.layers import apply_rope
+from repro.nn.module import fan_in_init, param, shard
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_defs(cfg: LMConfig):
+    d, h = cfg.d_model, cfg.head_dim
+    return {
+        "wq": param((d, cfg.num_heads, h), ("embed", "heads", None), fan_in_init(0)),
+        "wk": param((d, cfg.num_kv_heads, h), ("embed", "kv_heads", None), fan_in_init(0)),
+        "wv": param((d, cfg.num_kv_heads, h), ("embed", "kv_heads", None), fan_in_init(0)),
+        "wo": param((cfg.num_heads, h, d), ("heads", None, "embed"), fan_in_init(0)),
+    }
+
+
+def gqa_cache_len(cfg: LMConfig, max_len: int) -> int:
+    if cfg.sliding_window > 0:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def gqa_init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    S = gqa_cache_len(cfg, max_len)
+    shape = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_apply(cfg: LMConfig, p, x, *, positions, rules=None, cache=None,
+              pos=None, cross_kv=None, causal=True, impl="auto"):
+    """x: (B, S, D). Returns (out, new_cache).
+
+    * train/prefill: cache is None, S = full sequence.
+    * decode: cache holds past K/V; S == 1; pos = () scalar count of tokens
+      already in cache (the new token goes to slot pos % cache_len).
+    * cross attention (whisper): cross_kv = (k, v) precomputed from encoder.
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = cross_kv
+
+    new_cache = cache
+    if cache is not None and cross_kv is None and S == 1:
+        # decode: append to ring/linear cache; pos may be a scalar (all
+        # sequences in lockstep) or a (B,) vector (serving slots)
+        cache_len = cache["k"].shape[1]
+        slot = pos % cache_len
+        if jnp.ndim(slot) == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        else:
+            bidx = jnp.arange(B)
+            k_cache = cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": k_cache, "v": v_cache}
+        if rules is not None:
+            k_cache = shard(k_cache, rules, "act_batch", "act_kv_seq", "act_heads", None)
+            v_cache = shard(v_cache, rules, "act_batch", "act_kv_seq", "act_heads", None)
+        ring = cfg.sliding_window > 0 and cache_len <= cfg.sliding_window
+        out = attn.decode_attention(
+            q, k_cache, v_cache, pos + 1,
+            num_kv_heads=cfg.num_kv_heads,
+            window=0 if ring else cfg.sliding_window,
+        )
+    elif cache is not None and cross_kv is None:
+        # prefill-into-cache: bulk write (prompt starts at position 0),
+        # attention runs over the freshly computed full-sequence K/V
+        cache_len = cache["k"].shape[1]
+        kw = k[:, -cache_len:] if S > cache_len else k  # ring keeps the tail
+        vw = v[:, -cache_len:] if S > cache_len else v
+        new_cache = {
+            "k": _bulk_update(cache["k"], kw, 0),
+            "v": _bulk_update(cache["v"], vw, 0),
+        }
+        out = attn.causal_attention(q, k, v, num_kv_heads=cfg.num_kv_heads,
+                                    window=cfg.sliding_window, impl=impl)
+    elif cross_kv is not None:
+        out = attn.full_attention(q, k, v, num_kv_heads=cfg.num_kv_heads)
+    elif causal:
+        out = attn.causal_attention(q, k, v, num_kv_heads=cfg.num_kv_heads,
+                                    window=cfg.sliding_window, impl=impl)
+    else:
+        out = attn.full_attention(q, k, v, num_kv_heads=cfg.num_kv_heads)
+
+    if rules is not None:
+        out = shard(out, rules, "act_batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def _bulk_update(cache, new, pos):
+    # prefill-into-cache: write S tokens starting at pos (no ring wrap;
+    # bulk prefill always starts at 0 in this framework)
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), pos, 1)
+
+
+def gqa_cross_kv(cfg: LMConfig, p, memory):
+    """Precompute cross-attention K/V from encoder output (whisper)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(memory.dtype))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank KV compression, rope/nope split heads
+# ---------------------------------------------------------------------------
+
+
+def mla_defs(cfg: LMConfig):
+    d = cfg.d_model
+    n = cfg.num_heads
+    r = cfg.kv_lora_rank
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": param((d, n, qk), ("embed", "heads", None), fan_in_init(0)),
+        "w_dkv": param((d, r + cfg.qk_rope_dim), ("embed", "kv_lora"), fan_in_init(0)),
+        "w_uk": param((r, n, cfg.qk_nope_dim), ("kv_lora", "heads", None), fan_in_init(0)),
+        "w_uv": param((r, n, cfg.v_head_dim), ("kv_lora", "heads", None), fan_in_init(0)),
+        "wo": param((n, cfg.v_head_dim, d), ("heads", None, "embed"), fan_in_init(0)),
+    }
+
+
+def mla_init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, 1, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_apply(cfg: LMConfig, p, x, *, positions, rules=None, cache=None,
+              pos=None, impl="auto"):
+    """MLA attention. Prefill/train: naive decompression (matmul-friendly).
+    Decode: *absorbed* form — scores computed in the latent space against
+    the compressed cache (the paper-intended memory win)."""
+    B, S, D = x.shape
+    n, r = cfg.num_heads, cfg.kv_lora_rank
+    rope_d, nope_d, v_d = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope_d], q[..., nope_d:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"].astype(x.dtype)  # (B, S, r + rope_d)
+    ckv, k_rope = dkv[..., :r], dkv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(nope_d + rope_d)
+
+    if cache is None or S > 1:
+        # naive: decompress K/V, run blockwise attention with concat dims
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"].astype(x.dtype))
+        qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kc = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, n, rope_d))], axis=-1)
+        out = attn.causal_attention(qc, kc, v, num_kv_heads=n, scale=scale,
+                                    impl=impl)
+        new_cache = None
+        if cache is not None:  # prefill-into-cache (latent cache only)
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, 1),
+                "krope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["krope"], k_rope.astype(cache["krope"].dtype), 0, 1),
+            }
+    else:
+        # absorbed decode: q_nope' = q_nope @ w_uk  -> latent space (r)
+        if jnp.ndim(pos) == 0:
+            ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, 1)
+            krope_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), pos, 1)
+        else:
+            bidx = jnp.arange(B)
+            ckv_cache = cache["ckv"].at[bidx, pos].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            krope_cache = cache["krope"].at[bidx, pos].set(
+                k_rope[:, 0].astype(cache["krope"].dtype))
+        new_cache = {"ckv": ckv_cache, "krope": krope_cache}
+        if rules is not None:
+            ckv_cache = shard(ckv_cache, rules, "act_batch", "act_kv_seq", None)
+            krope_cache = shard(krope_cache, rules, "act_batch", "act_kv_seq", None, None)
+
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(x.dtype))
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                           ckv_cache.astype(jnp.float32))
+        s_rope = jnp.einsum("bshk,btok->bhst", q_rope.astype(jnp.float32),
+                            krope_cache.astype(jnp.float32))
+        s = (s_lat + s_rope) * scale
+        Smax = ckv_cache.shape[1]
+        idx = jnp.arange(Smax)
+        if jnp.ndim(pos) == 0:
+            valid = (idx < (pos + 1))[None]
+        else:
+            valid = idx[None, :] < (pos + 1)[:, None]
+        s = jnp.where(valid[:, None, None, :], s, attn.NEG_INF)
+        pw = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", pw, ckv_cache.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhk->bshk", o_lat,
+                         p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache

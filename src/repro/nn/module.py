@@ -1,0 +1,132 @@
+"""Minimal functional parameter system (no flax dependency).
+
+A *module* here is a plain function pair:
+
+* ``init(key, cfg...) -> params``  — a pytree of ``jnp`` arrays
+* ``apply(params, x, ...) -> out``
+
+Parameter declaration goes through :class:`ParamDef` so that every array
+carries (shape, dtype, logical axes, initializer) and the same declaration
+drives three consumers: real init, ``jax.eval_shape`` abstract init for the
+dry-run, and the sharding-spec pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ShardingRules
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+def normal_init(stddev: float) -> Initializer:
+    def f(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return f
+
+
+def fan_in_init(in_axis: int = -2) -> Initializer:
+    def f(key, shape, dtype):
+        fan_in = shape[in_axis] if len(shape) >= 2 else shape[0]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return f
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def const_init(value) -> Initializer:
+    def f(key, shape, dtype):
+        return jnp.broadcast_to(jnp.asarray(value, dtype), shape)
+
+    return f
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    init: Initializer
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs axes {self.logical_axes}"
+        )
+
+
+def param(shape: Sequence[int], axes: Sequence[str | None], init: Initializer,
+          dtype=jnp.bfloat16) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), init, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree materialization
+# ---------------------------------------------------------------------------
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs, key: jax.Array):
+    """Materialize a pytree of ParamDefs into arrays with split keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [d.init(k, d.shape, d.dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_tree(defs):
+    """ShapeDtypeStruct pytree (dry-run init, no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def spec_tree(defs, rules: ShardingRules):
+    """PartitionSpec pytree matching the param pytree."""
+    return jax.tree.map(lambda d: rules.spec(*d.logical_axes), defs, is_leaf=_is_def)
+
+
+def param_count_tree(defs) -> int:
+    leaves, _ = jax.tree.flatten(defs, is_leaf=_is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def shard(x: jax.Array, rules: ShardingRules | None, *axes: str | None) -> jax.Array:
+    """Activation sharding constraint via logical axes.
+
+    ``rules=None`` (single-device tests) makes this a no-op. Callers must
+    trace under ``jax.sharding.set_mesh(mesh)`` so bare PartitionSpecs
+    resolve. Axes that don't divide the tensor dim are dropped (tiny archs
+    replicate instead of failing).
+    """
+    if rules is None:
+        return x
+    from repro.sharding.rules import sanitize_spec
+
+    spec = rules.spec(*axes)
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        spec = sanitize_spec(spec, x.shape, sizes)
+    except Exception:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

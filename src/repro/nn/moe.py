@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+Baseline layout is *tensor-parallel MoE*: the expert dim is replicated and
+each expert's hidden dim is sharded over "model" (works for any expert
+count, e.g. mixtral's 8 experts on a 16-wide axis). Expert-parallel
+dispatch with the paper's one-put-per-multicast deduplication lives in
+``repro.core.moe_dispatch`` and is selected per-arch at launch time.
+
+Dispatch avoids (T, E, C) one-hot tensors: ranks within an expert come from
+one argsort over T*K entries (static shapes throughout; over-capacity
+tokens are dropped, standard Switch/GShard semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.nn.layers import ffn_apply
+from repro.nn.module import fan_in_init, normal_init, param
+
+
+def moe_defs(cfg: LMConfig):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    defs = {
+        "router": param((d, E), ("embed", None), normal_init(0.02), jnp.float32),
+        "w_gate": param((E, d, ff), ("expert", "embed", "mlp"), fan_in_init(1)),
+        "w_up": param((E, d, ff), ("expert", "embed", "mlp"), fan_in_init(1)),
+        "w_down": param((E, ff, d), ("expert", "mlp", "embed"), fan_in_init(1)),
+    }
+    if cfg.num_shared_experts > 0:
+        sff = cfg.num_shared_experts * ff
+        defs["shared"] = {
+            "w_gate": param((d, sff), ("embed", "mlp"), fan_in_init(0)),
+            "w_up": param((d, sff), ("embed", "mlp"), fan_in_init(0)),
+            "w_down": param((sff, d), ("mlp", "embed"), fan_in_init(0)),
+        }
+    return defs
+
+
+def capacity(cfg: LMConfig, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * num_tokens * cfg.top_k / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def route(cfg: LMConfig, logits: jax.Array):
+    """logits: (T, E) -> (gates (T,K), experts (T,K), aux_loss ())."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balancing aux loss
+    E = cfg.num_experts
+    density = jnp.zeros((E,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    density = density / density.sum()
+    mean_prob = probs.mean(0)
+    aux = E * jnp.sum(density * mean_prob)
+    return gates, experts, aux
+
+
+def dispatch_indices(experts: jax.Array, num_experts: int, cap: int):
+    """experts: (T, K) int32 -> (dest_e, dest_r, keep) each (T*K,).
+
+    Rank r of entry i within its expert comes from a single stable argsort;
+    entries with r >= capacity are dropped.
+    """
+    TK = experts.size
+    flat_e = experts.reshape(-1)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(num_experts), side="left")
+    rank_sorted = jnp.arange(TK, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    rank = jnp.zeros((TK,), jnp.int32).at[sort_idx].set(rank_sorted)
+    keep = rank < cap
+    dest_e = jnp.where(keep, flat_e, num_experts)  # overflow row E
+    dest_r = jnp.where(keep, rank, 0)
+    return dest_e, dest_r, keep
+
+
+def moe_apply(cfg: LMConfig, p, x, *, rules=None):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    K, E = cfg.top_k, cfg.num_experts
+    xf = x.reshape(T, D)
+
+    logits = xf.astype(jnp.float32) @ p["router"]
+    gates, experts, aux = route(cfg, logits)
+    cap = capacity(cfg, T)
+    dest_e, dest_r, keep = dispatch_indices(experts, E, cap)
+
+    tok_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    buf = jnp.zeros((E + 1, cap, D), x.dtype).at[dest_e, dest_r].set(xf[tok_idx])
+    buf = buf[:E]
+
+    # expert FFN (batched einsum over the expert dim)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    out_pad = jnp.concatenate([out, jnp.zeros((1, cap, D), out.dtype)], axis=0)
+    vals = out_pad[dest_e, dest_r]  # (T*K, D)
+    w = (gates.reshape(-1) * keep).astype(jnp.float32)
+    y = jnp.sum(vals.reshape(T, K, D).astype(jnp.float32)
+                * w.reshape(T, K, 1), axis=1)
+    y = y.astype(x.dtype)
+
+    if "shared" in p:
+        y = y + ffn_apply(cfg, p["shared"], xf)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) mixer — chunked state-space dual form.
+
+The chunked algorithm follows the SSD decomposition: within a chunk the
+output is a masked (decay-weighted) attention-like matmul; across chunks a
+scan carries the (H, P, N) state. All decay exponentials are differences of
+cumulative log-decays within one chunk, hence <= 1 (numerically safe).
+
+Decode is the O(1) recurrent update — this is what makes zamba2 runnable at
+long_500k.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.nn.layers import norm_apply
+from repro.nn.module import const_init, fan_in_init, normal_init, ones_init, param, zeros_init
+
+
+def mamba2_dims(cfg: LMConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads
+
+
+def mamba2_defs(cfg: LMConfig):
+    d = cfg.d_model
+    d_in, nh = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N
+    return {
+        "w_in": param((d, 2 * d_in + 2 * N + nh), ("embed", "ssm_inner"), fan_in_init(0)),
+        "conv_w": param((cfg.ssm_conv_width, conv_ch), ("conv_w", "ssm_inner"), normal_init(0.1)),
+        "conv_b": param((conv_ch,), ("ssm_inner",), zeros_init()),
+        "a_log": param((nh,), (None,), const_init(math.log(1.0)), jnp.float32),
+        "d_skip": param((nh,), (None,), ones_init(), jnp.float32),
+        "dt_bias": param((nh,), (None,), zeros_init(), jnp.float32),
+        "norm_scale": param((d_in,), ("ssm_inner",), ones_init(), jnp.float32),
+        "w_out": param((d_in, d), ("ssm_inner", "embed"), fan_in_init(0)),
+    }
+
+
+def mamba2_init_cache(cfg: LMConfig, batch: int, dtype=jnp.bfloat16):
+    d_in, nh = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, nh = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * N]
+    dt = proj[..., d_in + d_in + 2 * N:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width W. xbc: (B, S, C); state: (B, W-1, C)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : W - 1])
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a_log, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (b, S, H, P); dt: (b, S, H) (post-softplus); B, C: (b, S, N);
+    a_log: (H,); h0: optional initial state (b, H, P, N).
+    Returns y: (b, S, H, P), final state (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    xs = x.reshape(b, nc, chunk, H, P)
+    dts = dt.reshape(b, nc, chunk, H)
+    Bs = B.reshape(b, nc, chunk, N)
+    Cs = C.reshape(b, nc, chunk, N)
+
+    A = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+
+    def body(h, inp):
+        with jax.named_scope("ssd_chunk"):
+            return _ssd_chunk_body(h, inp)
+
+    def _ssd_chunk_body(h, inp):
+        xc, dtc, Bc, Cc = inp  # (b, chunk, H, P), (b, chunk, H), (b, chunk, N)
+        la = dtc * A  # log decay per step (b, chunk, H), <= 0
+        cl = jnp.cumsum(la, axis=1)  # inclusive (b, chunk, H)
+        # intra-chunk: M[t, i] = exp(cl_t - cl_i) * (C_t . B_i) * dt_i, i <= t
+        decay = jnp.exp(cl[:, :, None, :] - cl[:, None, :, :])  # (b, t, i, H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        cb = jnp.einsum("btn,bin->bti", Cc, Bc)
+        M = jnp.where(mask[None, :, :, None], decay, 0.0) * cb[..., None]
+        y_intra = jnp.einsum("btih,bihp->bthp", M * dtc[:, None, :, :], xc.astype(jnp.float32))
+        # inter-chunk: y_t += C_t . (exp(cl_t) * h)
+        h_dec = jnp.einsum("bth,bhpn->bthpn", jnp.exp(cl), h)
+        y_inter = jnp.einsum("btn,bthpn->bthp", Cc, h_dec)
+        # state update
+        tail = jnp.exp(cl[:, -1:, :] - cl)  # (b, chunk, H) decay to chunk end
+        dx = xc.astype(jnp.float32) * (dtc * tail)[..., None]
+        h_new = jnp.exp(cl[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bthp,btn->bhpn", dx, Bc)
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dts, 1, 0),
+         jnp.moveaxis(Bs, 1, 0), jnp.moveaxis(Cs, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, H, P)
+    return y, h_final
+
+
+def ssd_step(h, x1, dt1, a_log, B1, C1):
+    """One-token recurrence. h: (b,H,P,N); x1: (b,H,P); dt1: (b,H);
+    B1, C1: (b,N)."""
+    a = jnp.exp(dt1 * -jnp.exp(a_log.astype(jnp.float32)))  # (b,H)
+    dx = x1.astype(jnp.float32) * dt1[..., None]
+    h_new = a[:, :, None, None] * h + jnp.einsum("bhp,bn->bhpn", dx, B1)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C1)
+    return h_new, y.astype(x1.dtype)
+
+
+def mamba2_apply(cfg: LMConfig, p, x, *, cache=None, chunk: int = 128):
+    """x: (B, S, D) -> (y, new_cache)."""
+    b, S, d = x.shape
+    d_in, nh = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xs = xbc[..., :d_in].reshape(b, S, nh, P)
+    Bv = xbc[..., d_in:d_in + N].astype(jnp.float32)
+    Cv = xbc[..., d_in + N:].astype(jnp.float32)
+
+    if cache is None:
+        chunk = min(chunk, S)
+        y, _ = ssd_chunked(xs, dt, p["a_log"], Bv, Cv, chunk)
+        new_cache = None
+    elif S == 1:
+        h_new, y1 = ssd_step(cache["ssm"], xs[:, 0], dt[:, 0], p["a_log"],
+                             Bv[:, 0], Cv[:, 0])
+        y = y1[:, None]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_new}
+    else:  # prefill into cache
+        y, h_new = ssd_chunked(xs, dt, p["a_log"], Bv, Cv, min(chunk, S),
+                               h0=cache["ssm"])
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_new}
+
+    y = y + xs * p["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(b, S, d_in)
+    y = norm_apply({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["w_out"].astype(x.dtype), new_cache

@@ -1,0 +1,310 @@
+"""Transformer stack: heterogeneous block layouts compiled into a minimal
+set of ``lax.scan`` segments.
+
+``cfg.blocks`` may be heterogeneous (deepseek: dense layer 0 + 26 MoE
+layers; zamba2: period-6 mamba/shared-attn pattern). We run-length-encode
+the layout, detect periodicity, and emit one scan per *segment* whose body
+unrolls one period ("superblock"). HLO size therefore stays O(distinct
+block kinds), not O(layers) — critical for 88-layer compile times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import BlockSpec, LMConfig
+from repro.nn import linear_attn, mixers, moe as moe_lib, ssm
+from repro.nn.layers import ffn_defs, ffn_apply, norm_apply, norm_defs
+from repro.nn.module import ParamDef, param, shard
+
+
+# ---------------------------------------------------------------------------
+# Layout segmentation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Segment:
+    pattern: tuple[BlockSpec, ...]  # one superblock
+    reps: int  # scan length
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.reps
+
+
+def _rle(blocks: Sequence[BlockSpec]):
+    runs: list[tuple[BlockSpec, int]] = []
+    for b in blocks:
+        if runs and runs[-1][0] == b:
+            runs[-1] = (b, runs[-1][1] + 1)
+        else:
+            runs.append((b, 1))
+    return runs
+
+
+def segment_layout(cfg: LMConfig) -> list[Segment]:
+    runs = _rle(cfg.blocks)
+    # try run-level periodicity (zamba2: [(m,5),(ms,1)] x 9)
+    n = len(runs)
+    for p in range(1, n // 2 + 1):
+        if n % p == 0 and all(runs[i] == runs[i % p] for i in range(n)):
+            pattern: list[BlockSpec] = []
+            for spec, cnt in runs[:p]:
+                pattern.extend([spec] * cnt)
+            return [Segment(tuple(pattern), n // p)]
+    # fall back: one segment per run
+    return [Segment((spec,), cnt) for spec, cnt in runs]
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: LMConfig, bspec: BlockSpec, cross: bool = False):
+    defs: dict[str, Any] = {"norm1": norm_defs(cfg)}
+    if bspec.mixer == "gqa":
+        defs["mixer"] = mixers.gqa_defs(cfg)
+    elif bspec.mixer == "mla":
+        defs["mixer"] = mixers.mla_defs(cfg)
+    elif bspec.mixer == "mamba2":
+        defs["mixer"] = ssm.mamba2_defs(cfg)
+    elif bspec.mixer == "wkv6":
+        defs["mixer"] = linear_attn.wkv6_defs(cfg)
+    if cross:  # enc-dec decoder blocks: cross attention to encoder memory
+        defs["norm_cross"] = norm_defs(cfg)
+        defs["cross"] = mixers.gqa_defs(cfg)
+    if bspec.ffn != "none":
+        defs["norm2"] = norm_defs(cfg)
+        defs["ffn"] = ffn_defs(cfg) if bspec.ffn == "dense" else moe_lib.moe_defs(cfg)
+    return defs
+
+
+def shared_attn_defs(cfg: LMConfig):
+    """zamba2 shared transformer block: attention + MLP, one set of weights."""
+    return {
+        "norm1": norm_defs(cfg),
+        "attn": mixers.gqa_defs(cfg),
+        "norm2": norm_defs(cfg),
+        "ffn": ffn_defs(cfg),
+    }
+
+
+def init_cache_for_block(cfg: LMConfig, bspec: BlockSpec, batch: int,
+                         max_len: int, dtype=jnp.bfloat16):
+    cache: dict[str, Any] = {}
+    if bspec.mixer == "gqa":
+        cache["mixer"] = mixers.gqa_init_cache(cfg, batch, max_len, dtype)
+    elif bspec.mixer == "mla":
+        cache["mixer"] = mixers.mla_init_cache(cfg, batch, max_len, dtype)
+    elif bspec.mixer == "mamba2":
+        cache["mixer"] = ssm.mamba2_init_cache(cfg, batch, dtype)
+    elif bspec.mixer == "wkv6":
+        cache["mixer"] = linear_attn.wkv6_init_cache(cfg, batch, dtype)
+    if bspec.shared_attn:
+        cache["shared"] = mixers.gqa_init_cache(cfg, batch, max_len, dtype)
+    return cache
+
+
+def block_apply(cfg: LMConfig, bspec: BlockSpec, p, x, *, positions,
+                rules=None, cache=None, pos=None, shared_params=None,
+                impl="auto", causal=True, memory=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p["norm1"], x)
+    new_cache: dict[str, Any] = {}
+    mcache = cache.get("mixer") if cache else None
+
+    if bspec.mixer == "gqa":
+        y, c = mixers.gqa_apply(cfg, p["mixer"], h, positions=positions,
+                                rules=rules, cache=mcache, pos=pos, impl=impl,
+                                causal=causal)
+    elif bspec.mixer == "mla":
+        y, c = mixers.mla_apply(cfg, p["mixer"], h, positions=positions,
+                                rules=rules, cache=mcache, pos=pos, impl=impl)
+    elif bspec.mixer == "mamba2":
+        y, c = ssm.mamba2_apply(cfg, p["mixer"], h, cache=mcache,
+                                chunk=cfg.ssm_chunk)
+    elif bspec.mixer == "wkv6":
+        y, c = linear_attn.wkv6_apply(cfg, p["mixer"], h, cache=mcache,
+                                      chunk=cfg.wkv_chunk)
+    else:
+        y, c = jnp.zeros_like(h), None
+    if c is not None:
+        new_cache["mixer"] = c
+    x = x + y
+    if rules is not None:
+        x = shard(x, rules, "act_batch", "act_seq", "act_embed")
+
+    if "cross" in p and memory is not None:
+        h = norm_apply(p["norm_cross"], x)
+        ckv = mixers.gqa_cross_kv(cfg, p["cross"], memory)
+        y, _ = mixers.gqa_apply(cfg, p["cross"], h, positions=positions,
+                                rules=rules, cross_kv=ckv, causal=False)
+        x = x + y
+
+    if bspec.ffn != "none":
+        h = norm_apply(p["norm2"], x)
+        if bspec.ffn == "dense":
+            y = ffn_apply(cfg, p["ffn"], h)
+        else:
+            y, aux = moe_lib.moe_apply(cfg, p["ffn"], h, rules=rules)
+        x = x + y
+        if rules is not None:
+            x = shard(x, rules, "act_batch", "act_seq", "act_embed")
+
+    if bspec.shared_attn:
+        assert shared_params is not None
+        scache = cache.get("shared") if cache else None
+        h = norm_apply(shared_params["norm1"], x)
+        y, c = mixers.gqa_apply(cfg, shared_params["attn"], h,
+                                positions=positions, rules=rules,
+                                cache=scache, pos=pos, impl=impl)
+        if c is not None:
+            new_cache["shared"] = c
+        x = x + y
+        h = norm_apply(shared_params["norm2"], x)
+        x = x + ffn_apply(cfg, shared_params["ffn"], h)
+        if rules is not None:
+            x = shard(x, rules, "act_batch", "act_seq", "act_embed")
+
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Stack = list of scanned segments
+# ---------------------------------------------------------------------------
+
+
+def _stack_defs(defs, reps: int):
+    def f(d: ParamDef):
+        return ParamDef((reps,) + d.shape, ("layers",) + d.logical_axes,
+                        _vmap_init(d.init, reps), d.dtype)
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _vmap_init(init, reps):
+    def f(key, shape, dtype):
+        keys = jax.random.split(key, reps)
+        return jax.vmap(lambda k: init(k, shape[1:], dtype))(keys)
+    return f
+
+
+def stack_defs(cfg: LMConfig, cross: bool = False):
+    segs = segment_layout(cfg)
+    out = []
+    for seg in segs:
+        sb = {f"b{i}": block_defs(cfg, bs, cross=cross)
+              for i, bs in enumerate(seg.pattern)}
+        out.append(_stack_defs(sb, seg.reps))
+    return out, segs
+
+
+def stack_cache(cfg: LMConfig, segs: list[Segment], batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    caches = []
+    for seg in segs:
+        one = {f"b{i}": init_cache_for_block(cfg, bs, batch, max_len, dtype)
+               for i, bs in enumerate(seg.pattern)}
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (seg.reps,) + x.shape).copy(), one))
+    return caches
+
+
+def _cache_axes_for_block(cfg: LMConfig, bspec: BlockSpec):
+    """Logical axes mirroring init_cache_for_block's structure."""
+    kv = {"k": ("act_batch", "act_kv_seq", "act_heads", None),
+          "v": ("act_batch", "act_kv_seq", "act_heads", None)}
+    axes: dict[str, Any] = {}
+    if bspec.mixer == "gqa":
+        axes["mixer"] = kv
+    elif bspec.mixer == "mla":
+        axes["mixer"] = {"ckv": ("act_batch", "act_kv_seq", None),
+                         "krope": ("act_batch", "act_kv_seq", None, None)}
+    elif bspec.mixer == "mamba2":
+        axes["mixer"] = {"conv": ("act_batch", None, "act_mlp"),
+                         "ssm": ("act_batch", "act_state_heads", None, None)}
+    elif bspec.mixer == "wkv6":
+        axes["mixer"] = {"shift": ("act_batch", None),
+                         "wkv": ("act_batch", "act_state_heads", None, None)}
+    if bspec.shared_attn:
+        axes["shared"] = kv
+    return axes
+
+
+def stack_cache_specs(cfg: LMConfig, segs: list[Segment], rules):
+    """PartitionSpec pytree matching stack_cache (leading 'layers' dim)."""
+    specs = []
+    for seg in segs:
+        one = {f"b{i}": _cache_axes_for_block(cfg, bs)
+               for i, bs in enumerate(seg.pattern)}
+        specs.append(jax.tree.map(
+            lambda ax: rules.spec("layers", *ax), one,
+            is_leaf=lambda x: isinstance(x, tuple)))
+    return specs
+
+
+def stack_abstract_cache(cfg: LMConfig, segs: list[Segment], batch: int,
+                         max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree matching stack_cache (no allocation)."""
+    caches = jax.eval_shape(
+        lambda: stack_cache(cfg, segs, batch, max_len, dtype))
+    return caches
+
+
+def stack_apply(cfg: LMConfig, segs: list[Segment], seg_params, x, *,
+                positions, rules=None, caches=None, pos=None,
+                shared_params=None, impl="auto", remat=True, causal=True,
+                memory=None):
+    """Run all segments. Returns (x, new_caches, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    layer_offset = 0
+
+    for si, (seg, params) in enumerate(zip(segs, seg_params)):
+        cache = caches[si] if caches is not None else None
+
+        def superblock(x, params, cache, _seg=seg):
+            aux = jnp.zeros((), jnp.float32)
+            ncache = {}
+            for i, bs in enumerate(_seg.pattern):
+                ci = cache.get(f"b{i}") if cache else None
+                x, nc, a = block_apply(
+                    cfg, bs, params[f"b{i}"], x, positions=positions,
+                    rules=rules, cache=ci, pos=pos,
+                    shared_params=shared_params, impl=impl, causal=causal,
+                    memory=memory)
+                aux = aux + a
+                if nc is not None:
+                    ncache[f"b{i}"] = nc
+            return x, ncache, aux
+
+        if seg.reps == 1:
+            x, ncache, aux = superblock(x, jax.tree.map(lambda t: t[0], params),
+                                        cache and jax.tree.map(lambda t: t[0], cache))
+            total_aux = total_aux + aux
+            new_caches.append(ncache and jax.tree.map(lambda t: t[None], ncache))
+        else:
+            def body(carry, xs, _seg=seg):
+                x, aux = carry
+                if caches is not None:
+                    par, ca = xs
+                else:
+                    par, ca = xs, None
+                x, ncache, a = superblock(x, par, ca)
+                return (x, aux + a), ncache
+
+            if remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            xs = (params, cache) if caches is not None else params
+            (x, total_aux), ncache = jax.lax.scan(body, (x, total_aux), xs)
+            new_caches.append(ncache if ncache else None)
+        layer_offset += seg.num_layers
+
+    return x, (new_caches if caches is not None else None), total_aux

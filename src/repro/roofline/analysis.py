@@ -1,0 +1,158 @@
+"""Three-term roofline analysis over the dry-run artifacts.
+
+    compute    = HLO_dot_FLOPs_per_chip / peak_bf16
+    memory     = HLO_HBM_bytes_per_chip / hbm_bw
+    collective = HLO_collective_bytes_per_chip / ici_link_bw
+
+All three come from the compiled, SPMD-partitioned HLO via
+``repro.roofline.hlo`` (while-loop trip counts included — XLA's own
+cost_analysis counts loop bodies once, verified in tests). MODEL_FLOPS
+uses 6·N·D (train), 2·N·D (prefill), 2·N_active·B (decode) so the
+useful-compute ratio exposes remat/redundancy waste.
+
+Usage:
+  python -m repro.roofline.analysis [--glob '*pod*'] [--out artifacts/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.config import DEFAULT_HW
+from repro.roofline.hlo import analyze_hlo
+
+ART = Path("artifacts") / "dryrun"
+
+
+@dataclass
+class CellRoofline:
+    name: str
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    hbm_gb_per_chip: float
+    coll_gb_per_chip: float
+    loops: list
+    collective_breakdown: dict
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap bound: the step can't be faster than the max term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time over the bound — the score being pushed up."""
+        hw = DEFAULT_HW
+        t_useful = self.model_flops / hw.peak_bf16_flops
+        return t_useful / self.step_time_s if self.step_time_s else 0.0
+
+
+def model_flops_for(rec: dict) -> float:
+    """Per-chip useful FLOPs for the step."""
+    chips = rec["num_devices"]
+    kind = rec.get("kind")
+    if kind == "gcn":
+        g = rec["graph"]
+        F_in, F_out = 500, 128  # overridden below if present
+        flops = 2.0 * g["E"] * F_in + 2.0 * g["V"] * F_in * F_out
+        return flops / chips
+    n = rec["active_param_count"]
+    B = rec["global_batch"]
+    S = rec["seq_len"]
+    if kind == "train":
+        return 6.0 * n * B * S / chips
+    if kind == "prefill":
+        return 2.0 * n * B * S / chips
+    return 2.0 * n * B / chips  # decode: one token
+
+
+def analyze_cell(json_path: Path, hw=DEFAULT_HW) -> CellRoofline | None:
+    rec = json.loads(json_path.read_text())
+    hlo_path = json_path.with_suffix("").with_suffix("")  # strip .json
+    hlo_gz = json_path.parent / (json_path.stem + ".hlo.gz")
+    if not hlo_gz.exists():
+        return None
+    with gzip.open(hlo_gz, "rt") as f:
+        counts = analyze_hlo(f.read())
+
+    scale = rec.get("round_scale", 1.0)  # GCN cells extrapolate rounds
+    flops = counts.dot_flops * scale
+    hbm = counts.hbm_bytes * scale
+    coll = counts.total_collective_bytes * scale
+
+    compute_s = flops / hw.peak_bf16_flops
+    memory_s = hbm / hw.hbm_bandwidth
+    collective_s = coll / hw.ici_link_bandwidth
+    dom = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return CellRoofline(
+        name=json_path.stem, arch=rec["arch"], shape=rec["shape"],
+        mesh=rec["mesh"], compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dom,
+        model_flops=model_flops_for(rec), hlo_flops=flops,
+        hbm_gb_per_chip=hbm / 2**30, coll_gb_per_chip=coll / 2**30,
+        loops=counts.loops,
+        collective_breakdown={k: v * scale for k, v in
+                              counts.collective_bytes.items()})
+
+
+def render_table(cells: list[CellRoofline]) -> str:
+    head = ("| cell | compute s | memory s | collective s | dominant | "
+            "useful ratio | roofline frac |\n"
+            "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.mesh)):
+        rows.append(
+            f"| {c.arch}/{c.shape}/{c.mesh} | {c.compute_s:.3e} | "
+            f"{c.memory_s:.3e} | {c.collective_s:.3e} | {c.dominant} | "
+            f"{c.useful_ratio:.2f} | {c.roofline_fraction:.2%} |")
+    return head + "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--glob", default="*.json")
+    ap.add_argument("--out", default="artifacts/roofline.md")
+    args = ap.parse_args()
+
+    cells = []
+    for p in sorted(ART.glob(args.glob)):
+        if p.name.endswith(".fail.txt"):
+            continue
+        try:
+            c = analyze_cell(p)
+        except Exception as e:
+            print(f"[warn] {p.name}: {type(e).__name__}: {e}")
+            continue
+        if c:
+            cells.append(c)
+            print(f"{c.name}: comp={c.compute_s:.2e}s mem={c.memory_s:.2e}s "
+                  f"coll={c.collective_s:.2e}s dom={c.dominant} "
+                  f"useful={c.useful_ratio:.2f} frac={c.roofline_fraction:.1%}")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(render_table(cells))
+    js = [c.__dict__ | {"useful_ratio": c.useful_ratio,
+                        "roofline_fraction": c.roofline_fraction,
+                        "step_time_s": c.step_time_s} for c in cells]
+    Path(str(out) + ".json").write_text(json.dumps(js, indent=1, default=str))
+    print(f"wrote {out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import engine
+
+__all__ = ["engine"]

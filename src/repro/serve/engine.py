@@ -1,0 +1,130 @@
+"""Batched serving engine: continuous-batching decode over a fixed slot
+pool (the paper's domain is inference; this is the LM-side serving
+substrate used by examples/lm_serve.py and the decode dry-run cells).
+
+Design: N slots, each holding one request's KV-cache rows. Prefill fills
+a slot (one request at a time — prefill and decode phases are separately
+jitted, as in production engines); every decode step advances ALL active
+slots one token (padding slots just recompute garbage — the standard
+static-shape trade). Finished requests free their slot for the next
+queued request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LMConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: LMConfig, params, *, slots: int = 4,
+                 max_len: int = 512, rules=None, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.rules = rules
+        self.temperature = temperature
+        self.state = lm.init_decode_state(cfg, slots, max_len)
+        self.active: list[Request | None] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)  # per-slot lengths
+        self.queue: list[Request] = []
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # --- jitted bodies -------------------------------------------------
+    def _prefill_impl(self, params, caches, tokens, slot):
+        """Prefill one request into cache rows [slot]. tokens: (1, S)."""
+        sub = jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+            caches)
+        st = lm.DecodeState(caches=sub, pos=jnp.zeros((), jnp.int32))
+        last_h, st2 = lm.prefill(self.cfg, params, tokens, st,
+                                 rules=self.rules)
+        merged = jax.tree.map(
+            lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                full, part.astype(full.dtype), slot, axis=1),
+            caches, st2.caches)
+        W = lm.lm_head_matrix(params.get("head", {}), params["embed"], self.cfg)
+        logits = (last_h @ W.astype(last_h.dtype)).astype(jnp.float32)
+        return logits[0], merged
+
+    def _decode_impl(self, params, caches, tokens, pos):
+        """One decode step for all slots. tokens: (slots, 1); pos: (slots,)."""
+        # per-slot positions differ: run with per-slot pos via vmap-style
+        # masking — we use the max pos for cache writes at distinct slots,
+        # so each slot's cache row is updated at its own position using
+        # a scatter built from pos.
+        st = lm.DecodeState(caches=caches, pos=pos)
+        hidden, new_caches, _ = lm.forward_hidden(
+            self.cfg, params, tokens, rules=self.rules, remat=False,
+            caches=caches, pos=pos, positions=pos[:, None])
+        W = lm.lm_head_matrix(params.get("head", {}), params["embed"], self.cfg)
+        logits = (hidden[:, -1] @ W.astype(hidden.dtype)).astype(jnp.float32)
+        return logits, new_caches
+
+    # --- scheduling ----------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt[None, :])
+                logits, merged = self._prefill(
+                    self.params, self.state.caches, toks, s)
+                self.state = lm.DecodeState(merged, self.state.pos,
+                                            self.state.memory)
+                self.pos[s] = len(req.prompt)
+                nxt = int(jnp.argmax(logits))
+                req.out.append(nxt)
+                self.active[s] = req
+
+    def step(self):
+        """One engine tick: admit + one decode step for all active slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, r in enumerate(self.active):
+            if r is not None and r.out:
+                toks[s, 0] = r.out[-1]
+        logits, new_caches = self._decode(
+            self.params, self.state.caches, jnp.asarray(toks),
+            jnp.asarray(self.pos))
+        self.state = lm.DecodeState(new_caches, self.state.pos,
+                                    self.state.memory)
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.pos[s] += 1
+            nxt = int(jnp.argmax(logits[s]))
+            r.out.append(nxt)
+            if len(r.out) >= r.max_new or self.pos[s] >= self.max_len - 1:
+                r.done = True
+                self.active[s] = None
+
+    def run_until_done(self, max_ticks: int = 1000):
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            self.step()
+            if not self.queue and not any(self.active):
+                break
+        return done

@@ -1,0 +1,15 @@
+from .rules import (
+    ShardingRules,
+    decode_rules,
+    named_sharding,
+    prefill_rules,
+    train_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "decode_rules",
+    "named_sharding",
+    "prefill_rules",
+    "train_rules",
+]

@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules.
+
+Every parameter/activation in ``repro.nn`` is annotated with *logical* axis
+names; a :class:`ShardingRules` table maps logical names to physical mesh
+axes. Hillclimbing a sharding layout = editing one table, not the model.
+
+Physical axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod. ``data`` (x ``pod``) is the FSDP/DP axis, ``model`` the TP axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Sequence
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = str | tuple[str, ...] | None
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Mapping[str, Axis]
+
+    def spec(self, *logical: str | None) -> P:
+        """Translate logical axis names to a PartitionSpec."""
+        phys: list[Axis] = []
+        used: set[str] = set()
+        for name in logical:
+            ax = self.rules.get(name) if name else None
+            # one physical axis may appear at most once in a spec
+            if ax is None:
+                phys.append(None)
+                continue
+            axs = (ax,) if isinstance(ax, str) else tuple(ax)
+            axs = tuple(a for a in axs if a not in used)
+            used.update(axs)
+            if not axs:
+                phys.append(None)
+            elif len(axs) == 1:
+                phys.append(axs[0])
+            else:
+                phys.append(axs)
+        while phys and phys[-1] is None:
+            phys.pop()
+        return P(*phys)
+
+    def with_(self, **updates: Axis) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(updates)
+        return ShardingRules(d)
+
+
+def _base(batch_axes: Axis) -> dict[str, Axis]:
+    return {
+        # --- parameter logical axes ---
+        "embed": "data",       # FSDP: shard d_model dim of weights over data
+        "heads": "model",      # TP over attention heads
+        "kv_heads": "model",
+        "mlp": "model",        # TP over FFN hidden
+        "vocab": "model",      # vocab-parallel embedding / lm head
+        "expert": None,        # expert dim (EP maps it to "model")
+        "kv_lora": None,
+        "ssm_inner": "model",
+        "layers": None,        # scan dim, never sharded
+        "conv_w": None,
+        # --- activation logical axes ---
+        "act_batch": batch_axes,
+        "act_seq": None,       # sequence parallelism maps this to "model"
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_seq": None,    # decode: KV-cache length sharding
+        "act_mlp": "model",
+        "act_expert": None,
+        "act_vocab": "model",
+        "act_state_heads": "model",  # SSM/WKV recurrent state heads
+    }
+
+
+def train_rules(multi_pod: bool, sequence_parallel: bool = True) -> ShardingRules:
+    batch: Axis = ("pod", "data") if multi_pod else "data"
+    r = _base(batch)
+    if sequence_parallel:
+        r["act_seq"] = "model"  # residual stream seq-sharded between blocks
+    return ShardingRules(r)
+
+
+def prefill_rules(multi_pod: bool) -> ShardingRules:
+    batch: Axis = ("pod", "data") if multi_pod else "data"
+    r = _base(batch)
+    r["embed"] = None  # inference: keep weights resident, no FSDP regather
+    r["act_seq"] = "model"
+    return ShardingRules(r)
+
+
+def decode_rules(multi_pod: bool) -> ShardingRules:
+    batch: Axis = ("pod", "data") if multi_pod else "data"
+    r = _base(batch)
+    r["embed"] = None
+    # decode attention: shard the KV cache along its length; partial-softmax
+    # reductions become tiny all-reduces over "model" (works even when
+    # kv_heads < model axis, e.g. glm4 kv=2)
+    r["act_kv_seq"] = "model"
+    r["act_heads"] = None
+    r["heads"] = "model"
+    return ShardingRules(r)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...],
+                  axis_sizes: Mapping[str, int]) -> P:
+    """Drop mesh axes whose size does not divide the tensor dim (small
+    archs — whisper-tiny heads=6 on a 16-wide model axis — replicate those
+    dims instead of failing)."""
+    out: list[Axis] = []
+    for d, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        keep: list[str] = []
+        size = shape[d]
+        for a in axs:
+            n = axis_sizes.get(a, 1)
+            if size % n == 0 and n > 1:
+                keep.append(a)
+                size //= n
+            elif n == 1:
+                keep.append(a)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sanitize_tree(abs_tree, spec_tree, mesh) -> object:
+    """tree-wise sanitize_spec for (ShapeDtypeStruct, PartitionSpec) pairs."""
+    import jax
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda a, s: sanitize_spec(s, a.shape, sizes), abs_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from . import optimizer
+
+__all__ = ["optimizer"]

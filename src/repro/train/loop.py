@@ -1,0 +1,92 @@
+"""Training loop: jit'd step + data prefetch + async checkpointing +
+preemption handling + (optional) elastic resume. Works single-device
+(CPU examples/tests) and on any mesh via the same step builders the
+dry-run lowers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.config import LMConfig
+from repro.data.tokens import PrefetchIterator, SyntheticLM, TokenDataConfig
+from repro.distributed.fault_tolerance import PreemptionGuard, StragglerPolicy
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.train import optimizer as optlib
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    opt: optlib.AdamWConfig = field(default_factory=optlib.AdamWConfig)
+
+
+def train(cfg: LMConfig, tcfg: TrainConfig, *, rules=None, mesh=None,
+          resume: bool = True, hooks: list[Callable] | None = None) -> dict:
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = lm.lm_init(cfg, key)
+    opt_state = optlib.init(params)
+    start_step = 0
+
+    if resume:
+        try:
+            (params, opt_state), start_step = ckpt.restore(
+                tcfg.ckpt_dir, (params, opt_state))
+            print(f"[train] resumed from step {start_step}")
+        except FileNotFoundError:
+            pass
+
+    step_fn = jax.jit(make_train_step(cfg, rules, tcfg.opt), donate_argnums=(0, 1))
+
+    data = SyntheticLM(TokenDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=256 if cfg.frontend == "none"
+        and not cfg.is_encdec else 128, global_batch=8, seed=tcfg.seed))
+    it = PrefetchIterator(data, start_step=start_step)
+    straggler = StragglerPolicy(deadline_s=30.0)
+    saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+    history = []
+
+    with PreemptionGuard() as guard:
+        t0 = time.time()
+        for step in range(start_step, tcfg.steps):
+            _, batch = straggler.fetch(it.q)
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            if cfg.is_encdec:
+                jb["frames"] = 0.01 * jnp.ones(
+                    (jb["tokens"].shape[0], cfg.frontend_seq_len, cfg.d_model),
+                    jnp.bfloat16)
+            if cfg.frontend == "patch_stub":
+                jb["patches"] = 0.01 * jnp.ones(
+                    (jb["tokens"].shape[0], cfg.frontend_seq_len, cfg.d_model),
+                    jnp.bfloat16)
+            params, opt_state, metrics = step_fn(params, opt_state, jb)
+            if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                print(f"[train] step={step} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} ({dt:.1f}s)")
+                history.append({"step": step, **m})
+            for h in hooks or []:
+                h(step, params, metrics)
+            if tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
+                saver.save(step + 1, (params, opt_state))
+            if guard.should_stop:
+                print(f"[train] preemption at step {step}; checkpointing")
+                saver.wait()
+                ckpt.save(tcfg.ckpt_dir, step + 1, (params, opt_state))
+                break
+    saver.wait()
+    it.close()
+    return {"history": history, "params": params, "opt_state": opt_state,
+            "straggler_reused": straggler.reused}

@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: device count deliberately NOT forced here —
+smoke tests and benches should see the 1 real CPU device. Multi-device
+tests live in files that spawn a subprocess or set XLA_FLAGS via
+pytest-forked-style isolation (see test_distributed_gcn.py)."""
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,22 @@
+"""Distributed MultiGCN executor == single-device oracle, on 8 host
+devices (2D and 3D torus), across message-passing models and rounds.
+
+Runs in a subprocess because the device count must be set before jax
+initializes (the main pytest process keeps the real 1-CPU view)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_equivalence_8dev():
+    script = Path(__file__).parent / "_distributed_gcn_main.py"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL_OK" in r.stdout

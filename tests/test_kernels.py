@@ -1,0 +1,74 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
+Hypothesis drives the spmm COO generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import kernel as fak, ref as far
+from repro.kernels.matmul import kernel as mmk, ref as mmr
+from repro.kernels.spmm import ops as spo, ref as spr
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hkv,G,Sq,Skv,D,causal,window", [
+    (1, 1, 1, 128, 128, 64, True, 0),
+    (2, 2, 2, 128, 256, 64, True, 0),
+    (1, 2, 4, 256, 128, 32, False, 0),
+    (1, 1, 2, 256, 256, 128, True, 96),
+])
+def test_flash_kernel_sweep(dtype, B, Hkv, G, Sq, Skv, D, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (B, Hkv, G, Sq, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Hkv, Skv, D)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, Hkv, Skv, D)) * 0.5).astype(dtype)
+    out, _ = fak.flash_attention_fwd(q, k, v, scale=1.0 / np.sqrt(D),
+                                     causal=causal, window=window,
+                                     block_q=64, block_k=64, interpret=True)
+    ref = far.attention_ref(q, k, v, scale=1.0 / np.sqrt(D), causal=causal,
+                            window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,act", [
+    (128, 256, 128, "none"), (256, 128, 384, "relu"), (128, 512, 128, "gelu"),
+])
+def test_matmul_kernel_sweep(dtype, M, K, N, act):
+    k1, k2 = jax.random.split(KEY)
+    x = (jax.random.normal(k1, (M, K)) * 0.3).astype(dtype)
+    w = (jax.random.normal(k2, (K, N)) * 0.3).astype(dtype)
+    b = jnp.ones((N,), dtype) * 0.1
+    y = mmk.matmul_fused(x, w, b, act=act, interpret=True)
+    ref = mmr.matmul_fused_ref(x, w, b, act=act)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_repl=st.integers(4, 200),
+    n_slots=st.integers(1, 300),
+    n_edges=st.integers(1, 800),
+    feat=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_kernel_property(n_repl, n_slots, n_edges, feat, seed):
+    rng = np.random.default_rng(seed)
+    er = rng.integers(0, n_repl, n_edges).astype(np.int32)
+    es = rng.integers(0, n_slots, n_edges).astype(np.int32)
+    ew = rng.normal(size=n_edges).astype(np.float32)
+    replica = jnp.asarray(rng.normal(size=(n_repl, feat)).astype(np.float32))
+    seg, rows, w = spo.build_ell_layout(er, es, ew, n_slots)
+    acc = spo.aggregate(replica, jnp.asarray(seg), jnp.asarray(rows),
+                        jnp.asarray(w), num_slots=n_slots)
+    ref = spr.spmm_coo_ref(replica, jnp.asarray(er), jnp.asarray(es),
+                           jnp.asarray(ew), n_slots)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)

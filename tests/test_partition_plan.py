@@ -1,0 +1,124 @@
+"""Property tests (hypothesis) for the paper's §4.3 partition and the
+communication planner's conservation invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_gcn_config
+from repro.core.graph import Graph, erdos
+from repro.core.partition import TorusMesh, make_partition
+from repro.core.plan import build_plan
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_bits=st.integers(0, 4),
+    x_bits=st.integers(0, 6),
+    v=st.integers(1, 1 << 16),
+)
+def test_bitfield_partition_invariants(n_bits, x_bits, v):
+    from repro.core.partition import RoundPartition
+
+    N = 1 << n_bits
+    part = RoundPartition(N, n_bits, x_bits, num_rounds=1 << 10,
+                          num_vertices=1 << 16)
+    node, slot, rnd = part.node_of(v), part.slot_of(v), part.round_of(v)
+    # the bit fields must reconstruct the vID exactly
+    assert (int(rnd) << (n_bits + x_bits)) | (int(slot) << n_bits) | int(node) == v
+    assert 0 <= node < N
+    assert 0 <= slot < part.slots_per_round
+    # local index is round-major and bijective per node
+    assert part.local_index(v) == (int(rnd) << x_bits) | int(slot)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_round_capacity_respects_buffer(seed):
+    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
+    part = make_partition(cfg, 8, num_vertices=4096)
+    # paper rule: per-round per-node vertices * feature bytes <= alpha * M
+    S = cfg.graph.feat_in * 4
+    assert part.slots_per_round * S <= cfg.alpha * cfg.agg_buffer_bytes
+    assert part.slots_per_round * 2 * S > cfg.alpha * cfg.agg_buffer_bytes \
+        or part.x_bits == 0
+
+
+@pytest.mark.parametrize("model", ["oppe", "oppr", "oppm"])
+@pytest.mark.parametrize("rounds", [True, False])
+def test_plan_conservation(model, rounds):
+    """Every edge appears exactly once in the aggregation COO; every
+    remote replica is deposited exactly once; OPPM never moves more
+    hop-bytes than OPPR unicast."""
+    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
+    cfg = dataclasses.replace(cfg, message_passing=model, use_rounds=rounds,
+                              agg_buffer_bytes=8 << 10)
+    g = erdos(512, 4096, seed=11)
+    mesh = TorusMesh((2, 4))
+    part = make_partition(cfg, 8, num_vertices=g.num_vertices)
+    plan = build_plan(cfg, g, mesh, part)
+
+    # edge conservation: COO entries == |E|
+    assert int((plan.edge_w != 0).sum()) == g.num_edges
+    # each (round, node, slot) in the COO belongs to that round/node
+    for r in range(plan.num_rounds):
+        for n in range(plan.num_nodes):
+            sl = plan.edge_slot[r, n][plan.edge_w[r, n] != 0]
+            assert (sl < part.slots_per_round).all()
+
+    # deposits: every allocated replica row receives exactly one deposit
+    # (from relay or local copy)
+    R, N = plan.num_rounds, plan.num_nodes
+    filled = np.zeros((R, N, plan.replica_rows), np.int32)
+    last = plan.phases[-1]
+    for r in range(R):
+        for n in range(N):
+            for h in range(last.dep.shape[2]):
+                rows = last.dep_slot[r, n, h][last.dep[r, n, h]]
+                np.add.at(filled[r, n], rows, 1)
+            rows = last.lc_dst[r, n][last.lc_valid[r, n]]
+            np.add.at(filled[r, n], rows, 1)
+            rows = plan.repl_lc_dst[r, n][plan.repl_lc_valid[r, n]]
+            np.add.at(filled[r, n], rows, 1)
+    used = np.zeros((R, N, plan.replica_rows), bool)
+    for r in range(R):
+        for n in range(N):
+            used[r, n][plan.edge_repl[r, n][plan.edge_w[r, n] != 0]] = True
+    assert (filled[used] == 1).all(), "each used replica row deposited once"
+    assert (filled <= 1).all(), "no double deposits"
+
+
+def test_multicast_cheaper_than_unicast():
+    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
+    g = erdos(1024, 16384, seed=3)
+    mesh = TorusMesh((4, 4))
+    part = make_partition(cfg, 16, num_vertices=g.num_vertices)
+    stats = {}
+    for model in ("oppe", "oppr", "oppm"):
+        c = dataclasses.replace(cfg, message_passing=model)
+        plan = build_plan(c, g, mesh, part)
+        stats[model] = plan.stats["link_feat_hops"]
+    assert stats["oppm"] < stats["oppr"] < stats["oppe"]
+
+
+def test_bidirectional_rings_reduce_hops():
+    """The §Perf bidir iteration: shorter-way routing must strictly cut
+    hop-weighted traffic, agree with the analytical model, and preserve
+    the plan conservation invariants."""
+    from repro.core import cost_model as cm
+
+    cfg = get_gcn_config("gcn-gcn-lj", "smoke")
+    g = erdos(2048, 16384, seed=7)
+    mesh = TorusMesh((8, 2))
+    part = make_partition(cfg, 16, num_vertices=g.num_vertices)
+    c = dataclasses.replace(cfg, message_passing="oppm", use_rounds=True)
+    uni = build_plan(c, g, mesh, part)
+    bi = build_plan(c, g, mesh, part, bidir=True)
+    assert bi.stats["link_feat_hops"] < uni.stats["link_feat_hops"]
+    # executable plan and analytical model agree in both modes
+    for bidir, plan in ((False, uni), (True, bi)):
+        rep = cm.analyze(c, g, mesh, part=part, bidir=bidir)
+        assert plan.stats["link_feat_hops"] == int(rep.packets.sum())
+    # conservation: every edge still lands exactly once
+    assert int((bi.edge_w != 0).sum()) == g.num_edges

@@ -1,0 +1,82 @@
+"""Roofline HLO parser: while-loop trip scaling must reconcile the scanned
+and unrolled versions of the same program (the thing cost_analysis gets
+wrong), and collective bytes must match hand counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import analyze_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_scaling():
+    D, L = 64, 12
+
+    def f_scan(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    def f_unroll(w, x):
+        h = x
+        for i in range(L):
+            h = jnp.tanh(h @ w[i])
+        return h
+
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+    c_scan = analyze_hlo(_compile_text(f_scan, w, x))
+    c_unroll = analyze_hlo(_compile_text(f_unroll, w, x))
+
+    # XLA's own cost_analysis undercounts the scan by ~L; the parser fixes it
+    assert any(t == L for _, t in c_scan.loops), c_scan.loops
+    assert c_scan.dot_flops == pytest.approx(c_unroll.dot_flops, rel=0.01)
+    expected = 2.0 * L * 4 * D * D
+    assert c_scan.dot_flops == pytest.approx(expected, rel=0.01)
+
+
+def test_cost_analysis_undercounts_scans():
+    """Documents WHY the parser exists (guards against upstream changes)."""
+    D, L = 32, 8
+
+    def f_scan(w, x):
+        def body(h, wl):
+            return h @ wl, None
+        return jax.lax.scan(body, x, w)[0]
+
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+    ca = jax.jit(f_scan).lower(w, x).compile().cost_analysis()
+    assert ca["flops"] < 2 * L * 4 * D * D * 0.5  # counted once, not L times
+
+
+def test_nested_scan_multiplies():
+    D, L1, L2 = 16, 5, 7
+
+    def f(w, x):
+        def outer(h, wl):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ wl), None
+            h2, _ = jax.lax.scan(inner, h, None, length=L2)
+            return h2, None
+        return jax.lax.scan(outer, x, w)[0]
+
+    w = jax.ShapeDtypeStruct((L1, D, D), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, D), jnp.float32)
+    c = analyze_hlo(_compile_text(f, w, x))
+    assert c.dot_flops == pytest.approx(2.0 * L1 * L2 * 2 * D * D, rel=0.05)
+
+
+def test_dot_flops_formula():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    c = analyze_hlo(_compile_text(f, a, b))
+    assert c.dot_flops == pytest.approx(2 * 128 * 256 * 64, rel=0.01)

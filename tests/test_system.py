@@ -1,0 +1,68 @@
+"""System-level sanity: registry, configs, assigned-cell coverage."""
+import pytest
+
+from repro.config import (
+    LM_SHAPES,
+    get_gcn_config,
+    get_lm_config,
+    list_gcn_archs,
+    list_lm_archs,
+    lm_cells,
+)
+
+ASSIGNED = [
+    "minitron-8b", "glm4-9b", "starcoder2-15b", "mistral-large-123b",
+    "zamba2-2.7b", "whisper-tiny", "internvl2-76b", "mixtral-8x7b",
+    "deepseek-v2-lite-16b", "rwkv6-1.6b",
+]
+
+# published parameter counts (B) — analytic count must land within 12 %
+PUBLISHED_PARAMS = {
+    "minitron-8b": 8.0, "glm4-9b": 9.4, "starcoder2-15b": 16.0,
+    "mistral-large-123b": 123.0, "whisper-tiny": 0.039,
+    "internvl2-76b": 70.6,  # LLM backbone only (llama-3-70B class)
+    "mixtral-8x7b": 46.7, "deepseek-v2-lite-16b": 15.7, "rwkv6-1.6b": 1.6,
+    "zamba2-2.7b": 2.7,
+}
+
+
+def test_all_assigned_archs_registered():
+    assert sorted(ASSIGNED) == list_lm_archs()
+
+
+def test_param_counts_match_published():
+    for arch, published in PUBLISHED_PARAMS.items():
+        got = get_lm_config(arch).param_count() / 1e9
+        tol = 0.15 if arch == "zamba2-2.7b" else 0.12  # zamba2: LoRA deltas
+        assert abs(got - published) / published < tol, (arch, got, published)
+
+
+def test_cell_matrix_covers_40():
+    cells = lm_cells(include_skipped=True)
+    assert len(cells) == 40  # 10 archs x 4 shapes
+    runnable = [c for c in cells if c[2] == "run"]
+    # skips: long_500k for 6 full-attention archs + whisper enc-dec
+    assert len(runnable) == 33
+    for arch, shape, status in cells:
+        if shape == "long_500k" and status == "run":
+            assert arch in ("zamba2-2.7b", "rwkv6-1.6b", "mixtral-8x7b")
+
+
+def test_moe_active_params():
+    mix = get_lm_config("mixtral-8x7b")
+    assert mix.active_param_count() < 0.35 * mix.param_count()
+    ds = get_lm_config("deepseek-v2-lite-16b")
+    assert ds.active_param_count() < 0.25 * ds.param_count()
+
+
+def test_gcn_workloads_registered():
+    assert len(list_gcn_archs()) == 24  # 3 models x 8 graphs
+    cfg = get_gcn_config("gcn-gcn-rd")
+    assert cfg.graph.avg_degree == 489.0
+    assert cfg.graph.feat_in == 602
+
+
+def test_shapes_table():
+    assert LM_SHAPES["train_4k"].global_batch == 256
+    assert LM_SHAPES["long_500k"].seq_len == 524_288
+    assert LM_SHAPES["decode_32k"].kind == "decode"
