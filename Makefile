@@ -1,0 +1,13 @@
+PY ?= python
+
+.PHONY: smoke test bench
+
+# engine example + tier-1 tests, multi-device (8 forced host devices)
+smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite smoke
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

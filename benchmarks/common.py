@@ -4,21 +4,25 @@ Graphs are degree-matched scaled twins (SNAP data is not redistributable
 offline; see DESIGN.md §5.6). ``SCALE`` trades fidelity for runtime; the
 fig11 vertex-scale sweep demonstrates the reported ratios are stable in
 scale, which is what makes the twin methodology sound.
+
+Each (cfg, graph, mesh) workload becomes one ``GCNEngine`` session;
+``suite_for`` derives the five paper configurations from it with
+``engine.analyze`` (the analytical cost model — no plan construction, so
+paper-scale graphs are tractable), sharing the engine's one vertex
+partition across all variants.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np
 
 from repro.config import GCNConfig, get_gcn_config
-from repro.core import cost_model as cm
-from repro.core.partition import TorusMesh, make_partition
 from repro.core.rmat import build_graph
+from repro.gcn import GCNEngine
 
 SCALES = {"rd": 20, "or": 40, "lj": 40, "rm19": 8, "rm20": 16, "rm21": 32}
-MESH_4X4 = TorusMesh((4, 4))
+MESH_4X4 = (4, 4)
 
 
 def load(gname: str, model: str = "gcn", scale: int | None = None):
@@ -27,12 +31,15 @@ def load(gname: str, model: str = "gcn", scale: int | None = None):
     return cfg, g
 
 
-def suite_for(cfg: GCNConfig, g, mesh: TorusMesh):
-    part = make_partition(cfg, mesh.num_nodes, num_vertices=g.num_vertices)
+def engine_for(cfg: GCNConfig, g, mesh_dims) -> GCNEngine:
+    return GCNEngine.build(cfg, g, tuple(mesh_dims))
+
+
+def suite_for(cfg: GCNConfig, g, mesh_dims):
+    eng = engine_for(cfg, g, mesh_dims)
 
     def an(mpm, rounds, name):
-        c = dataclasses.replace(cfg, message_passing=mpm, use_rounds=rounds)
-        return cm.analyze(c, g, mesh, part=part, name=name)
+        return eng.analyze(message_passing=mpm, use_rounds=rounds, name=name)
 
     return {
         "oppe": an("oppe", False, "oppe"),

@@ -1,5 +1,6 @@
 """Fig. 3: characterization of the OPPE baseline — redundancy ratios and
 bandwidth/latency sensitivity (the two observations motivating MultiGCN).
+Variants derive from one ``GCNEngine`` session per graph (``suite_for``).
 
 Paper: redundant transmissions 78–96 %; redundant DRAM 25–99.9 %;
 bandwidth-bound (linear speedup with net BW when DRAM BW sufficient);

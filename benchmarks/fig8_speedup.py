@@ -1,5 +1,6 @@
 """Fig. 8: speedup of MultiGCN-TMM / -SREM / -TMM+SREM over the
-OPPE-based MultiAccSys across GCN/GIN/SAGE x RD/OR/LJ (twins).
+OPPE-based MultiAccSys across GCN/GIN/SAGE x RD/OR/LJ (twins), via one
+``GCNEngine`` session per workload (``suite_for``).
 
 Paper: TMM 2.9x GM, SREM 1.9x GM, TMM+SREM 4~12x (GM 5.8x)."""
 from __future__ import annotations

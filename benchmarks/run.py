@@ -2,13 +2,19 @@
 microbenches. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig8,table6]
+  PYTHONPATH=src python -m benchmarks.run --suite smoke   # engine example
+                                                          # + tier-1 tests
+                                                          # on 8 host devices
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import time
 import traceback
+from pathlib import Path
 
 MODULES = [
     "fig3_characterization",
@@ -21,10 +27,44 @@ MODULES = [
 ]
 
 
+def run_smoke() -> int:
+    """One-command multi-device smoke: the GCNEngine example (8 forced
+    host devices) plus the tier-1 test suite. Each step runs in its own
+    subprocess so the XLA device-count flag is set before jax initializes
+    (tests that need a different view re-exec themselves; see
+    tests/conftest.py)."""
+    root = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (str(root / "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    steps = [
+        ("engine-example", [sys.executable,
+                            str(root / "examples" / "gcn_multinode.py")]),
+        ("tier1-tests", [sys.executable, "-m", "pytest", "-q",
+                         str(root / "tests")]),
+    ]
+    rc = 0
+    for name, cmd in steps:
+        print(f"# smoke:{name}: {' '.join(cmd)}", flush=True)
+        r = subprocess.run(cmd, env=env, cwd=root)
+        print(f"# smoke:{name} -> {'OK' if r.returncode == 0 else 'FAIL'}",
+              flush=True)
+        rc = rc or r.returncode
+    return rc
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of module stems")
+    ap.add_argument("--suite", default="",
+                    help="'smoke' = engine example + tier-1 tests "
+                         "(8 host devices)")
     args = ap.parse_args()
+    if args.suite == "smoke":
+        sys.exit(run_smoke())
+    elif args.suite:
+        sys.exit(f"unknown suite {args.suite!r} (expected 'smoke')")
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
     print("name,us_per_call,derived")

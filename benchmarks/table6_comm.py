@@ -1,5 +1,7 @@
 """Table 6: network transmissions and DRAM accesses of MultiGCN
-configurations, normalized to the OPPE baseline.
+configurations, normalized to the OPPE baseline. All five variants per
+workload derive from one ``GCNEngine`` session (``suite_for``), sharing
+its vertex partition.
 
 Paper GM: TMM 13%/75%, SREM 100%/66%, TMM+SREM 68%/27%."""
 from __future__ import annotations

@@ -1,6 +1,9 @@
 """Table 7: reduction of REDUNDANT transmissions / DRAM accesses of
 TMM+SREM vs OPPE, plus the two overheads (extra transmission latency from
-packet headers; round-partition preprocessing time).
+packet headers; round-partition preprocessing time). Variants derive
+from one ``GCNEngine`` session per workload (``suite_for``); the direct
+``make_partition`` call below deliberately bypasses the engine to time
+the partition step itself.
 
 Paper GM: -32% redundant transmissions, -100% redundant DRAM accesses,
 +0.21% transmission latency, +6.1% preprocessing."""

@@ -1,24 +1,20 @@
 """Quickstart: MultiGCN inference on a synthetic graph, single process.
 
-Builds a small RMAT graph, partitions it with the paper's bit-field round
-partition, runs the TMM+SREM distributed pipeline on a (1,1) "torus"
-(single device — the same code scales to the 512-chip dry-run mesh), and
-checks the result against the dense single-device oracle.
+Builds a small RMAT graph and a ``GCNEngine`` session on a (1,1) "torus"
+(single device — the same engine scales to the 512-chip dry-run mesh),
+runs the TMM+SREM distributed pipeline, and checks the result against
+the engine's dense single-device oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_gcn_config
-from repro.core import gcn_models as gm
-from repro.core.partition import TorusMesh
-from repro.core.plan import build_plan
-from repro.core.message_passing import shard_features, unshard_features
 from repro.core.rmat import rmat
+from repro.gcn import GCNEngine
 
 
 def main():
@@ -28,24 +24,19 @@ def main():
     print(f"graph: |V|={graph.num_vertices} |E|={graph.num_edges} "
           f"d̄={graph.avg_degree:.1f}")
 
-    mesh = jax.make_mesh((1, 1), ("x", "y"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    tor = TorusMesh((1, 1))
-    plan = gm.build_gcn_plan(cfg, graph, tor)
-    print(f"plan: rounds={plan.num_rounds} replica_rows={plan.replica_rows} "
-          f"multicast items={plan.stats['items']}")
+    engine = GCNEngine.build(cfg, graph, (1, 1))
+    print(f"plan: rounds={engine.plan.num_rounds} "
+          f"replica_rows={engine.plan.replica_rows} "
+          f"multicast items={engine.plan.stats['items']}")
 
     F = cfg.graph.feat_in
-    params = gm.gcn_params(cfg, jax.random.PRNGKey(0), [F, 64, 16])
+    engine.init_params(jax.random.PRNGKey(0), [F, 64, 16])
     feats = np.random.default_rng(0).normal(size=(graph.num_vertices, F)) \
         .astype(np.float32)
-    fs = jnp.asarray(shard_features(plan, feats))
 
-    out = gm.distributed_forward(cfg, params, plan, mesh, ("x", "y"), fs)
-    out_g = unshard_features(plan, np.asarray(out), graph.num_vertices)
-    ref = np.asarray(gm.reference_forward(cfg, params, graph,
-                                          jnp.asarray(feats)))
-    err = np.max(np.abs(out_g - ref)) / np.max(np.abs(ref))
+    out = engine.forward(feats)  # global (V, F) in -> global (V, 16) out
+    ref = engine.reference(feats)
+    err = np.max(np.abs(out - ref)) / np.max(np.abs(ref))
     print(f"2-layer GCN inference done; max rel err vs oracle = {err:.2e}")
     assert err < 1e-4
     print("OK")

@@ -3,7 +3,8 @@
 * graph / rmat / partition — graph substrate + §4.3 bit-field round partition
 * plan — static dimension-ordered multicast plans (OPPE/OPPR/OPPM)
 * message_passing — shard_map executor (ppermute relay, SREM round scan)
-* gcn_models — GCN/GIN/GraphSAGE + single-device oracles
+* gcn_models — GCN/GIN/GraphSAGE builders + single-device oracles
+  (user-facing execution: the ``repro.gcn.GCNEngine`` session API)
 * cost_model — paper-table analytical counters (transmissions/DRAM/energy)
 * moe_dispatch — the paper's one-put-per-multicast applied to MoE all-to-all
 """

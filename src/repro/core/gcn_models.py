@@ -1,5 +1,17 @@
-"""GCN / GIN / GraphSAGE on top of the MultiGCN communication runtime,
-plus the exact single-device references used for verification.
+"""Per-model GCN / GIN / GraphSAGE builders for the MultiGCN runtime.
+
+This module is the *low-level* layer: it only defines, per model, the
+three callables the :mod:`repro.gcn` registry wires into the shared
+execution path —
+
+  * ``*_prepare(graph) -> (graph', edge_weights)``
+  * ``*_init_layer(key, fan_in, fan_out) -> dict``
+  * ``*_combine(layer, agg, self_feats, last) -> array``
+
+plus the single-device oracle loop (``reference_loop``) both the engine
+and any standalone check share. All user-facing GCN execution lives in
+``repro.gcn.GCNEngine``; new aggregation semantics are added with
+``repro.gcn.register_model``, not by editing this file.
 
 Aggregation semantics (all expressed as edge weights in the plan so the
 executor stays model-agnostic):
@@ -11,117 +23,85 @@ static; the paper also runs inference with fixed weights.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import GCNConfig
-from repro.core import message_passing as mp
 from repro.core.graph import Graph
-from repro.core.partition import TorusMesh, make_partition
-from repro.core.plan import CommPlan, build_plan
 
 
 # ---------------------------------------------------------------------------
-# Plan construction with model-specific edge weights
+# Per-model edge-weight builders (registered with repro.gcn)
 # ---------------------------------------------------------------------------
 
 
-def model_graph_and_weights(cfg: GCNConfig, graph: Graph):
+def gcn_prepare(graph: Graph) -> tuple[Graph, np.ndarray]:
+    """Â = D^-1/2 (A + I) D^-1/2 expressed as per-edge weights."""
     din = graph.in_degrees().astype(np.float64)
-    if cfg.model == "gcn":
-        g2 = graph.with_self_loops()
-        d1 = din + 1.0
-        w = 1.0 / np.sqrt(d1[g2.dst] * d1[g2.src])
-        return g2, w.astype(np.float32)
-    if cfg.model == "gin":
-        g2 = graph.with_self_loops()
-        w = np.ones(g2.num_edges, np.float32)  # eps = 0: self weight 1+eps
-        return g2, w
-    if cfg.model == "sage":
-        w = (1.0 / np.maximum(din[graph.dst], 1.0)).astype(np.float32)
-        return graph, w
-    raise ValueError(cfg.model)
+    g2 = graph.with_self_loops()
+    d1 = din + 1.0
+    w = 1.0 / np.sqrt(d1[g2.dst] * d1[g2.src])
+    return g2, w.astype(np.float32)
 
 
-def build_gcn_plan(cfg: GCNConfig, graph: Graph, mesh: TorusMesh) -> CommPlan:
-    g2, w = model_graph_and_weights(cfg, graph)
-    part = make_partition(cfg, mesh.num_nodes, num_vertices=graph.num_vertices)
-    return build_plan(cfg, g2, mesh, part, edge_weights=w)
+def gin_prepare(graph: Graph) -> tuple[Graph, np.ndarray]:
+    g2 = graph.with_self_loops()
+    w = np.ones(g2.num_edges, np.float32)  # eps = 0: self weight 1+eps
+    return g2, w
+
+
+def sage_prepare(graph: Graph) -> tuple[Graph, np.ndarray]:
+    din = graph.in_degrees().astype(np.float64)
+    w = (1.0 / np.maximum(din[graph.dst], 1.0)).astype(np.float32)
+    return graph, w
 
 
 # ---------------------------------------------------------------------------
-# Parameters
+# Per-model parameters
 # ---------------------------------------------------------------------------
 
 
-def gcn_params(cfg: GCNConfig, key, dims: list[int]):
-    """dims = [feat_in, hidden..., out]."""
-    params = []
-    keys = jax.random.split(key, len(dims) - 1)
-    for i, k in enumerate(keys):
-        fi, fo = dims[i], dims[i + 1]
-        std = 1.0 / np.sqrt(fi)
-        layer = {"w": std * jax.random.normal(k, (fi, fo), jnp.float32),
-                 "b": jnp.zeros((fo,), jnp.float32)}
-        if cfg.model == "sage":
-            layer["w_self"] = std * jax.random.normal(
-                jax.random.fold_in(k, 1), (fi, fo), jnp.float32)
-        if cfg.model == "gin":
-            layer["w2"] = (1.0 / np.sqrt(fo)) * jax.random.normal(
-                jax.random.fold_in(k, 2), (fo, fo), jnp.float32)
-            layer["b2"] = jnp.zeros((fo,), jnp.float32)
-        params.append(layer)
-    return params
+def gcn_init_layer(key, fan_in: int, fan_out: int) -> dict:
+    std = 1.0 / np.sqrt(fan_in)
+    return {"w": std * jax.random.normal(key, (fan_in, fan_out), jnp.float32),
+            "b": jnp.zeros((fan_out,), jnp.float32)}
 
 
-def combine(cfg: GCNConfig, layer, agg, self_feats, last: bool):
-    """Combination phase (the MLP of the paper's Combination engine)."""
+def sage_init_layer(key, fan_in: int, fan_out: int) -> dict:
+    layer = gcn_init_layer(key, fan_in, fan_out)
+    std = 1.0 / np.sqrt(fan_in)
+    layer["w_self"] = std * jax.random.normal(
+        jax.random.fold_in(key, 1), (fan_in, fan_out), jnp.float32)
+    return layer
+
+
+def gin_init_layer(key, fan_in: int, fan_out: int) -> dict:
+    layer = gcn_init_layer(key, fan_in, fan_out)
+    layer["w2"] = (1.0 / np.sqrt(fan_out)) * jax.random.normal(
+        jax.random.fold_in(key, 2), (fan_out, fan_out), jnp.float32)
+    layer["b2"] = jnp.zeros((fan_out,), jnp.float32)
+    return layer
+
+
+# ---------------------------------------------------------------------------
+# Per-model combination (the MLP of the paper's Combination engine)
+# ---------------------------------------------------------------------------
+
+
+def gcn_combine(layer, agg, self_feats, last: bool):
     h = agg @ layer["w"] + layer["b"]
-    if cfg.model == "sage":
-        h = h + self_feats @ layer["w_self"]
-    if cfg.model == "gin":
-        h = jax.nn.relu(h)
-        h = h @ layer["w2"] + layer["b2"]
     return h if last else jax.nn.relu(h)
 
 
-# ---------------------------------------------------------------------------
-# Distributed forward (shard_map over the torus)
-# ---------------------------------------------------------------------------
+def sage_combine(layer, agg, self_feats, last: bool):
+    h = agg @ layer["w"] + layer["b"] + self_feats @ layer["w_self"]
+    return h if last else jax.nn.relu(h)
 
 
-def distributed_forward(cfg: GCNConfig, params, plan: CommPlan, mesh_jax,
-                        axis_names, feats_sharded):
-    """feats_sharded: (*dims, Vp, F) jnp array (sharded over the mesh).
-    Returns (*dims, Vp, F_out)."""
-    from jax.sharding import PartitionSpec as P
-
-    st = mp.exchange_statics(plan, axis_names)
-    pdev = mp.plan_device_arrays(plan)
-    nd = len(plan.mesh.dims)
-    plan_spec = P(None, *axis_names)  # (R, *dims, ...)
-    feat_spec = P(*axis_names)  # (*dims, Vp, F)
-
-    @functools.partial(
-        jax.shard_map, mesh=mesh_jax,
-        in_specs=(jax.tree.map(lambda _: plan_spec, pdev), feat_spec),
-        out_specs=P(*(tuple(axis_names) + (None, None, None))),
-    )
-    def _exchange(pdev, feats):
-        accs = mp.exchange_and_aggregate(st, pdev, feats)
-        return accs[(None,) * nd]  # re-add mesh dims for out_spec
-
-    x = feats_sharded
-    for li, layer in enumerate(params):
-        accs = _exchange(pdev, x)  # (*dims, R, slots, F)
-        agg = accs.reshape(accs.shape[:nd] + (-1, accs.shape[-1]))  # (*dims, Vp, F)
-        x = combine(cfg, layer, agg, x, last=li == len(params) - 1)
-    return x
+def gin_combine(layer, agg, self_feats, last: bool):
+    h = jax.nn.relu(agg @ layer["w"] + layer["b"])
+    h = h @ layer["w2"] + layer["b2"]
+    return h if last else jax.nn.relu(h)
 
 
 # ---------------------------------------------------------------------------
@@ -129,17 +109,16 @@ def distributed_forward(cfg: GCNConfig, params, plan: CommPlan, mesh_jax,
 # ---------------------------------------------------------------------------
 
 
-def reference_forward(cfg: GCNConfig, params, graph: Graph, feats):
-    """Exact dense-graph reference: segment-sum aggregation on one device."""
-    g2, w = model_graph_and_weights(cfg, graph)
-    src = jnp.asarray(g2.src)
-    dst = jnp.asarray(g2.dst)
-    wj = jnp.asarray(w)
-
-    x = feats
+def reference_loop(g2: Graph, edge_w: np.ndarray, combine, params, feats):
+    """Exact dense-graph oracle: segment-sum aggregation on one device,
+    with the SAME prepared graph / weights / combine callable as the
+    distributed path, so agreement checks are apples-to-apples."""
+    src, dst = jnp.asarray(g2.src), jnp.asarray(g2.dst)
+    wj = jnp.asarray(edge_w)
+    x = jnp.asarray(feats)
     for li, layer in enumerate(params):
         msgs = x[src] * wj[:, None]
-        agg = jnp.zeros_like(x, shape=(graph.num_vertices, x.shape[-1]))
+        agg = jnp.zeros_like(x, shape=(g2.num_vertices, x.shape[-1]))
         agg = agg.at[dst].add(msgs)
-        x = combine(cfg, layer, agg, x, last=li == len(params) - 1)
+        x = combine(layer, agg, x, last=li == len(params) - 1)
     return x

@@ -1,0 +1,81 @@
+"""Version compatibility shims for the jax API surface we use.
+
+The repo targets the current jax API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.set_mesh``); this
+container ships jax 0.4.x where those live under older names. Every
+mesh/shard_map touchpoint goes through this module so the version split
+lives in exactly one place.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.5
+    _AXIS_TYPE_AUTO = jax.sharding.AxisType.Auto
+except AttributeError:  # jax 0.4.x: no explicit-sharding axis types yet
+    _AXIS_TYPE_AUTO = None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    if _AXIS_TYPE_AUTO is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices,
+            axis_types=(_AXIS_TYPE_AUTO,) * len(axis_shapes))
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x).
+
+    Usable both as ``shard_map(f, mesh=...)`` and as a decorator factory
+    ``@shard_map(mesh=...)`` like the modern API.
+    """
+    if f is None:
+        return lambda g: shard_map(g, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for jit/lowering."""
+    sm = getattr(jax.sharding, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    if hasattr(mesh, "__enter__"):  # 0.4.x: Mesh is itself a context
+        return mesh
+    return contextlib.nullcontext()
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict (0.4.x returns ``[dict]``)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+try:  # jaxpr types were moved out of the trimmed jax.core namespace
+    from jax.extend.core import ClosedJaxpr as _ClosedJaxpr, Jaxpr as _Jaxpr
+except ImportError:
+    from jax.core import ClosedJaxpr as _ClosedJaxpr, Jaxpr as _Jaxpr
+
+
+def subjaxprs_in_params(params):
+    """Yield every sub-``Jaxpr`` held in a jaxpr equation's params
+    (version-independent replacement for ``jax.core.jaxprs_in_params``)."""
+    for v in params.values():
+        for x in v if isinstance(v, (tuple, list)) else (v,):
+            if isinstance(x, _ClosedJaxpr):
+                yield x.jaxpr
+            elif isinstance(x, _Jaxpr):
+                yield x

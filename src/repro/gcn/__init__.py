@@ -1,0 +1,34 @@
+"""User-facing GCN session API.
+
+``GCNEngine`` owns the mesh pair (jax ``Mesh`` + planner ``TorusMesh``),
+the process-wide communication-plan cache, and the compiled exchange;
+``register_model`` plugs new aggregation semantics into the shared
+execution path. The low-level layers it composes are
+``repro.core.plan`` (host-side mapping) and
+``repro.core.message_passing`` (SPMD executor).
+"""
+from repro.gcn.engine import (
+    GCNEngine,
+    PlanKey,
+    clear_plan_cache,
+    graph_fingerprint,
+    plan_cache_stats,
+)
+from repro.gcn.registry import (
+    ModelSpec,
+    get_model,
+    register_model,
+    registered_models,
+)
+
+__all__ = [
+    "GCNEngine",
+    "ModelSpec",
+    "PlanKey",
+    "clear_plan_cache",
+    "get_model",
+    "graph_fingerprint",
+    "plan_cache_stats",
+    "register_model",
+    "registered_models",
+]

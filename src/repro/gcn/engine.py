@@ -1,0 +1,465 @@
+"""``GCNEngine`` — the one-object session API for MultiGCN execution.
+
+The paper's pipeline is "one-time host-side graph mapping, then replay
+the static relay schedule many times" (§4.3). The engine owns everything
+that mapping produces so callers never rebuild it by hand:
+
+  * a single ``mesh_dims`` spec from which BOTH the jax ``Mesh`` and the
+    planner's ``TorusMesh`` are derived (they can never disagree);
+  * a process-wide **plan cache** keyed by (graph fingerprint, model,
+    message-passing model, rounds, mesh dims, buffer bytes, bidir) so
+    switching among oppe/oppr/oppm — or rebuilding an engine on the same
+    workload — reuses the host-side mapping work;
+  * the **compiled exchange**: one jitted layer step (shard_map exchange
+    + combination) reused across layers and calls;
+  * the message-passing-model registry (:mod:`repro.gcn.registry`), so
+    GCN/GIN/SAGE and user-registered models share one execution path.
+
+Typical use::
+
+    eng = GCNEngine.build(cfg, graph, (4, 2))
+    params = eng.init_params(jax.random.PRNGKey(0), [64, 16])
+    out = eng.forward(feats)              # (V, F) in -> (V, F_out) out
+    ref = eng.reference(feats)            # single-device oracle
+    st = eng.stats()                      # analytic + executor link bytes
+
+``forward`` accepts either a global host ``(V, F)`` array (sharded and
+unsharded transparently) or a pre-sharded ``(*dims, Vp, F)`` device
+array, and returns the same form it was given.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import GCNConfig
+from repro.core import cost_model as cm
+from repro.core import gcn_models as gm
+from repro.core import jax_compat
+from repro.core import message_passing as mp
+from repro.core.graph import Graph
+from repro.core.partition import RoundPartition, TorusMesh, make_partition
+from repro.core.plan import CommPlan, build_plan
+from repro.gcn.registry import ModelSpec, get_model
+
+
+# ---------------------------------------------------------------------------
+# Plan cache (process-wide; engines share mapping work)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    graph_fp: str
+    model: str
+    message_passing: str
+    use_rounds: bool
+    mesh_dims: tuple[int, ...]
+    agg_buffer_bytes: int
+    bidir: bool
+    # partition-shaping fields beyond the buffer size: the round budget
+    # is 2^x <= alpha * M / (feat_in * 4), so both must key the cache
+    alpha: float
+    feat_in: int
+    # registry generation of the model spec: a re-registered model must
+    # never hit plans built for its predecessor (even via stale engines)
+    model_gen: int
+
+
+_PLAN_CACHE: dict[PlanKey, CommPlan] = {}
+# prepared graphs are only needed for plan builds and reference() and can
+# be tens of MB each, so unlike plans they are LRU-bounded
+_PREP_CACHE: "OrderedDict[tuple[str, str, int], tuple[Graph, np.ndarray]]" \
+    = OrderedDict()
+_PREP_CACHE_MAX = 8
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """Plan-cache hit/miss counters plus current entry count."""
+    return dict(_CACHE_STATS, entries=len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _PREP_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+def invalidate_model(name: str) -> None:
+    """Drop cached prepared graphs / plans for one model name (called by
+    the registry when a model is re-registered with ``overwrite``).
+    Correctness does not depend on this — cache keys carry the registry
+    generation — it just releases the superseded entries' memory."""
+    for k in [k for k in _PREP_CACHE if k[1] == name]:
+        del _PREP_CACHE[k]
+    for k in [k for k in _PLAN_CACHE if k.model == name]:
+        del _PLAN_CACHE[k]
+
+
+def graph_fingerprint(graph: Graph) -> str:
+    """Content hash of the edge list — the plan-cache graph identity."""
+    h = hashlib.sha1()
+    h.update(np.int64(graph.num_vertices).tobytes())
+    h.update(np.ascontiguousarray(graph.src).tobytes())
+    h.update(np.ascontiguousarray(graph.dst).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class GCNEngine:
+    """One MultiGCN session: mesh + partition + cached plan + compiled
+    exchange. Construct with :meth:`build`."""
+
+    def __init__(self, cfg: GCNConfig, graph: Graph, dims: tuple[int, ...],
+                 axis_names: tuple[str, ...], spec: ModelSpec,
+                 part: RoundPartition, *, bidir: bool, donate: bool,
+                 mesh_jax=None):
+        self.cfg = cfg
+        self.graph = graph
+        self.dims = dims
+        self.axis_names = axis_names
+        self.model_spec = spec
+        self.torus = TorusMesh(dims)
+        self.part = part
+        self.bidir = bidir
+        self.donate = donate
+        self.params: list[dict] | None = None
+        # lazy state — nothing below touches jax devices or builds a plan
+        # until an execution path actually needs it
+        self._mesh_jax = mesh_jax
+        self._graph_fp: str | None = None
+        self._plan: CommPlan | None = None
+        self._plan_dev = None
+        self._layer_step = None
+
+    # ---------------- construction ----------------
+
+    @classmethod
+    def build(cls, cfg: GCNConfig, graph: Graph,
+              mesh_dims: Sequence[int] | None = None, *,
+              mesh=None, axis_names: Sequence[str] | None = None,
+              bidir: bool = False, donate: bool = False) -> "GCNEngine":
+        """Create an engine from ONE mesh spec.
+
+        Pass either ``mesh_dims`` (a tuple like ``(4, 2)``; the jax
+        ``Mesh`` is derived lazily when execution first needs devices) or
+        an existing jax ``Mesh``/``AbstractMesh`` via ``mesh=`` (dry-run
+        path); never both. ``donate=True`` donates the feature buffer to
+        each compiled layer step (in-place friendly serving loops).
+        """
+        if (mesh_dims is None) == (mesh is None):
+            raise ValueError("pass exactly one of mesh_dims or mesh")
+        if mesh is not None:
+            names = tuple(mesh.axis_names)
+            dims = tuple(int(mesh.shape[n]) for n in names)
+        else:
+            dims = tuple(int(d) for d in mesh_dims)
+            names = (tuple(axis_names) if axis_names is not None
+                     else tuple(f"gcn{i}" for i in range(len(dims))))
+        if len(names) != len(dims):
+            raise ValueError(f"axis_names {names} vs mesh_dims {dims}")
+        spec = get_model(cfg.model)
+        tor = TorusMesh(dims)
+        part = make_partition(cfg, tor.num_nodes,
+                              num_vertices=graph.num_vertices)
+        return cls(cfg, graph, dims, names, spec, part,
+                   bidir=bidir, donate=donate, mesh_jax=mesh)
+
+    def with_config(self, **overrides) -> "GCNEngine":
+        """Sibling engine on the same graph/mesh with cfg fields replaced
+        (e.g. ``message_passing="oppr"``). Shares the plan cache, so
+        flipping a field back and forth never replans."""
+        cfg = dataclasses.replace(self.cfg, **overrides)
+        return GCNEngine.build(
+            cfg, self.graph,
+            None if self._mesh_jax is not None else self.dims,
+            mesh=self._mesh_jax, axis_names=self.axis_names,
+            bidir=self.bidir, donate=self.donate)
+
+    # ---------------- host-side mapping (cached) ----------------
+
+    @property
+    def graph_fp(self) -> str:
+        if self._graph_fp is None:
+            self._graph_fp = graph_fingerprint(self.graph)
+        return self._graph_fp
+
+    @property
+    def plan_key(self) -> PlanKey:
+        return PlanKey(self.graph_fp, self.cfg.model,
+                       self.cfg.message_passing, self.cfg.use_rounds,
+                       self.dims, self.cfg.agg_buffer_bytes, self.bidir,
+                       self.cfg.alpha, self.cfg.graph.feat_in,
+                       self.model_spec.gen)
+
+    @property
+    def plan_cached(self) -> bool:
+        """True when this engine's plan is already in the process cache
+        (checking does not build or count as a hit/miss)."""
+        return self.plan_key in _PLAN_CACHE
+
+    def prepared_graph(self) -> tuple[Graph, np.ndarray]:
+        """Model-weighted graph (self loops + edge weights), cached per
+        (graph, model, registry generation) so switching message-passing
+        models reuses it but a re-registered model never sees stale
+        weights. LRU-bounded (prepared graphs can be large)."""
+        key = (self.graph_fp, self.cfg.model, self.model_spec.gen)
+        if key not in _PREP_CACHE:
+            _PREP_CACHE[key] = self.model_spec.prepare(self.graph)
+            while len(_PREP_CACHE) > _PREP_CACHE_MAX:
+                _PREP_CACHE.popitem(last=False)
+        else:
+            _PREP_CACHE.move_to_end(key)
+        return _PREP_CACHE[key]
+
+    @property
+    def plan(self) -> CommPlan:
+        """The static relay schedule — built once per PlanKey, ever."""
+        if self._plan is None:
+            key = self.plan_key
+            hit = key in _PLAN_CACHE
+            _CACHE_STATS["hits" if hit else "misses"] += 1
+            if not hit:
+                g2, w = self.prepared_graph()
+                _PLAN_CACHE[key] = build_plan(
+                    self.cfg, g2, self.torus, self.part,
+                    edge_weights=w, bidir=self.bidir)
+            self._plan = _PLAN_CACHE[key]
+        return self._plan
+
+    @property
+    def statics(self) -> mp.ExchangeStatics:
+        return mp.exchange_statics(self.plan, self.axis_names)
+
+    def plan_arrays(self):
+        """Device-layout plan arrays (cached jnp views of the plan)."""
+        if self._plan_dev is None:
+            self._plan_dev = mp.plan_device_arrays(self.plan)
+        return self._plan_dev
+
+    @property
+    def mesh_jax(self):
+        if self._mesh_jax is None:
+            self._mesh_jax = jax_compat.make_mesh(self.dims,
+                                                  self.axis_names)
+        return self._mesh_jax
+
+    # ---------------- compiled exchange ----------------
+
+    def _exchange_fn(self):
+        """The shard_map'd exchange ``(pdev, feats) -> (*dims, R, slots,
+        F)`` — the one closure both the compiled layer step and the
+        traced byte measurement use, so they can never diverge."""
+        from jax.sharding import PartitionSpec as P
+
+        st = self.statics
+        mesh = self.mesh_jax
+        names = self.axis_names
+        nd = len(self.dims)
+        plan_spec = P(None, *names)  # (R, *dims, ...)
+        feat_spec = P(*names)  # (*dims, Vp, F)
+        pdev_tree = self.plan_arrays()
+
+        @partial(jax_compat.shard_map, mesh=mesh,
+                 in_specs=(jax.tree.map(lambda _: plan_spec, pdev_tree),
+                           feat_spec),
+                 out_specs=P(*(names + (None, None, None))))
+        def _exchange(pdev, feats):
+            accs = mp.exchange_and_aggregate(st, pdev, feats)
+            return accs[(None,) * nd]  # re-add mesh dims
+
+        return _exchange
+
+    def _compiled_layer_step(self):
+        """jit(shard_map exchange + combine): one layer of the network.
+        Shapes vary per layer; jax's jit cache specializes per shape."""
+        if self._layer_step is None:
+            nd = len(self.dims)
+            combine = self.model_spec.combine
+            exchange = self._exchange_fn()
+
+            def step(pdev, x, layer, last):
+                accs = exchange(pdev, x)  # (*dims, R, slots, F)
+                agg = accs.reshape(accs.shape[:nd] + (-1, accs.shape[-1]))
+                return combine(layer, agg, x, last)
+
+            self._layer_step = jax.jit(
+                step, static_argnames=("last",),
+                donate_argnums=(1,) if self.donate else ())
+        return self._layer_step
+
+    # ---------------- parameters ----------------
+
+    def init_params(self, key, dims: Sequence[int]) -> list[dict]:
+        """dims = [feat_in, hidden..., out]; stores and returns params."""
+        init = self.model_spec.init_layer
+        keys = jax.random.split(key, len(dims) - 1)
+        self.params = [init(k, dims[i], dims[i + 1])
+                       for i, k in enumerate(keys)]
+        return self.params
+
+    def _resolve_params(self, params):
+        params = params if params is not None else self.params
+        if params is None:
+            raise ValueError("no params: call init_params() or pass params=")
+        return params
+
+    # ---------------- execution ----------------
+
+    def shard(self, feats_global: np.ndarray) -> np.ndarray:
+        """(V, F) global features -> (*dims, Vp, F) node-major layout."""
+        return mp.shard_features(self.plan, np.asarray(feats_global))
+
+    def unshard(self, local) -> np.ndarray:
+        """Inverse of :meth:`shard` for (*dims, Vp, F) tables."""
+        return mp.unshard_features(self.plan, np.asarray(local),
+                                   self.graph.num_vertices)
+
+    def forward(self, feats, params=None):
+        """Run the full network through the compiled exchange.
+
+        ``feats`` is either a global ``(V, F)`` host array (returns a
+        global ``(V, F_out)`` numpy array) or a pre-sharded
+        ``(*dims, Vp, F)`` device array (returns the sharded result).
+        """
+        params = self._resolve_params(params)
+        nd = len(self.dims)
+        feats_nd = np.ndim(feats)
+        if feats_nd == 2:
+            if feats.shape[0] != self.graph.num_vertices:
+                raise ValueError(
+                    f"global feats rows {feats.shape[0]} != |V| "
+                    f"{self.graph.num_vertices}")
+            x = jnp.asarray(self.shard(feats))
+            is_global = True
+        elif feats_nd == nd + 2:
+            x = feats
+            is_global = False
+        else:
+            raise ValueError(
+                f"feats must be (V, F) or (*{self.dims}, Vp, F); "
+                f"got ndim={feats_nd}")
+        step = self._compiled_layer_step()
+        pdev = self.plan_arrays()
+        for li, layer in enumerate(params):
+            x = step(pdev, x, layer, last=li == len(params) - 1)
+        return self.unshard(np.asarray(x)) if is_global else x
+
+    def reference(self, feats, params=None):
+        """Exact single-device oracle for this engine's model (numpy in,
+        numpy out), via :func:`repro.core.gcn_models.reference_loop` with
+        this engine's prepared graph and registered combine."""
+        params = self._resolve_params(params)
+        g2, w = self.prepared_graph()
+        return np.asarray(gm.reference_loop(
+            g2, w, self.model_spec.combine, params, feats))
+
+    # ---------------- accounting ----------------
+
+    def stats(self, feat_dim: int | None = None,
+              dtype_bytes: int = 4) -> dict:
+        """Plan stats merged with link-byte accounting.
+
+        * ``link_bytes`` — analytic hop-weighted payload bytes (the
+          deduplicated item x hops count the cost model reports);
+        * ``executor_link_bytes`` — ppermute payload bytes implied by the
+          hop schedule (``hop_lens``) the executor replays: every hop
+          moves L_h rows of F features on all N nodes x R rounds
+          (includes SPMD padding). Derived from the same plan data as
+          ``plan_executor_link_bytes`` below — for an INDEPENDENT
+          measurement of what the executor moves, use
+          :meth:`measured_link_bytes` (traces the exchange and counts
+          actual ppermute operands);
+        * ``plan_executor_link_bytes`` — the planner's own analytic count
+          of the same quantity (``executor_feat_slots``).
+        """
+        plan = self.plan
+        if feat_dim is None:
+            feat_dim = self._default_feat_dim()
+        st = self.statics
+        N, R = plan.num_nodes, plan.num_rounds
+        exec_slots = sum(
+            (sum(hl) + sum(hlr)) * N * R
+            for hl, hlr in zip(st.hop_lens, st.hop_lens_rev))
+        out = dict(plan.stats)
+        out.update(
+            feat_dim=feat_dim,
+            dtype_bytes=dtype_bytes,
+            link_bytes=plan.stats["link_feat_hops"] * feat_dim * dtype_bytes,
+            executor_link_bytes=exec_slots * feat_dim * dtype_bytes,
+            plan_executor_link_bytes=(
+                plan.stats["executor_feat_slots"] * feat_dim * dtype_bytes),
+        )
+        return out
+
+    def measured_link_bytes(self, feat_dim: int | None = None,
+                            dtype=jnp.float32) -> int:
+        """Bytes one exchange actually moves through ``ppermute``,
+        measured from the TRACED executor: the exchange is traced to a
+        jaxpr and every ppermute operand is summed (x scan trip counts,
+        x mesh size). Independent of ``CommPlan.stats`` — this is the
+        real cross-check against ``stats()['executor_link_bytes']``."""
+        if feat_dim is None:
+            feat_dim = self._default_feat_dim()
+        Vp = self.plan.part.vertices_per_node()
+        feats_abs = jax.ShapeDtypeStruct(self.dims + (Vp, feat_dim), dtype)
+        jaxpr = jax.make_jaxpr(self._exchange_fn())(self.plan_arrays(),
+                                                    feats_abs)
+        return _ppermute_payload_bytes(jaxpr.jaxpr, 1)
+
+    def _default_feat_dim(self) -> int:
+        """Feature width for byte accounting: the stored params' input
+        width when recoverable (registered models may use any layer dict
+        layout), else the config's feat_in."""
+        if self.params:
+            try:
+                return int(self.params[0]["w"].shape[0])
+            except (KeyError, TypeError, AttributeError, IndexError):
+                pass
+        return self.cfg.graph.feat_in
+
+    def analyze(self, *, name: str | None = None, bidir: bool | None = None,
+                **cfg_overrides) -> cm.CostReport:
+        """Analytical cost report (no plan construction — tractable at
+        paper scale). ``cfg_overrides`` replace GCNConfig fields, e.g.
+        ``analyze(message_passing="oppe", use_rounds=False)``; the
+        engine's build-time partition is reused across variants so
+        comparisons share one vertex mapping."""
+        c = (dataclasses.replace(self.cfg, **cfg_overrides)
+             if cfg_overrides else self.cfg)
+        return cm.analyze(c, self.graph, self.torus, part=self.part,
+                          name=name,
+                          bidir=self.bidir if bidir is None else bidir)
+
+
+def _ppermute_payload_bytes(jaxpr, mult: int) -> int:
+    """Sum ppermute operand bytes in a jaxpr, multiplying through scan
+    trip counts and shard_map mesh sizes (each device runs the body)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        m = mult
+        if prim == "ppermute":
+            aval = eqn.invars[0].aval
+            total += m * aval.size * np.dtype(aval.dtype).itemsize
+            continue
+        if prim == "scan":
+            m = mult * int(eqn.params["length"])
+        elif prim == "shard_map":
+            m = mult * int(eqn.params["mesh"].size)
+        for sub in jax_compat.subjaxprs_in_params(eqn.params):
+            total += _ppermute_payload_bytes(sub, m)
+    return total

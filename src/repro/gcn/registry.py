@@ -1,0 +1,89 @@
+"""Pluggable message-passing-model registry for the GCN engine.
+
+A *model* is the aggregation + combination semantics of one GNN flavour
+(GCN / GIN / GraphSAGE / ...). The MultiGCN runtime keeps the executor
+model-agnostic by pushing all aggregation semantics into per-edge
+weights, so a model is fully described by three callables:
+
+  * ``prepare(graph) -> (graph', edge_weights)`` — host-side: optionally
+    rewrite the graph (e.g. add self loops) and emit float32 edge
+    weights the planner bakes into the static schedule.
+  * ``init_layer(key, fan_in, fan_out) -> dict`` — per-layer parameters.
+  * ``combine(layer, agg, self_feats, last) -> array`` — the combination
+    phase applied after the distributed exchange (and in the exact
+    single-device reference, so the two stay comparable by definition).
+
+New aggregation semantics are a one-function-each addition:
+
+    from repro.gcn import register_model, ModelSpec
+    register_model("mean", prepare=..., init_layer=..., combine=...)
+
+The three paper models are registered below from the builders in
+:mod:`repro.core.gcn_models`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core import gcn_models as gm
+from repro.core.graph import Graph
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    prepare: Callable[[Graph], tuple[Graph, np.ndarray]]
+    init_layer: Callable  # (key, fan_in, fan_out) -> dict
+    combine: Callable  # (layer, agg, self_feats, last) -> array
+    # registration generation: bumped on every (re-)registration so the
+    # engine's caches can never serve a superseded model's results, even
+    # through engines built before the re-registration
+    gen: int = 0
+
+
+_MODELS: dict[str, ModelSpec] = {}
+_GEN = 0
+
+
+def register_model(name: str, *, prepare, init_layer, combine,
+                   overwrite: bool = False) -> ModelSpec:
+    """Register aggregation semantics under ``name`` (see module doc)."""
+    global _GEN
+    if name in _MODELS:
+        if not overwrite:
+            raise ValueError(
+                f"model {name!r} already registered (pass overwrite=True)")
+        # drop superseded cache entries (correctness is guaranteed by the
+        # generation stamp regardless; this frees the memory)
+        from repro.gcn import engine as _engine
+
+        _engine.invalidate_model(name)
+    _GEN += 1
+    spec = ModelSpec(name, prepare, init_layer, combine, gen=_GEN)
+    _MODELS[name] = spec
+    return spec
+
+
+def get_model(name: str) -> ModelSpec:
+    try:
+        return _MODELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown message-passing model {name!r}; registered: "
+            f"{registered_models()}") from None
+
+
+def registered_models() -> list[str]:
+    return sorted(_MODELS)
+
+
+# the three paper models (Table 3 workloads)
+register_model("gcn", prepare=gm.gcn_prepare, init_layer=gm.gcn_init_layer,
+               combine=gm.gcn_combine)
+register_model("gin", prepare=gm.gin_prepare, init_layer=gm.gin_init_layer,
+               combine=gm.gin_combine)
+register_model("sage", prepare=gm.sage_prepare, init_layer=gm.sage_init_layer,
+               combine=gm.sage_combine)

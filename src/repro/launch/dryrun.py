@@ -77,8 +77,10 @@ def run_lm_cell(arch: str, shape_name: str, mesh_kind: str,
                           is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)) \
         if cell.out_shardings is not None else None
 
+    from repro.core.jax_compat import set_mesh
+
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.step, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jitted.lower(*cell.args)
         t_lower = time.time() - t0
@@ -86,8 +88,10 @@ def run_lm_cell(arch: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
+    from repro.core.jax_compat import cost_analysis
+
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,

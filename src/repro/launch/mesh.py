@@ -7,20 +7,18 @@ meshes as tori: ("data", "model") = (X, Y) rings, with "pod" a third ring.
 """
 from __future__ import annotations
 
-import jax
+from repro.core.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (host platform devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_axis_size(mesh, name: str) -> int:

@@ -1,5 +1,7 @@
 """Subprocess body for the 8-device distributed-GCN equivalence test.
-Run by tests/test_distributed_gcn.py with XLA_FLAGS forcing 8 devices."""
+Run by tests/test_distributed_gcn.py with XLA_FLAGS forcing 8 devices.
+
+All GCN execution flows through the ``GCNEngine`` session API."""
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -10,20 +12,14 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_gcn_config
-from repro.core import gcn_models as gm
 from repro.core.graph import erdos
-from repro.core.message_passing import shard_features, unshard_features
-from repro.core.partition import TorusMesh
+from repro.gcn import GCNEngine
 
 
 def main():
-    mesh_jax = jax.make_mesh((4, 2), ("x", "y"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    tor = TorusMesh((4, 2))
     V, E, F = 512, 4096, 16
     g = erdos(V, E, seed=5)
     feats = np.random.default_rng(0).normal(size=(V, F)).astype(np.float32)
@@ -35,49 +31,33 @@ def main():
         cfg = get_gcn_config(f"gcn-{model}-rd", "smoke")
         cfg = dataclasses.replace(cfg, message_passing=mpm,
                                   use_rounds=rounds, agg_buffer_bytes=4 << 10)
-        plan = gm.build_gcn_plan(cfg, g, tor)
-        params = gm.gcn_params(cfg, jax.random.PRNGKey(0), [F, 8])
-        fs = jnp.asarray(shard_features(plan, feats))
-        out = gm.distributed_forward(cfg, params, plan, mesh_jax,
-                                     ("x", "y"), fs)
-        out_g = unshard_features(plan, np.asarray(out), V)
-        ref = np.asarray(gm.reference_forward(cfg, params, g,
-                                              jnp.asarray(feats)))
-        err = np.max(np.abs(out_g - ref)) / (np.max(np.abs(ref)) + 1e-9)
+        eng = GCNEngine.build(cfg, g, (4, 2))
+        eng.init_params(jax.random.PRNGKey(0), [F, 8])
+        out = eng.forward(feats)
+        ref = eng.reference(feats)
+        err = np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9)
         assert err < 1e-4, (model, mpm, rounds, err)
         print(f"ok {model}/{mpm}/rounds={rounds} err={err:.2e}")
 
     # bidirectional rings (§Perf cell 3): numerics must be unchanged
-    from repro.core.partition import make_partition
-    from repro.core.plan import build_plan
-
     cfgb = get_gcn_config("gcn-gcn-rd", "smoke")
     cfgb = dataclasses.replace(cfgb, agg_buffer_bytes=4 << 10)
-    g2, w = gm.model_graph_and_weights(cfgb, g)
-    partb = make_partition(cfgb, 8, num_vertices=g.num_vertices)
-    planb = build_plan(cfgb, g2, tor, partb, edge_weights=w, bidir=True)
-    params = gm.gcn_params(cfgb, jax.random.PRNGKey(0), [F, 8])
-    fs = jnp.asarray(shard_features(planb, feats))
-    out = gm.distributed_forward(cfgb, params, planb, mesh_jax, ("x", "y"), fs)
-    out_g = unshard_features(planb, np.asarray(out), V)
-    ref = np.asarray(gm.reference_forward(cfgb, params, g, jnp.asarray(feats)))
-    err = np.max(np.abs(out_g - ref)) / (np.max(np.abs(ref)) + 1e-9)
+    engb = GCNEngine.build(cfgb, g, (4, 2), bidir=True)
+    engb.init_params(jax.random.PRNGKey(0), [F, 8])
+    out = engb.forward(feats)
+    ref = engb.reference(feats)
+    err = np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9)
     assert err < 1e-4, ("bidir", err)
     print(f"ok bidir err={err:.2e}")
 
     # 3D torus (pod-like) on 8 devices: (2, 2, 2)
-    mesh3 = jax.make_mesh((2, 2, 2), ("p", "x", "y"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    tor3 = TorusMesh((2, 2, 2))
     cfg = get_gcn_config("gcn-gcn-rd", "smoke")
     cfg = dataclasses.replace(cfg, agg_buffer_bytes=4 << 10)
-    plan = gm.build_gcn_plan(cfg, g, tor3)
-    params = gm.gcn_params(cfg, jax.random.PRNGKey(0), [F, 8])
-    fs = jnp.asarray(shard_features(plan, feats))
-    out = gm.distributed_forward(cfg, params, plan, mesh3, ("p", "x", "y"), fs)
-    out_g = unshard_features(plan, np.asarray(out), V)
-    ref = np.asarray(gm.reference_forward(cfg, params, g, jnp.asarray(feats)))
-    err = np.max(np.abs(out_g - ref)) / (np.max(np.abs(ref)) + 1e-9)
+    eng3 = GCNEngine.build(cfg, g, (2, 2, 2))
+    eng3.init_params(jax.random.PRNGKey(0), [F, 8])
+    out = eng3.forward(feats)
+    ref = eng3.reference(feats)
+    err = np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9)
     assert err < 1e-4, ("3d", err)
     print(f"ok 3d-torus err={err:.2e}")
 

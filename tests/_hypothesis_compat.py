@@ -1,0 +1,68 @@
+"""Use hypothesis when installed; otherwise a minimal deterministic
+fallback so the property tests still run (this container has no
+``hypothesis`` wheel and installing packages is not allowed).
+
+The fallback supports exactly the subset our tests use — ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``,
+``strategies.integers`` and ``strategies.sampled_from`` — and drives
+each test with a fixed-seed random sample plus the strategy endpoints,
+so runs are reproducible and bounds are always exercised.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is available
+    from hypothesis import given, settings, strategies
+except ModuleNotFoundError:
+    import inspect
+    import random
+
+    class _Strategy:
+        def __init__(self, sample, endpoints=()):
+            self.sample = sample  # fn(rng) -> value
+            self.endpoints = tuple(endpoints)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             endpoints=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements),
+                             endpoints=(elements[0], elements[-1]))
+
+    def settings(max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                # endpoint case first: all strategies at their bounds
+                for pick in (0, 1):
+                    ex = {k: s.endpoints[min(pick, len(s.endpoints) - 1)]
+                          for k, s in strats.items()}
+                    fn(*args, **ex, **kwargs)
+                for _ in range(max(n - 2, 0)):
+                    ex = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(*args, **ex, **kwargs)
+
+            # copy identity but NOT the signature: pytest must not treat
+            # the strategy kwargs as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strats])
+            return wrapper
+
+        return deco

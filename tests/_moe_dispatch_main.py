@@ -16,6 +16,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.config import get_lm_config
+from repro.core import jax_compat
 from repro.core.moe_dispatch import EPConfig, ep_moe_apply
 from repro.nn import moe as moe_lib
 from repro.nn.module import init_tree
@@ -32,8 +33,7 @@ def main():
     x = jax.random.normal(key, (T, D), jnp.float32) * 0.5
     y_ref = moe_lib.moe_apply(cfg, p, x[None])[0][0]
 
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax_compat.make_mesh((4,), ("model",))
     specs = {"router": P(), "w_gate": P("model"), "w_up": P("model"),
              "w_down": P("model")}
     reps = {}
@@ -41,7 +41,7 @@ def main():
         ep = EPConfig(axis="model", num_shards=4, capacity_factor=8.0,
                       dedup=dedup)
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(jax_compat.shard_map, mesh=mesh,
                            in_specs=(specs, P("model")),
                            out_specs=(P("model"), P("model")))
         def run(pl, xl):

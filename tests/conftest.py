@@ -12,6 +12,11 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device tests that spawn a subprocess")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,139 @@
+"""GCNEngine session API: plan-cache identity, global-vs-presharded
+forward parity, reference agreement for every registered model, and
+bidirectional-ring equivalence.
+
+The multi-device assertions run in a subprocess (device count must be
+set before jax initializes; see test_distributed_gcn.py). The cache /
+registry / mesh-derivation tests run in-process on the 1-CPU view."""
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+
+@pytest.mark.slow
+def test_engine_8dev():
+    script = Path(__file__).parent / "_gcn_engine_main.py"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL_OK" in r.stdout
+
+
+def _cfg(**over):
+    from repro.config import get_gcn_config
+
+    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
+    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+
+
+def test_plan_cache_identity_single_device():
+    from repro.core.graph import erdos
+    from repro.gcn import GCNEngine
+
+    g = erdos(256, 2048, seed=3)
+    e1 = GCNEngine.build(_cfg(), g, (1, 1))
+    e2 = GCNEngine.build(_cfg(), g, (1, 1))
+    assert e1.plan is e2.plan
+    # every keyed field separates plans
+    assert e1.with_config(message_passing="oppe").plan is not e1.plan
+    assert e1.with_config(agg_buffer_bytes=8 << 10).plan is not e1.plan
+    assert GCNEngine.build(_cfg(), g, (1,)).plan is not e1.plan
+    # alpha shapes the round budget (2^x <= alpha*M/S): must key the cache
+    e_alpha = e1.with_config(alpha=_cfg().alpha / 8)
+    assert e_alpha.plan is not e1.plan
+    assert e_alpha.plan.part.num_rounds == e_alpha.part.num_rounds
+
+
+def test_mesh_pair_derived_from_one_spec():
+    from repro.core.graph import erdos
+    from repro.gcn import GCNEngine
+
+    g = erdos(128, 512, seed=1)
+    eng = GCNEngine.build(_cfg(), g, (1, 1))
+    assert eng.torus.dims == eng.dims == (1, 1)
+    assert len(eng.axis_names) == 2
+    with pytest.raises(ValueError):
+        GCNEngine.build(_cfg(), g)  # neither mesh_dims nor mesh
+    with pytest.raises(ValueError):
+        GCNEngine.build(_cfg(), g, (1, 1), axis_names=("a",))
+
+
+def test_registry_pluggable_model_roundtrip():
+    """A user-registered model runs through the same engine path and
+    matches the engine's own oracle."""
+    import jax
+    from repro.core.graph import erdos
+    from repro.gcn import (GCNEngine, get_model, register_model,
+                           registered_models)
+
+    def prepare(graph):  # plain (unweighted, no self loops) sum aggregation
+        return graph, np.ones(graph.num_edges, np.float32)
+
+    def init_layer(key, fi, fo):
+        return {"w": jax.random.normal(key, (fi, fo)) / np.sqrt(fi)}
+
+    def combine(layer, agg, self_feats, last):
+        h = agg @ layer["w"]
+        return h if last else jax.nn.relu(h)
+
+    name = "plainsum-test"
+    if name not in registered_models():
+        register_model(name, prepare=prepare, init_layer=init_layer,
+                       combine=combine)
+    with pytest.raises(ValueError):
+        register_model(name, prepare=prepare, init_layer=init_layer,
+                       combine=combine)  # duplicate registration rejected
+    assert get_model(name).prepare is prepare
+
+    g = erdos(256, 2048, seed=9)
+    eng = GCNEngine.build(_cfg(model=name), g, (1, 1))
+    params = eng.init_params(jax.random.PRNGKey(2), [8, 4])
+    feats = np.random.default_rng(2).normal(size=(256, 8)).astype(np.float32)
+    out = eng.forward(feats)
+    ref = eng.reference(feats)
+    err = np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9)
+    assert err < 1e-4, err
+
+    # overwrite=True must invalidate the cached prepared graph / plan:
+    # doubling the edge weights must double the (linear, last-layer) output
+    register_model(name, overwrite=True, init_layer=init_layer,
+                   combine=combine,
+                   prepare=lambda gr: (gr, np.full(gr.num_edges, 2.0,
+                                                   np.float32)))
+    eng2 = GCNEngine.build(_cfg(model=name), g, (1, 1))
+    assert eng2.plan is not eng.plan, "stale plan served after overwrite"
+    out2 = eng2.forward(feats, params)
+    np.testing.assert_allclose(out2, 2.0 * out, rtol=1e-5, atol=1e-5)
+
+    # a STALE engine built before the overwrite may keep running its old
+    # spec (session semantics), but must not poison the cache for fresh
+    # engines: exercise the stale engine's cache-filling paths first
+    np.testing.assert_allclose(eng.reference(feats, params), out,
+                               rtol=1e-5, atol=1e-5)
+    eng3 = GCNEngine.build(_cfg(model=name), g, (1, 1))
+    np.testing.assert_allclose(eng3.forward(feats, params), out2,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_forward_rejects_bad_shapes():
+    import jax
+    from repro.core.graph import erdos
+    from repro.gcn import GCNEngine
+
+    g = erdos(128, 512, seed=4)
+    eng = GCNEngine.build(_cfg(), g, (1, 1))
+    eng.init_params(jax.random.PRNGKey(0), [8, 4])
+    with pytest.raises(ValueError):
+        eng.forward(np.zeros((64, 8), np.float32))  # wrong |V|
+    with pytest.raises(ValueError):
+        eng.forward(np.zeros((2, 2, 2), np.float32))  # neither form
+    with pytest.raises(ValueError):
+        GCNEngine.build(_cfg(), g, (1, 1)).forward(
+            np.zeros((128, 8), np.float32))  # no params anywhere

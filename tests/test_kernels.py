@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.flash_attention import kernel as fak, ref as far
 from repro.kernels.matmul import kernel as mmk, ref as mmr

@@ -51,7 +51,9 @@ def test_cost_analysis_undercounts_scans():
 
     w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
     x = jax.ShapeDtypeStruct((4, D), jnp.float32)
-    ca = jax.jit(f_scan).lower(w, x).compile().cost_analysis()
+    from repro.core.jax_compat import cost_analysis
+
+    ca = cost_analysis(jax.jit(f_scan).lower(w, x).compile())
     assert ca["flops"] < 2 * L * 4 * D * D * 0.5  # counted once, not L times
 
 

@@ -55,8 +55,9 @@ def test_checkpoint_reshard_on_load(tmp_path):
 
     t = _tree(jax.random.PRNGKey(2))
     ckpt.save(tmp_path, 3, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.jax_compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     specs = jax.tree.map(lambda _: P(), t)
     restored, _ = ckpt.restore(tmp_path, t, mesh=mesh, specs=specs)
     for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
