@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: smoke test bench
+.PHONY: smoke test bench docs-check check
 
 # engine example + tier-1 tests, multi-device (8 forced host devices)
 smoke:
@@ -11,3 +11,10 @@ test:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# execute every fenced ```python block in README.md and docs/*.md
+docs-check:
+	PYTHONPATH=src $(PY) tools/check_docs.py
+
+# the CI-style gate: everything a PR must keep green
+check: smoke docs-check

@@ -38,6 +38,23 @@ def run_smoke() -> int:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = (str(root / "src") + os.pathsep
                          + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    # report which aggregation backend "auto" resolves to in this
+    # environment, so the perf numbers below are attributable (probed in
+    # a subprocess with the same env/flags the steps run under)
+    probe = subprocess.run(
+        [sys.executable, "-c",
+         "import jax; from repro.gcn import resolve_agg_impl; "
+         "print(resolve_agg_impl('auto'), jax.default_backend())"],
+        env=env, cwd=root, capture_output=True, text=True)
+    tokens = probe.stdout.split()
+    if probe.returncode == 0 and len(tokens) >= 2:
+        # last two tokens: anything before them is stray import chatter
+        impl, backend = tokens[-2:]
+        print(f"# smoke:agg_impl: auto -> {impl} (jax backend={backend})",
+              flush=True)
+    else:
+        print(f"# smoke:agg_impl: probe failed (rc={probe.returncode}):\n"
+              f"{probe.stdout}{probe.stderr}", flush=True)
     steps = [
         ("engine-example", [sys.executable,
                             str(root / "examples" / "gcn_multinode.py")]),

@@ -39,6 +39,18 @@ def main():
     err = np.max(np.abs(out - ref)) / np.max(np.abs(ref))
     print(f"2-layer GCN inference done; max rel err vs oracle = {err:.2e}")
     assert err < 1e-4
+
+    # same network through the Pallas blocked-ELL aggregation kernel
+    # (interpret mode off-TPU) — switching backends reuses the CommPlan
+    out_pl = engine.forward(feats, agg_impl="pallas")
+    err_pl = np.max(np.abs(out_pl - ref)) / np.max(np.abs(ref))
+    st = engine.stats()
+    print(f"agg backends: default={st['agg_impl']} "
+          f"(cfg {cfg.agg_impl!r}); pallas rel err = {err_pl:.2e}")
+    print(f"agg traffic estimate: dense {st['agg_dense_bytes'] / 2**10:.0f} "
+          f"KiB vs ELL {st['agg_ell_bytes'] / 2**10:.0f} KiB "
+          f"(reduction {st['agg_traffic_reduction']:+.0%})")
+    assert err_pl < 1e-4
     print("OK")
 
 

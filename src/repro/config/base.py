@@ -280,6 +280,16 @@ class GCNConfig:
     use_rounds: bool = True
     agg_buffer_bytes: int = 1 << 20  # paper: 1 MB aggregation buffer
     alpha: float = 0.75  # paper's buffer reservation factor
+    # aggregation backend for the executor's Compute step:
+    #   "jnp"    — COO scatter-add (portable XLA path)
+    #   "pallas" — blocked-ELL indicator-matmul kernel (repro.kernels.spmm);
+    #              interpret mode off-TPU, so the same code path runs in tests
+    #   "auto"   — "pallas" on TPU, "jnp" elsewhere (resolved at engine build)
+    agg_impl: Literal["auto", "jnp", "pallas"] = "auto"
+    # ELL layout shape knobs (pallas backend): slot-block height of one
+    # accumulator tile and the edge-count alignment of a block row
+    ell_block_slots: int = 128
+    ell_edge_align: int = 512
     dtype: str = "float32"
     source: str = "MultiGCN paper, Table 3"
 

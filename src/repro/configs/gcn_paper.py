@@ -33,14 +33,21 @@ def _register(model: str):
         arch = f"gcn-{model}-{gname.lower()}"
 
         def full(model=model, gname=gname) -> GCNConfig:
-            return GCNConfig(name=f"{model}.{gname}", model=model, graph=GRAPHS[gname])
+            # paper-scale serving always wants the ELL/MXU aggregation
+            # kernel (block_slots=128 mirrors the paper's 1x128 systolic
+            # reduction rows); off-TPU it runs in interpret mode
+            return GCNConfig(name=f"{model}.{gname}", model=model,
+                             graph=GRAPHS[gname], agg_impl="pallas")
 
         def smoke(model=model, gname=gname) -> GCNConfig:
+            # smoke stays on auto-resolution: "jnp" on CPU test runners,
+            # "pallas" when the container actually has a TPU
             return GCNConfig(
                 name=f"{model}.{gname}-smoke",
                 model=model,
                 graph=SMOKE_GRAPHS[gname],
                 agg_buffer_bytes=16 << 10,
+                agg_impl="auto",
             )
 
         register_gcn(arch, full=full, smoke=smoke)

@@ -13,6 +13,11 @@ and any standalone check share. All user-facing GCN execution lives in
 ``repro.gcn.GCNEngine``; new aggregation semantics are added with
 ``repro.gcn.register_model``, not by editing this file.
 
+The oracle's aggregation is a plain dense COO segment-sum on one device;
+the distributed engine must match it from EITHER aggregation backend
+(``agg_impl="jnp"`` scatter or ``agg_impl="pallas"`` blocked-ELL kernel)
+— the parity tests in ``tests/test_gcn_agg_impl.py`` pin that contract.
+
 Aggregation semantics (all expressed as edge weights in the plan so the
 executor stays model-agnostic):
   * GCN  — Â = D^-1/2 (A + I) D^-1/2; combine = ReLU(W a + b)

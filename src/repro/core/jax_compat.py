@@ -29,21 +29,28 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
     return jax.make_mesh(axis_shapes, axis_names, devices=devices)
 
 
-def shard_map(f=None, *, mesh, in_specs, out_specs):
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_rep=True):
     """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x).
 
     Usable both as ``shard_map(f, mesh=...)`` and as a decorator factory
-    ``@shard_map(mesh=...)`` like the modern API.
+    ``@shard_map(mesh=...)`` like the modern API. ``check_rep=False``
+    disables the replication-rule check (required when the body contains
+    a ``pallas_call``, which has no replication rule); the kwarg was
+    renamed ``check_vma`` in newer jax, so both spellings are tried.
     """
     if f is None:
         return lambda g: shard_map(g, mesh=mesh, in_specs=in_specs,
-                                   out_specs=out_specs)
+                                   out_specs=out_specs, check_rep=check_rep)
     if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as _sm
-
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        _sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as _sm
+    try:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_rep)
+    except TypeError:  # newer jax renamed the flag
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_rep)
 
 
 def set_mesh(mesh):

@@ -16,6 +16,16 @@ The per-round replica buffer is the paper's aggregation buffer: it lives
 for exactly one round (on-chip residency by construction), and the edge
 COO is the paper's edge buffer. Synchronization (Alg. 3 (5)) is the SPMD
 barrier at the scan-carry boundary.
+
+The Compute step (4) has two interchangeable backends, selected by
+``ExchangeStatics.agg_impl``:
+
+  * ``"jnp"``    — COO ``at[].add`` scatter (portable XLA path);
+  * ``"pallas"`` — the blocked-ELL indicator-matmul kernel in
+    :mod:`repro.kernels.spmm` (interpret mode off-TPU). The host-side
+    ELL tensors ride in the plan-array tree (``ell_seg/ell_rows/ell_w``
+    REPLACING the COO ``edge_*`` arrays, so only one encoding is ever
+    uploaded) and are scanned/sharded exactly like the rest of the plan.
 """
 from __future__ import annotations
 
@@ -30,8 +40,15 @@ import numpy as np
 from repro.core.plan import CommPlan
 
 
-def plan_device_arrays(plan: CommPlan) -> dict[str, Any]:
-    """Plan arrays, reshaped so axis 1.. are the mesh dims (shardable)."""
+def plan_device_arrays(plan: CommPlan, ell=None) -> dict[str, Any]:
+    """Plan arrays, reshaped so axis 1.. are the mesh dims (shardable).
+
+    ``ell`` is an optional ``(seg, rows, w)`` triple of ``(R, N, nb, Eb)``
+    blocked-ELL tensors (see ``repro.kernels.spmm.ops``); when given they
+    REPLACE the COO ``edge_*`` arrays — the two encodings carry the same
+    aggregation edge list, so uploading both would double the plan's
+    device footprint for no consumer.
+    """
     dims = plan.mesh.dims
     R = plan.num_rounds
 
@@ -44,11 +61,15 @@ def plan_device_arrays(plan: CommPlan) -> dict[str, Any]:
         "repl_lc_src": rs(plan.repl_lc_src),
         "repl_lc_dst": rs(plan.repl_lc_dst),
         "repl_lc_valid": rs(plan.repl_lc_valid),
-        "edge_repl": rs(plan.edge_repl),
-        "edge_slot": rs(plan.edge_slot),
-        "edge_w": rs(plan.edge_w),
         "phases": [],
     }
+    if ell is None:
+        out.update(edge_repl=rs(plan.edge_repl),
+                   edge_slot=rs(plan.edge_slot),
+                   edge_w=rs(plan.edge_w))
+    else:
+        seg, rows, w = ell
+        out.update(ell_seg=rs(seg), ell_rows=rs(rows), ell_w=rs(w))
     for ph in plan.phases:
         d = {
             "dep": rs(ph.dep),
@@ -70,7 +91,12 @@ def plan_device_arrays(plan: CommPlan) -> dict[str, Any]:
 
 @dataclass(frozen=True)
 class ExchangeStatics:
-    """Static (python) metadata the executor needs alongside the arrays."""
+    """Static (python) metadata the executor needs alongside the arrays.
+
+    ``agg_impl`` selects the Compute-step backend ("jnp" | "pallas");
+    with "pallas" the plan-array tree must carry the ELL tensors (pass
+    ``ell=`` to :func:`plan_device_arrays`) and ``ell_block_slots`` must
+    match the layout's slot-block height."""
 
     axis_names: tuple[str, ...]
     dims: tuple[int, ...]
@@ -81,9 +107,12 @@ class ExchangeStatics:
     replica_rows: int
     slots_per_round: int
     num_rounds: int
+    agg_impl: str = "jnp"
+    ell_block_slots: int = 128
 
 
-def exchange_statics(plan: CommPlan, axis_names) -> ExchangeStatics:
+def exchange_statics(plan: CommPlan, axis_names, *, agg_impl: str = "jnp",
+                     ell_block_slots: int = 128) -> ExchangeStatics:
     return ExchangeStatics(
         axis_names=tuple(axis_names),
         dims=tuple(plan.mesh.dims),
@@ -94,6 +123,8 @@ def exchange_statics(plan: CommPlan, axis_names) -> ExchangeStatics:
         replica_rows=plan.replica_rows,
         slots_per_round=plan.part.slots_per_round,
         num_rounds=plan.num_rounds,
+        agg_impl=agg_impl,
+        ell_block_slots=ell_block_slots,
     )
 
 
@@ -163,10 +194,20 @@ def exchange_and_aggregate(st: ExchangeStatics, plan_dev, feats):
             else:
                 obuf = nxt
 
-        # (4) Compute: COO segment-sum into per-round accumulators
-        gathered = replica[pr["edge_repl"]] * pr["edge_w"][:, None].astype(dtype)
-        acc = jnp.zeros((st.slots_per_round, F), dtype)
-        acc = acc.at[pr["edge_slot"]].add(gathered)
+        # (4) Compute: segment-sum into per-round accumulators, via the
+        # selected aggregation backend
+        if st.agg_impl == "pallas":
+            from repro.kernels.spmm import ops as spmm_ops
+
+            acc = spmm_ops.aggregate(
+                replica, pr["ell_seg"], pr["ell_rows"], pr["ell_w"],
+                num_slots=st.slots_per_round,
+                block_slots=st.ell_block_slots)
+        else:
+            gathered = (replica[pr["edge_repl"]]
+                        * pr["edge_w"][:, None].astype(dtype))
+            acc = jnp.zeros((st.slots_per_round, F), dtype)
+            acc = acc.at[pr["edge_slot"]].add(gathered)
         return _, acc
 
     _, accs = jax.lax.scan(round_body, None, pdev)

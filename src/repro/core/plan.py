@@ -437,6 +437,12 @@ def build_plan(cfg: GCNConfig, graph: Graph, mesh: TorusMesh,
     stats["executor_feat_slots"] = exec_slots  # includes SPMD padding
     stats["replica_rows"] = replica_rows
     stats["num_rounds"] = R
+    # aggregation (Compute step) edge accounting: valid COO entries vs the
+    # padded slots the dense scatter backend actually streams — the basis
+    # of the engine's dense-vs-ELL memory-traffic comparison
+    stats["agg_edges"] = int(np.count_nonzero(edge_w))
+    stats["agg_edge_slots_padded"] = int(edge_w.size)  # R * N * Emax
+    stats["agg_acc_slots"] = R * N * part.slots_per_round
 
     return CommPlan(mesh, part, model, R, orig_rows, orig_valid, phases,
                     max(replica_rows, 1), repl_lc_src, repl_lc_dst,

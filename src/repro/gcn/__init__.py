@@ -13,6 +13,7 @@ from repro.gcn.engine import (
     clear_plan_cache,
     graph_fingerprint,
     plan_cache_stats,
+    resolve_agg_impl,
 )
 from repro.gcn.registry import (
     ModelSpec,
@@ -31,4 +32,5 @@ __all__ = [
     "plan_cache_stats",
     "register_model",
     "registered_models",
+    "resolve_agg_impl",
 ]

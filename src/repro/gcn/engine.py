@@ -10,8 +10,12 @@ that mapping produces so callers never rebuild it by hand:
     message-passing model, rounds, mesh dims, buffer bytes, bidir) so
     switching among oppe/oppr/oppm — or rebuilding an engine on the same
     workload — reuses the host-side mapping work;
+  * the **aggregation backend** (``agg_impl``): the executor's Compute
+    step runs either as a COO scatter-add (``"jnp"``) or through the
+    Pallas blocked-ELL SpMM kernel (``"pallas"``; interpret mode
+    off-TPU), with the host-side ELL layout cached alongside the plan;
   * the **compiled exchange**: one jitted layer step (shard_map exchange
-    + combination) reused across layers and calls;
+    + combination) per aggregation backend, reused across layers/calls;
   * the message-passing-model registry (:mod:`repro.gcn.registry`), so
     GCN/GIN/SAGE and user-registered models share one execution path.
 
@@ -20,12 +24,35 @@ Typical use::
     eng = GCNEngine.build(cfg, graph, (4, 2))
     params = eng.init_params(jax.random.PRNGKey(0), [64, 16])
     out = eng.forward(feats)              # (V, F) in -> (V, F_out) out
+    pal = eng.forward(feats, agg_impl="pallas")   # ELL-kernel backend
     ref = eng.reference(feats)            # single-device oracle
-    st = eng.stats()                      # analytic + executor link bytes
+    st = eng.stats()                      # link bytes + agg traffic
 
 ``forward`` accepts either a global host ``(V, F)`` array (sharded and
 unsharded transparently) or a pre-sharded ``(*dims, Vp, F)`` device
 array, and returns the same form it was given.
+
+Cache-invalidation contract (``PlanKey``)
+-----------------------------------------
+
+``PlanKey`` is the full identity of everything the engine caches for a
+workload. Its fields split into two groups:
+
+  * **plan-shaping** fields (graph fingerprint, model + registry
+    generation, message-passing model, rounds, mesh dims, buffer bytes,
+    alpha, feat_in, bidir) — any change means a genuinely different
+    relay schedule, so the plan cache misses and a new ``CommPlan`` is
+    built;
+  * **aggregation-backend** fields (``agg_impl``, ``ell_block_slots``,
+    ``ell_edge_align``) — they select/shape the Compute-step encoding of
+    the SAME schedule. :meth:`PlanKey.plan_identity` zeroes them, and
+    the plan cache is keyed on that sub-key, so switching backends NEVER
+    replans; the ELL layout cache is keyed on the FULL key, so a layout
+    can never be served for the wrong plan or the wrong block shape.
+
+Re-registering a model (``register_model(..., overwrite=True)``) bumps
+the registry generation baked into every key, so stale engines can keep
+running their old spec but can never poison the caches for fresh ones.
 """
 from __future__ import annotations
 
@@ -49,6 +76,9 @@ from repro.core.graph import Graph
 from repro.core.partition import RoundPartition, TorusMesh, make_partition
 from repro.core.plan import CommPlan, build_plan
 from repro.gcn.registry import ModelSpec, get_model
+from repro.kernels.spmm import ops as spmm_ops
+
+resolve_agg_impl = spmm_ops.resolve_impl  # "auto" -> "pallas" | "jnp"
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +88,10 @@ from repro.gcn.registry import ModelSpec, get_model
 
 @dataclass(frozen=True)
 class PlanKey:
+    """Full cache identity of one workload (see the module docstring for
+    the two-group invalidation contract). The plan cache is keyed on
+    :meth:`plan_identity`; the ELL layout cache on the full key."""
+
     graph_fp: str
     model: str
     message_passing: str
@@ -72,9 +106,30 @@ class PlanKey:
     # registry generation of the model spec: a re-registered model must
     # never hit plans built for its predecessor (even via stale engines)
     model_gen: int
+    # aggregation-backend fields: part of the key (a layout/compiled step
+    # for one backend is never served for another) but NOT of the plan
+    # identity (switching backends never replans)
+    agg_impl: str = "jnp"
+    ell_block_slots: int = 128
+    ell_edge_align: int = 512
+
+    def plan_identity(self) -> "PlanKey":
+        """The sub-key that determines the ``CommPlan`` itself: the
+        aggregation-backend fields are normalized away, so keys that
+        differ only in ``agg_impl`` / ELL shape share one plan."""
+        return dataclasses.replace(self, agg_impl="", ell_block_slots=0,
+                                   ell_edge_align=0)
 
 
 _PLAN_CACHE: dict[PlanKey, CommPlan] = {}
+# host-side blocked-ELL layouts, cached alongside the plan they encode;
+# keyed by the FULL PlanKey so a layout can never outlive or mismatch its
+# plan (same graph/model/mesh AND same block shape). Alignment padding
+# makes an entry strictly larger than the COO arrays it re-encodes, so
+# like _PREP_CACHE (and unlike plans) the cache is LRU-bounded.
+_ELL_CACHE: "OrderedDict[PlanKey, tuple[np.ndarray, np.ndarray, np.ndarray]]" \
+    = OrderedDict()
+_ELL_CACHE_MAX = 8
 # prepared graphs are only needed for plan builds and reference() and can
 # be tens of MB each, so unlike plans they are LRU-bounded
 _PREP_CACHE: "OrderedDict[tuple[str, str, int], tuple[Graph, np.ndarray]]" \
@@ -85,24 +140,29 @@ _CACHE_STATS = {"hits": 0, "misses": 0}
 
 def plan_cache_stats() -> dict:
     """Plan-cache hit/miss counters plus current entry count."""
-    return dict(_CACHE_STATS, entries=len(_PLAN_CACHE))
+    return dict(_CACHE_STATS, entries=len(_PLAN_CACHE),
+                ell_entries=len(_ELL_CACHE))
 
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _ELL_CACHE.clear()
     _PREP_CACHE.clear()
     _CACHE_STATS.update(hits=0, misses=0)
 
 
 def invalidate_model(name: str) -> None:
-    """Drop cached prepared graphs / plans for one model name (called by
-    the registry when a model is re-registered with ``overwrite``).
-    Correctness does not depend on this — cache keys carry the registry
-    generation — it just releases the superseded entries' memory."""
+    """Drop cached prepared graphs / plans / ELL layouts for one model
+    name (called by the registry when a model is re-registered with
+    ``overwrite``). Correctness does not depend on this — cache keys
+    carry the registry generation — it just releases the superseded
+    entries' memory."""
     for k in [k for k in _PREP_CACHE if k[1] == name]:
         del _PREP_CACHE[k]
     for k in [k for k in _PLAN_CACHE if k.model == name]:
         del _PLAN_CACHE[k]
+    for k in [k for k in _ELL_CACHE if k.model == name]:
+        del _ELL_CACHE[k]
 
 
 def graph_fingerprint(graph: Graph) -> str:
@@ -142,8 +202,10 @@ class GCNEngine:
         self._mesh_jax = mesh_jax
         self._graph_fp: str | None = None
         self._plan: CommPlan | None = None
-        self._plan_dev = None
-        self._layer_step = None
+        self._agg_impl: str | None = None  # resolved lazily (touches jax)
+        # per-backend lazies: device plan arrays and compiled layer steps
+        self._plan_dev: dict[str, object] = {}
+        self._layer_step: dict[str, object] = {}
 
     # ---------------- construction ----------------
 
@@ -198,18 +260,38 @@ class GCNEngine:
         return self._graph_fp
 
     @property
-    def plan_key(self) -> PlanKey:
+    def agg_impl(self) -> str:
+        """The engine's default aggregation backend, resolved from
+        ``cfg.agg_impl`` ("auto" picks by jax backend; cached because
+        resolution initializes the jax backend)."""
+        if self._agg_impl is None:
+            self._agg_impl = resolve_agg_impl(self.cfg.agg_impl)
+        return self._agg_impl
+
+    def _impl(self, agg_impl: str | None) -> str:
+        """Per-call backend override -> concrete impl."""
+        return self.agg_impl if agg_impl is None else \
+            resolve_agg_impl(agg_impl)
+
+    def plan_key_for(self, agg_impl: str | None = None) -> PlanKey:
         return PlanKey(self.graph_fp, self.cfg.model,
                        self.cfg.message_passing, self.cfg.use_rounds,
                        self.dims, self.cfg.agg_buffer_bytes, self.bidir,
                        self.cfg.alpha, self.cfg.graph.feat_in,
-                       self.model_spec.gen)
+                       self.model_spec.gen,
+                       agg_impl=self._impl(agg_impl),
+                       ell_block_slots=self.cfg.ell_block_slots,
+                       ell_edge_align=self.cfg.ell_edge_align)
+
+    @property
+    def plan_key(self) -> PlanKey:
+        return self.plan_key_for(None)
 
     @property
     def plan_cached(self) -> bool:
         """True when this engine's plan is already in the process cache
         (checking does not build or count as a hit/miss)."""
-        return self.plan_key in _PLAN_CACHE
+        return self.plan_key.plan_identity() in _PLAN_CACHE
 
     def prepared_graph(self) -> tuple[Graph, np.ndarray]:
         """Model-weighted graph (self loops + edge weights), cached per
@@ -227,9 +309,11 @@ class GCNEngine:
 
     @property
     def plan(self) -> CommPlan:
-        """The static relay schedule — built once per PlanKey, ever."""
+        """The static relay schedule — built once per plan identity,
+        ever (aggregation-backend fields do not participate: switching
+        ``agg_impl`` never replans)."""
         if self._plan is None:
-            key = self.plan_key
+            key = self.plan_key.plan_identity()
             hit = key in _PLAN_CACHE
             _CACHE_STATS["hits" if hit else "misses"] += 1
             if not hit:
@@ -240,15 +324,44 @@ class GCNEngine:
             self._plan = _PLAN_CACHE[key]
         return self._plan
 
+    def statics_for(self, agg_impl: str | None = None) -> mp.ExchangeStatics:
+        return mp.exchange_statics(
+            self.plan, self.axis_names, agg_impl=self._impl(agg_impl),
+            ell_block_slots=self.cfg.ell_block_slots)
+
     @property
     def statics(self) -> mp.ExchangeStatics:
-        return mp.exchange_statics(self.plan, self.axis_names)
+        return self.statics_for(None)
 
-    def plan_arrays(self):
-        """Device-layout plan arrays (cached jnp views of the plan)."""
-        if self._plan_dev is None:
-            self._plan_dev = mp.plan_device_arrays(self.plan)
-        return self._plan_dev
+    def ell_layout(self):
+        """Blocked-ELL encoding of this plan's aggregation edge list —
+        ``(seg, rows, w)``, each ``(R, N, nb, Eb)`` (see
+        ``repro.kernels.spmm.ops`` for the layout invariants). Built
+        host-side once per full PlanKey and cached alongside the plan."""
+        key = dataclasses.replace(self.plan_key, agg_impl="pallas")
+        if key not in _ELL_CACHE:
+            plan = self.plan
+            _ELL_CACHE[key] = spmm_ops.build_ell_layout_rounds(
+                plan.edge_repl, plan.edge_slot, plan.edge_w,
+                plan.part.slots_per_round,
+                block_slots=self.cfg.ell_block_slots,
+                edge_align=self.cfg.ell_edge_align)
+            while len(_ELL_CACHE) > _ELL_CACHE_MAX:
+                _ELL_CACHE.popitem(last=False)
+        else:
+            _ELL_CACHE.move_to_end(key)
+        return _ELL_CACHE[key]
+
+    def plan_arrays(self, agg_impl: str | None = None):
+        """Device-layout plan arrays (cached jnp views of the plan), one
+        tree per aggregation backend: the ``"pallas"`` tree carries the
+        precomputed ELL tensors in place of the COO edge arrays, so each
+        backend uploads its encoding exactly once."""
+        impl = self._impl(agg_impl)
+        if impl not in self._plan_dev:
+            ell = self.ell_layout() if impl == "pallas" else None
+            self._plan_dev[impl] = mp.plan_device_arrays(self.plan, ell=ell)
+        return self._plan_dev[impl]
 
     @property
     def mesh_jax(self):
@@ -259,47 +372,61 @@ class GCNEngine:
 
     # ---------------- compiled exchange ----------------
 
-    def _exchange_fn(self):
+    def exchange_fn(self, agg_impl: str | None = None):
+        """Public accessor for the engine's shard_map'd exchange closure
+        (``(pdev, feats) -> (*dims, R, slots, F)``) — e.g. the dry-run
+        lowers exactly this, so it can never drift from ``forward``.
+        Pair it with :meth:`plan_arrays` for the matching input tree."""
+        return self._exchange_fn(agg_impl)
+
+    def _exchange_fn(self, agg_impl: str | None = None):
         """The shard_map'd exchange ``(pdev, feats) -> (*dims, R, slots,
         F)`` — the one closure both the compiled layer step and the
-        traced byte measurement use, so they can never diverge."""
+        traced byte measurement use, so they can never diverge.
+        ``check_rep`` is disabled for the pallas backend (pallas_call has
+        no shard_map replication rule); the exchange's out_specs make the
+        replication explicit either way."""
         from jax.sharding import PartitionSpec as P
 
-        st = self.statics
+        impl = self._impl(agg_impl)
+        st = self.statics_for(impl)
         mesh = self.mesh_jax
         names = self.axis_names
         nd = len(self.dims)
         plan_spec = P(None, *names)  # (R, *dims, ...)
         feat_spec = P(*names)  # (*dims, Vp, F)
-        pdev_tree = self.plan_arrays()
+        pdev_tree = self.plan_arrays(impl)
 
         @partial(jax_compat.shard_map, mesh=mesh,
                  in_specs=(jax.tree.map(lambda _: plan_spec, pdev_tree),
                            feat_spec),
-                 out_specs=P(*(names + (None, None, None))))
+                 out_specs=P(*(names + (None, None, None))),
+                 check_rep=impl != "pallas")
         def _exchange(pdev, feats):
             accs = mp.exchange_and_aggregate(st, pdev, feats)
             return accs[(None,) * nd]  # re-add mesh dims
 
         return _exchange
 
-    def _compiled_layer_step(self):
-        """jit(shard_map exchange + combine): one layer of the network.
-        Shapes vary per layer; jax's jit cache specializes per shape."""
-        if self._layer_step is None:
+    def _compiled_layer_step(self, agg_impl: str | None = None):
+        """jit(shard_map exchange + combine): one layer of the network,
+        cached per aggregation backend. Shapes vary per layer; jax's jit
+        cache specializes per shape."""
+        impl = self._impl(agg_impl)
+        if impl not in self._layer_step:
             nd = len(self.dims)
             combine = self.model_spec.combine
-            exchange = self._exchange_fn()
+            exchange = self._exchange_fn(impl)
 
             def step(pdev, x, layer, last):
                 accs = exchange(pdev, x)  # (*dims, R, slots, F)
                 agg = accs.reshape(accs.shape[:nd] + (-1, accs.shape[-1]))
                 return combine(layer, agg, x, last)
 
-            self._layer_step = jax.jit(
+            self._layer_step[impl] = jax.jit(
                 step, static_argnames=("last",),
                 donate_argnums=(1,) if self.donate else ())
-        return self._layer_step
+        return self._layer_step[impl]
 
     # ---------------- parameters ----------------
 
@@ -328,13 +455,17 @@ class GCNEngine:
         return mp.unshard_features(self.plan, np.asarray(local),
                                    self.graph.num_vertices)
 
-    def forward(self, feats, params=None):
+    def forward(self, feats, params=None, *, agg_impl: str | None = None):
         """Run the full network through the compiled exchange.
 
         ``feats`` is either a global ``(V, F)`` host array (returns a
         global ``(V, F_out)`` numpy array) or a pre-sharded
         ``(*dims, Vp, F)`` device array (returns the sharded result).
+        ``agg_impl`` overrides the engine's aggregation backend for this
+        call ("jnp" | "pallas" | "auto"); switching never replans — only
+        the Compute step's encoding changes.
         """
+        impl = self._impl(agg_impl)
         params = self._resolve_params(params)
         nd = len(self.dims)
         feats_nd = np.ndim(feats)
@@ -352,8 +483,8 @@ class GCNEngine:
             raise ValueError(
                 f"feats must be (V, F) or (*{self.dims}, Vp, F); "
                 f"got ndim={feats_nd}")
-        step = self._compiled_layer_step()
-        pdev = self.plan_arrays()
+        step = self._compiled_layer_step(impl)
+        pdev = self.plan_arrays(impl)
         for li, layer in enumerate(params):
             x = step(pdev, x, layer, last=li == len(params) - 1)
         return self.unshard(np.asarray(x)) if is_global else x
@@ -384,7 +515,23 @@ class GCNEngine:
           :meth:`measured_link_bytes` (traces the exchange and counts
           actual ppermute operands);
         * ``plan_executor_link_bytes`` — the planner's own analytic count
-          of the same quantity (``executor_feat_slots``).
+          of the same quantity (``executor_feat_slots``);
+        * ``agg_dense_bytes`` / ``agg_ell_bytes`` — estimated off-chip
+          traffic of one full exchange's Compute step under each
+          aggregation backend, sized from the ACTUAL layouts the two
+          backends encode (the padded COO edge slots the dense scatter
+          reads + read-modify-writes, vs the padded ELL message stream +
+          one accumulator-tile writeback — the kernel keeps the
+          accumulator resident in VMEM). ``agg_traffic_reduction`` is
+          ``1 - ell/dense``: the repo-level mirror of the paper's 73 %
+          off-chip-access-reduction claim (§III). Two honesty caveats:
+          on padding-dominated smoke graphs the reduction can go
+          negative (alignment overhead is counted), and the ELL figure
+          models the kernel's *streaming design* — today's unfused
+          implementation materializes the gathered message array via XLA
+          before the pallas_call, adding roughly one extra message-
+          stream write+read until the gather is fused into the kernel
+          (tracked in ROADMAP.md).
         """
         plan = self.plan
         if feat_dim is None:
@@ -394,30 +541,54 @@ class GCNEngine:
         exec_slots = sum(
             (sum(hl) + sum(hlr)) * N * R
             for hl, hlr in zip(st.hop_lens, st.hop_lens_rev))
+        # ELL shape only (no layout materialization — stats() must stay
+        # cheap for jnp-only engines); identical to what ell_layout()
+        # would build, by construction
+        nb, Eb = spmm_ops.ell_layout_shape(
+            plan.edge_slot, plan.edge_w, plan.part.slots_per_round,
+            self.cfg.ell_block_slots, self.cfg.ell_edge_align)
+        # dense COO scatter: gather-read each padded edge slot, then
+        # read-modify-write the accumulator row per edge + final table
+        dense_slots = 3 * plan.stats["agg_edge_slots_padded"] \
+            + plan.stats["agg_acc_slots"]
+        # blocked ELL: stream the padded message rows once; accumulator
+        # tiles stay in VMEM and are written back once per block
+        ell_slots = R * N * nb * (Eb + self.cfg.ell_block_slots)
         out = dict(plan.stats)
         out.update(
             feat_dim=feat_dim,
             dtype_bytes=dtype_bytes,
+            agg_impl=self.agg_impl,
             link_bytes=plan.stats["link_feat_hops"] * feat_dim * dtype_bytes,
             executor_link_bytes=exec_slots * feat_dim * dtype_bytes,
             plan_executor_link_bytes=(
                 plan.stats["executor_feat_slots"] * feat_dim * dtype_bytes),
+            agg_dense_bytes=dense_slots * feat_dim * dtype_bytes,
+            agg_ell_bytes=ell_slots * feat_dim * dtype_bytes,
+            agg_traffic_reduction=1.0 - ell_slots / max(dense_slots, 1),
         )
         return out
 
     def measured_link_bytes(self, feat_dim: int | None = None,
-                            dtype=jnp.float32) -> int:
+                            dtype=jnp.float32,
+                            agg_impl: str | None = None) -> int:
         """Bytes one exchange actually moves through ``ppermute``,
         measured from the TRACED executor: the exchange is traced to a
         jaxpr and every ppermute operand is summed (x scan trip counts,
         x mesh size). Independent of ``CommPlan.stats`` — this is the
-        real cross-check against ``stats()['executor_link_bytes']``."""
+        real cross-check against ``stats()['executor_link_bytes']``.
+        The count is backend-invariant (aggregation never touches the
+        links); ``agg_impl`` lets tests assert exactly that. Note that
+        ``agg_impl="pallas"`` traces through the pallas plan tree, which
+        builds (and caches) the ELL layout if no prior pallas execution
+        has — intended for parity checks on test-scale plans, not as a
+        cheap accounting call on paper-scale ones."""
         if feat_dim is None:
             feat_dim = self._default_feat_dim()
         Vp = self.plan.part.vertices_per_node()
         feats_abs = jax.ShapeDtypeStruct(self.dims + (Vp, feat_dim), dtype)
-        jaxpr = jax.make_jaxpr(self._exchange_fn())(self.plan_arrays(),
-                                                    feats_abs)
+        jaxpr = jax.make_jaxpr(self._exchange_fn(agg_impl))(
+            self.plan_arrays(agg_impl), feats_abs)
         return _ppermute_payload_bytes(jaxpr.jaxpr, 1)
 
     def _default_feat_dim(self) -> int:

@@ -13,6 +13,12 @@ weights, so a model is fully described by three callables:
     phase applied after the distributed exchange (and in the exact
     single-device reference, so the two stay comparable by definition).
 
+Models are aggregation-BACKEND-agnostic by construction: because all
+aggregation semantics live in the per-edge weights, the executor's
+Compute step can run either as a COO scatter or through the Pallas
+blocked-ELL kernel (``GCNConfig.agg_impl``) without the model noticing —
+``combine`` always receives the same segment-summed ``agg`` tensor.
+
 New aggregation semantics are a one-function-each addition:
 
     from repro.gcn import register_model, ModelSpec

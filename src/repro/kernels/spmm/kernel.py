@@ -10,6 +10,18 @@ computes acc_block += ind @ messages — a dense (bs, be) x (be, bf) MXU
 matmul. This is the VMEM/MXU-native form of the paper's 1x128 systolic
 reduction rows.
 
+Layout contract (established by ``ops.build_ell_layout`` — see that
+module's docstring for the full invariant list):
+  * edges arrive grouped by destination-slot block; ``seg`` is the slot
+    index *within* the block, so the accumulator tile for one grid row
+    is a dense ``(block_slots, block_feat)`` VMEM scratch that stays
+    resident across all edge blocks (``acc_ref`` is initialized at the
+    first edge block and flushed at the last — off-chip traffic is one
+    message stream in, one accumulator tile out);
+  * padding entries carry ``seg == -1``, which the iota compare maps to
+    an all-zero indicator row (and their weight is already 0), so no
+    masking pass is needed.
+
 Inputs (built by ops.build_ell_layout from the COO edge lists in the
 communication plan):
   messages: (n_slot_blocks, Eb, F)  gathered+weighted neighbor features
@@ -25,6 +37,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _divisor_at_most(n: int, k: int) -> int:
+    """Largest divisor of ``n`` that is <= ``k`` (>= 1)."""
+    k = max(1, min(k, n))
+    while n % k:
+        k -= 1
+    return k
 
 
 def _spmm_kernel(seg_ref, msg_ref, o_ref, acc_ref, *, block_slots,
@@ -51,11 +71,15 @@ def spmm_ell(seg, messages, *, block_slots: int = 128,
              block_edges: int = 512, block_feat: int = 128,
              interpret: bool = False):
     """seg: (nb, Eb) int32 (-1 pad); messages: (nb, Eb, F).
-    Returns acc (nb, block_slots, F) — caller reshapes to (slots, F)."""
+    Returns acc (nb, block_slots, F) — caller reshapes to (slots, F).
+
+    ``block_edges`` / ``block_feat`` are clamped to the LARGEST divisor
+    of Eb / F that does not exceed the request, so any padded layout
+    tiles evenly without collapsing to degenerate tile sizes (a gcd
+    would, e.g. gcd(1022, 512) == 2)."""
     nb, Eb, F = messages.shape
-    block_edges = min(block_edges, Eb)
-    block_feat = min(block_feat, F)
-    assert Eb % block_edges == 0 and F % block_feat == 0
+    block_edges = _divisor_at_most(Eb, block_edges)
+    block_feat = _divisor_at_most(F, block_feat)
     ne = Eb // block_edges
     nf = F // block_feat
 

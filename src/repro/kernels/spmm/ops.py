@@ -1,4 +1,29 @@
-"""Jit'd wrapper + layout builder for the aggregation SpMM kernel."""
+"""Jit'd wrapper + host-side ELL layout builders for the aggregation SpMM.
+
+This module is the seam between the host-side planner and the Pallas
+kernel: :func:`build_ell_layout` re-packs a COO edge list into the
+blocked-ELL form the kernel consumes, and :func:`build_ell_layout_rounds`
+does the same for a whole ``CommPlan`` worth of per-(round, node) edge
+lists with one common shape (SPMD requires identical shapes per shard).
+
+ELL layout invariants (relied on by ``kernel.spmm_ell`` and by the
+executor in ``repro.core.message_passing``):
+
+  * **slot blocking** — destination slots are grouped into blocks of
+    ``block_slots``; block ``b`` owns slots ``[b*block_slots, (b+1)*
+    block_slots)`` and ``seg`` holds the *within-block* slot index.
+  * **slot padding** — unused entries carry ``seg == -1`` (matches no
+    slot in the kernel's iota compare) AND ``weight == 0`` (contributes
+    nothing even where the gather is materialized), so padding is
+    doubly neutralized.
+  * **replica ordering** — ``rows`` indexes the replica buffer in the
+    planner's allocation order; padded entries point at row 0, which
+    always exists (``replica_rows >= 1``) and is masked by the zero
+    weight.
+  * **edge alignment** — every block row is padded to a common width
+    ``Eb`` that is a multiple of ``edge_align``, so the kernel's edge
+    grid divides evenly.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,23 +35,52 @@ import numpy as np
 from repro.kernels.spmm import kernel as _k
 from repro.kernels.spmm import ref as _ref
 
+AGG_IMPLS = ("jnp", "pallas")
+
 
 def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_impl(impl: str = "auto") -> str:
+    """Resolve an aggregation-backend request to a concrete impl.
+
+    ``"auto"`` picks the Pallas kernel on TPU and the portable jnp
+    scatter-add elsewhere (mirroring how ``repro.nn.attention`` treats
+    its ``impl`` axis: auto = portable default, explicit ``"pallas"``
+    forces the kernel — in interpret mode off-TPU, so tests exercise
+    the identical code path).
+    """
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in AGG_IMPLS:
+        raise ValueError(
+            f"unknown aggregation impl {impl!r}; expected 'auto', "
+            f"or one of {AGG_IMPLS}")
+    return impl
+
+
+def ell_width(counts_max: int, edge_align: int) -> int:
+    """Common padded block-row width for a max per-block edge count."""
+    return max(edge_align, -(-int(max(counts_max, 1)) // edge_align)
+               * edge_align)
+
+
 def build_ell_layout(edge_repl: np.ndarray, edge_slot: np.ndarray,
                      edge_w: np.ndarray, num_slots: int,
-                     block_slots: int = 128, edge_align: int = 512):
+                     block_slots: int = 128, edge_align: int = 512,
+                     width: int | None = None):
     """Host-side: sort COO edges by slot block and pad per block.
 
     Returns (seg (nb, Eb), gather_rows (nb, Eb), weights (nb, Eb)) where
-    seg is the within-block slot index (-1 pad)."""
+    seg is the within-block slot index (-1 pad). ``width`` forces a
+    common Eb across independently-built layouts (the batched builder
+    below uses it so every (round, node) shard has one static shape)."""
     nb = max(1, -(-num_slots // block_slots))
     blk = edge_slot // block_slots
     order = np.argsort(blk, kind="stable")
     counts = np.bincount(blk, minlength=nb)
-    Eb = max(edge_align, -(-int(counts.max(initial=1)) // edge_align) * edge_align)
+    Eb = width or ell_width(int(counts.max(initial=1)), edge_align)
     seg = np.full((nb, Eb), -1, np.int32)
     rows = np.zeros((nb, Eb), np.int32)
     w = np.zeros((nb, Eb), np.float32)
@@ -37,6 +91,52 @@ def build_ell_layout(edge_repl: np.ndarray, edge_slot: np.ndarray,
         seg[b, :sel.size] = edge_slot[sel] - b * block_slots
         rows[b, :sel.size] = edge_repl[sel]
         w[b, :sel.size] = edge_w[sel]
+    return seg, rows, w
+
+
+def ell_layout_shape(edge_slot: np.ndarray, edge_w: np.ndarray,
+                     num_slots: int, block_slots: int = 128,
+                     edge_align: int = 512) -> tuple[int, int]:
+    """``(nb, Eb)`` the batched layout below would produce, computed
+    WITHOUT materializing any layout arrays (one vectorized bincount).
+    Lets byte accounting size the ELL encoding cheaply."""
+    R, N, _ = edge_slot.shape
+    nb = max(1, -(-num_slots // block_slots))
+    valid = edge_w != 0.0
+    cmax = 1
+    if valid.any():
+        shard = np.broadcast_to(
+            np.arange(R * N).reshape(R, N, 1), edge_slot.shape)
+        key = shard[valid] * nb + edge_slot[valid] // block_slots
+        cmax = int(np.bincount(key).max())
+    return nb, ell_width(cmax, edge_align)
+
+
+def build_ell_layout_rounds(edge_repl: np.ndarray, edge_slot: np.ndarray,
+                            edge_w: np.ndarray, num_slots: int,
+                            block_slots: int = 128, edge_align: int = 512):
+    """Batched :func:`build_ell_layout` over ``(R, N, E)`` plan arrays.
+
+    Zero-weight COO entries are the planner's padding and are dropped
+    before layout, then every (round, node) shard is padded back to ONE
+    common ``(nb, Eb)`` shape (max over shards, aligned — see
+    :func:`ell_layout_shape`) so the arrays can ride the same
+    ``(R, *mesh_dims, ...)`` sharding as the rest of the plan. Returns
+    ``(seg, rows, w)`` each shaped ``(R, N, nb, Eb)``.
+    """
+    R, N, _ = edge_repl.shape
+    nb, Eb = ell_layout_shape(edge_slot, edge_w, num_slots, block_slots,
+                              edge_align)
+    seg = np.full((R, N, nb, Eb), -1, np.int32)
+    rows = np.zeros((R, N, nb, Eb), np.int32)
+    w = np.zeros((R, N, nb, Eb), np.float32)
+    for r in range(R):
+        for n in range(N):
+            sel = np.flatnonzero(edge_w[r, n] != 0.0)
+            seg[r, n], rows[r, n], w[r, n] = build_ell_layout(
+                edge_repl[r, n][sel], edge_slot[r, n][sel],
+                edge_w[r, n][sel], num_slots, block_slots, edge_align,
+                width=Eb)
     return seg, rows, w
 
 

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 
 from repro.config import get_gcn_config
 from repro.core import jax_compat
-from repro.core import message_passing as mp
 from repro.core.partition import make_partition
 from repro.core.rmat import build_graph
 from repro.gcn import GCNEngine
@@ -60,8 +59,13 @@ def lower_gcn_cell(arch: str, mesh_kind: str, mesh, *, bidir: bool = False,
     part_full = make_partition(cfg_full, eng.torus.num_nodes)
     round_scale = max(1.0, part_full.num_rounds / plan.num_rounds)
 
-    st = eng.statics
+    # full configs request agg_impl="pallas"; the engine resolves "auto"
+    # by backend, and the dry-run lowers whatever the config asks for —
+    # through the ENGINE's own exchange closure, so the lowered cell can
+    # never drift from what engine.forward compiles
+    agg_impl = eng.agg_impl
     pdev = eng.plan_arrays()
+    exchange = eng.exchange_fn()
     axis_names = eng.axis_names
     dims = eng.dims
     F_in, F_out = g_full.feat_in, g_full.feat_hidden
@@ -74,16 +78,7 @@ def lower_gcn_cell(arch: str, mesh_kind: str, mesh, *, bidir: bool = False,
     nd = len(dims)
 
     def step(pdev, feats, w, b):
-        @jax_compat.shard_map(mesh=mesh,
-                              in_specs=(jax.tree.map(lambda _: plan_spec,
-                                                     pdev),
-                                        feat_spec),
-                              out_specs=P(*(axis_names + (None, None, None))))
-        def _exchange(pdev, feats):
-            accs = mp.exchange_and_aggregate(st, pdev, feats)
-            return accs[(None,) * nd]
-
-        accs = _exchange(pdev, feats)
+        accs = exchange(pdev, feats)
         agg = accs.reshape(accs.shape[:nd] + (-1, accs.shape[-1]))
         return jax.nn.relu(agg @ w + b)
 
@@ -117,6 +112,7 @@ def lower_gcn_cell(arch: str, mesh_kind: str, mesh, *, bidir: bool = False,
     rec = {
         "arch": arch, "shape": "graph", "mesh": mesh_kind,
         "kind": "gcn", "bidir": bidir, "buffer_mult": buffer_mult,
+        "agg_impl": agg_impl,
         "graph": {"V": g_full.num_vertices, "E": g_full.num_edges,
                   "twin_V": twin.num_vertices, "twin_E": twin.num_edges,
                   "scale": scale},

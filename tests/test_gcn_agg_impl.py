@@ -1,0 +1,188 @@
+"""Aggregation-backend (``agg_impl``) coverage: pallas-vs-jnp parity
+against the engine's exact oracle for every registered model and every
+message-passing mode (including the SREM rounds path), plus the cache
+contract — ``agg_impl`` is part of the PlanKey, but switching backends
+never replans.
+
+Runs in-process on the 1-CPU view with a (1, 1) mesh (the pallas kernel
+runs in interpret mode off-TPU — the same code path a TPU takes, minus
+Mosaic lowering). The 8-device variants live in _gcn_engine_main.py.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+V, E, F = 256, 2048, 8
+
+
+def _cfg(**over):
+    from repro.config import get_gcn_config
+
+    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
+    # small aggregation buffer -> several SREM rounds even at |V|=256
+    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+
+
+def _graph():
+    from repro.core.graph import erdos
+
+    return erdos(V, E, seed=11)
+
+
+def _feats(rng_seed=0, f=F):
+    return np.random.default_rng(rng_seed).normal(
+        size=(V, f)).astype(np.float32)
+
+
+def _rel_err(a, b):
+    return np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+
+
+def test_parity_all_registered_models():
+    """pallas and jnp backends both match reference() for every model
+    in the registry (GCN / GIN / SAGE + any user-registered)."""
+    import jax
+    from repro.gcn import GCNEngine, registered_models
+
+    g = _graph()
+    feats = _feats()
+    for model in registered_models():
+        eng = GCNEngine.build(_cfg(model=model), g, (1, 1))
+        eng.init_params(jax.random.PRNGKey(3), [F, 12, 6])
+        assert eng.plan.num_rounds > 1, "rounds path must be exercised"
+        ref = eng.reference(feats)
+        for impl in ("jnp", "pallas"):
+            err = _rel_err(eng.forward(feats, agg_impl=impl), ref)
+            assert err < 1e-4, (model, impl, err)
+
+
+@pytest.mark.parametrize("mpm", ["oppe", "oppr", "oppm"])
+@pytest.mark.parametrize("use_rounds", [True, False])
+def test_parity_all_modes(mpm, use_rounds):
+    """The ELL path must agree with the oracle under every
+    message-passing model, with and without SREM rounds."""
+    import jax
+    from repro.gcn import GCNEngine
+
+    eng = GCNEngine.build(
+        _cfg(message_passing=mpm, use_rounds=use_rounds), _graph(), (1, 1))
+    eng.init_params(jax.random.PRNGKey(0), [F, 6])
+    feats = _feats(1)
+    ref = eng.reference(feats)
+    assert _rel_err(eng.forward(feats, agg_impl="pallas"), ref) < 1e-4
+    assert (eng.plan.num_rounds > 1) == use_rounds
+
+
+def test_agg_impl_is_part_of_key_but_never_replans():
+    from repro.gcn import GCNEngine, plan_cache_stats
+
+    g = _graph()
+    e_jnp = GCNEngine.build(_cfg(agg_impl="jnp"), g, (1, 1))
+    e_pal = GCNEngine.build(_cfg(agg_impl="pallas"), g, (1, 1))
+    # agg_impl IS part of the (full) key: layouts/compiled steps are
+    # per-backend...
+    assert e_jnp.plan_key != e_pal.plan_key
+    assert e_jnp.plan_key.agg_impl == "jnp"
+    assert e_pal.plan_key.agg_impl == "pallas"
+    # ...but NOT of the plan identity: switching backends never replans
+    assert e_jnp.plan_key.plan_identity() == e_pal.plan_key.plan_identity()
+    before = plan_cache_stats()
+    p1 = e_jnp.plan
+    after_first = plan_cache_stats()
+    assert e_pal.plan is p1, "same CommPlan object across backends"
+    after = plan_cache_stats()
+    assert after["misses"] == after_first["misses"], \
+        "backend switch must not replan"
+    assert after["hits"] == after_first["hits"] + 1
+    # flipping a *plan-shaping* field still separates plans
+    assert e_jnp.with_config(message_passing="oppe").plan is not p1
+    del before
+
+
+def test_ell_layout_cached_alongside_plan():
+    """The host-side ELL layout is built once per full PlanKey, shared
+    by engines on the same workload, and keyed apart by block shape."""
+    from repro.gcn import GCNEngine, plan_cache_stats
+
+    g = _graph()
+    e1 = GCNEngine.build(_cfg(), g, (1, 1))
+    e2 = GCNEngine.build(_cfg(), g, (1, 1))
+    l1 = e1.ell_layout()
+    assert e2.ell_layout() is l1, "same workload must share one layout"
+    seg, rows, w = l1
+    R, N = e1.plan.num_rounds, e1.plan.num_nodes
+    nb = -(-e1.plan.part.slots_per_round // e1.cfg.ell_block_slots)
+    assert seg.shape[:3] == (R, N, nb) and seg.shape == rows.shape == w.shape
+    assert seg.shape[3] % e1.cfg.ell_edge_align == 0
+    # padding invariant: seg == -1 exactly where the weight is the
+    # neutral 0 (the builder drops the planner's zero-weight COO padding
+    # before layout, so every kept entry carries a real weight)
+    assert np.all((seg < 0) == (w == 0.0))
+    # a different block shape is a different full key -> separate layout
+    S = e1.plan.part.slots_per_round
+    small = max(1, S // 2)
+    e3 = GCNEngine.build(_cfg(ell_block_slots=small), g, (1, 1))
+    l3 = e3.ell_layout()
+    assert l3 is not l1 and l3[0].shape[2] == -(-S // small)
+    assert e3.plan is e1.plan, "block shape must not replan either"
+    assert plan_cache_stats()["ell_entries"] >= 2
+
+
+def test_resolution_and_stats_traffic_keys():
+    import jax
+    from repro.gcn import GCNEngine, resolve_agg_impl
+
+    assert resolve_agg_impl("jnp") == "jnp"
+    assert resolve_agg_impl("pallas") == "pallas"
+    auto = resolve_agg_impl("auto")
+    assert auto == ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    with pytest.raises(ValueError):
+        resolve_agg_impl("systolic")
+
+    eng = GCNEngine.build(_cfg(), _graph(), (1, 1))
+    eng.init_params(jax.random.PRNGKey(0), [F, 4])
+    st = eng.stats(feat_dim=F)
+    assert st["agg_impl"] == auto
+    assert st["agg_dense_bytes"] > 0 and st["agg_ell_bytes"] > 0
+    assert st["agg_traffic_reduction"] == pytest.approx(
+        1.0 - st["agg_ell_bytes"] / st["agg_dense_bytes"])
+    # the links are untouched by the aggregation backend: the traced
+    # ppermute payload is identical under both impls
+    assert eng.measured_link_bytes(feat_dim=F, agg_impl="jnp") == \
+        eng.measured_link_bytes(feat_dim=F, agg_impl="pallas")
+    # forward accepts "auto" and the env-var-free explicit spellings
+    feats = _feats(2)
+    out_auto = eng.forward(feats, agg_impl="auto")
+    np.testing.assert_allclose(out_auto, eng.forward(feats), atol=1e-6)
+
+
+def test_ell_layout_rounds_matches_coo():
+    """Property check of the batched layout builder itself: rebuilding
+    the COO sum from the ELL tensors reproduces every (round, node)
+    accumulator."""
+    from repro.gcn import GCNEngine
+    from repro.kernels.spmm import ref as spr
+    import jax.numpy as jnp
+
+    eng = GCNEngine.build(_cfg(), _graph(), (1, 1))
+    plan = eng.plan
+    seg, rows, w = eng.ell_layout()
+    R, N = plan.num_rounds, plan.num_nodes
+    S = plan.part.slots_per_round
+    bs = eng.cfg.ell_block_slots
+    rng = np.random.default_rng(7)
+    replica = rng.normal(size=(plan.replica_rows, 4)).astype(np.float32)
+    for r in range(0, R, max(1, R // 3)):
+        for n in range(N):
+            ref = np.asarray(spr.spmm_coo_ref(
+                jnp.asarray(replica), jnp.asarray(plan.edge_repl[r, n]),
+                jnp.asarray(plan.edge_slot[r, n]),
+                jnp.asarray(plan.edge_w[r, n]), S))
+            msgs = replica[rows[r, n].reshape(-1)].reshape(
+                seg.shape[2], seg.shape[3], -1) * w[r, n][..., None]
+            ell = np.asarray(spr.spmm_ell_ref(
+                jnp.asarray(seg[r, n]), jnp.asarray(msgs), bs))
+            ell = ell.reshape(-1, 4)[:S]
+            np.testing.assert_allclose(ell, ref, atol=1e-4, rtol=1e-4)

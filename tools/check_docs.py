@@ -1,0 +1,82 @@
+"""Docs snippet checker: extract fenced ```python blocks from README.md
+and docs/*.md and EXECUTE them, so the documented quickstarts can never
+rot. Wired into `make docs-check`.
+
+Rules:
+  * only ```python fences run (bash/text fences are illustrative);
+  * blocks in one file share a namespace, in order, like a REPL session —
+    later blocks may use names defined by earlier ones;
+  * a fence immediately preceded by a line containing
+    `<!-- docs-check: skip -->` is skipped (for intentionally
+    non-runnable fragments);
+  * jax is forced to 8 host devices BEFORE any import, so snippets may
+    build multi-device meshes exactly as users would on real hardware.
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import traceback
+from pathlib import Path
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+FENCE = re.compile(r"^```python[ \t]*$")
+SKIP_MARK = "docs-check: skip"
+
+
+def blocks_of(text: str):
+    """Yield (start_line, source) for each runnable python fence."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if FENCE.match(lines[i]):
+            skip = i > 0 and SKIP_MARK in lines[i - 1]
+            j = i + 1
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            if not skip:
+                yield i + 2, "\n".join(lines[i + 1:j])
+            i = j + 1
+        else:
+            i += 1
+
+
+def check_file(path: Path) -> int:
+    ns: dict = {"__name__": "__docs_check__", "__file__": str(path)}
+    failures = 0
+    n = 0
+    for lineno, src in blocks_of(path.read_text()):
+        n += 1
+        try:
+            code = compile(src, f"{path.name}:{lineno}", "exec")
+            exec(code, ns)  # noqa: S102 - executing our own docs is the point
+        except Exception:
+            failures += 1
+            print(f"FAIL {path.name}:{lineno}", flush=True)
+            traceback.print_exc()
+    print(f"# {path.relative_to(ROOT)}: {n - failures}/{n} blocks OK",
+          flush=True)
+    return failures
+
+
+def main(argv) -> int:
+    files = ([Path(a).resolve() for a in argv[1:]] if len(argv) > 1 else
+             [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))])
+    failures = sum(check_file(f) for f in files if f.exists())
+    if failures:
+        print(f"docs-check: {failures} block(s) FAILED")
+        return 1
+    print("docs-check: all snippet blocks ran")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
