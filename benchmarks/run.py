@@ -5,6 +5,10 @@ microbenches. Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run --suite smoke   # engine example
                                                           # + tier-1 tests
                                                           # on 8 host devices
+  PYTHONPATH=src python -m benchmarks.run --suite serve   # multi-graph
+                                                          # GCNService bench,
+                                                          # writes
+                                                          # BENCH_gcn.json
 """
 from __future__ import annotations
 
@@ -27,6 +31,16 @@ MODULES = [
 ]
 
 
+def _forced_host_env(root: Path) -> dict:
+    """Subprocess environment every suite benchmarks under: 8 forced
+    host devices (set before jax initializes) and src on PYTHONPATH."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (str(root / "src") + os.pathsep
+                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    return env
+
+
 def run_smoke() -> int:
     """One-command multi-device smoke: the GCNEngine example (8 forced
     host devices) plus the tier-1 test suite. Each step runs in its own
@@ -34,10 +48,7 @@ def run_smoke() -> int:
     (tests that need a different view re-exec themselves; see
     tests/conftest.py)."""
     root = Path(__file__).resolve().parent.parent
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = (str(root / "src") + os.pathsep
-                         + env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    env = _forced_host_env(root)
     # report which aggregation backend "auto" resolves to in this
     # environment, so the perf numbers below are attributable (probed in
     # a subprocess with the same env/flags the steps run under)
@@ -71,17 +82,42 @@ def run_smoke() -> int:
     return rc
 
 
+def run_serve(json_path: str) -> int:
+    """Multi-graph serving benchmark: the mixed-RMAT GCNService workload
+    (3 graphs x 3 models, interleaved requests, async double-buffered
+    plan upload) on 8 forced host devices, recording the machine-
+    readable perf trajectory to ``json_path`` — suite, wall time,
+    requests/sec, aggregation backend, link bytes, upload-overlap
+    fraction — so future PRs can diff serving perf against a baseline.
+    Runs in a subprocess so the device-count flag precedes jax init."""
+    root = Path(__file__).resolve().parent.parent
+    env = _forced_host_env(root)
+    cmd = [sys.executable, "-m", "repro.launch.gcn_serve",
+           "--mesh", "2x2", "--graphs", "3", "--requests", "24",
+           "--batch", "4", "--json", json_path]
+    print(f"# serve: {' '.join(cmd)}", flush=True)
+    r = subprocess.run(cmd, env=env, cwd=root)
+    print(f"# serve -> {'OK' if r.returncode == 0 else 'FAIL'}", flush=True)
+    return r.returncode
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of module stems")
     ap.add_argument("--suite", default="",
                     help="'smoke' = engine example + tier-1 tests "
-                         "(8 host devices)")
+                         "(8 host devices); 'serve' = multi-graph "
+                         "GCNService bench -> BENCH_gcn.json")
+    ap.add_argument("--json", default="BENCH_gcn.json",
+                    help="perf-record path for --suite serve")
     args = ap.parse_args()
     if args.suite == "smoke":
         sys.exit(run_smoke())
+    elif args.suite == "serve":
+        sys.exit(run_serve(args.json))
     elif args.suite:
-        sys.exit(f"unknown suite {args.suite!r} (expected 'smoke')")
+        sys.exit(f"unknown suite {args.suite!r} "
+                 "(expected 'smoke' or 'serve')")
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
     print("name,us_per_call,derived")

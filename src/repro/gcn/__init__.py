@@ -1,17 +1,24 @@
-"""User-facing GCN session API.
+"""User-facing GCN serving stack: session / cache / service.
 
-``GCNEngine`` owns the mesh pair (jax ``Mesh`` + planner ``TorusMesh``),
-the process-wide communication-plan cache, and the compiled exchange;
-``register_model`` plugs new aggregation semantics into the shared
-execution path. The low-level layers it composes are
-``repro.core.plan`` (host-side mapping) and
-``repro.core.message_passing`` (SPMD executor).
+``GCNEngine`` (session) owns the mesh pair (jax ``Mesh`` + planner
+``TorusMesh``) and the compiled exchange for ONE graph;
+``repro.gcn.cache`` owns every process-wide cache (plans, ELL layouts,
+prepared graphs, compiled layer steps) with byte-bounded LRU eviction;
+``GCNService`` schedules batched multi-graph inference over shared
+sessions with async double-buffered plan upload. ``register_model``
+plugs new aggregation semantics into the shared execution path. The
+low-level layers underneath are ``repro.core.plan`` (host-side mapping)
+and ``repro.core.message_passing`` (SPMD executor).
 """
+from repro.gcn.cache import (
+    PlanKey,
+    cache_stats,
+    graph_fingerprint,
+    set_cache_budget,
+)
 from repro.gcn.engine import (
     GCNEngine,
-    PlanKey,
     clear_plan_cache,
-    graph_fingerprint,
     plan_cache_stats,
     resolve_agg_impl,
 )
@@ -21,11 +28,15 @@ from repro.gcn.registry import (
     register_model,
     registered_models,
 )
+from repro.gcn.service import GCNService, ServeRequest
 
 __all__ = [
     "GCNEngine",
+    "GCNService",
     "ModelSpec",
     "PlanKey",
+    "ServeRequest",
+    "cache_stats",
     "clear_plan_cache",
     "get_model",
     "graph_fingerprint",
@@ -33,4 +44,5 @@ __all__ = [
     "register_model",
     "registered_models",
     "resolve_agg_impl",
+    "set_cache_budget",
 ]

@@ -1,0 +1,373 @@
+"""Process-wide caches for the GCN serving stack.
+
+This is the middle layer of the session/cache/service split:
+
+  * :class:`GCNEngine` (``repro.gcn.engine``) is a thin per-graph
+    *session* — it holds no cached state of its own beyond memoized
+    lookups into this module;
+  * this module owns every process-wide cache the one-time host-side
+    mapping produces, so N engines (or one :class:`~repro.gcn.service.
+    GCNService` juggling N graphs) share mapping work and device
+    uploads;
+  * ``repro.gcn.service`` schedules requests across sessions on top.
+
+Four coherent cache layers, all keyed off :class:`PlanKey`:
+
+  ``plan``   ``PlanKey.plan_identity()`` -> ``CommPlan``. Byte-bounded
+             LRU: the host-side relay schedules of many admitted graphs
+             must fit a configurable budget (``set_cache_budget``), and
+             the least-recently-served graph is evicted first.
+  ``ell``    full ``PlanKey`` -> blocked-ELL tensors (the pallas
+             backend's re-encoding of the plan's aggregation edge
+             list). Byte-bounded LRU.
+  ``prep``   ``(graph_fp, model, gen)`` -> model-weighted graph.
+             Byte-bounded LRU (prepared graphs can be tens of MB).
+  ``step``   executor identity -> jit-compiled layer step. Compiled
+             executors are shared across engines whose
+             ``PlanKey.plan_identity()`` agrees *modulo graph
+             fingerprint* whenever the traced schedule (the
+             ``ExchangeStatics``) matches — two sessions on the same
+             graph, or on different graphs that happen to produce the
+             same static schedule, compile once. Count-bounded LRU
+             (compiled executables have no portable byte size).
+
+Coherence contract: the three derived layers can never outlive the plan
+they encode. Evicting or clearing a plan drops every ELL layout and
+compiled step built from it; :func:`invalidate_model` and
+:func:`clear_all` sweep all four layers in one call (this is the home of
+what used to be three separate, partially-coherent clears inside
+``engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.plan import CommPlan
+
+__all__ = [
+    "PlanKey",
+    "cache_stats",
+    "clear_all",
+    "graph_fingerprint",
+    "invalidate_model",
+    "set_cache_budget",
+]
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    """Full cache identity of one workload. Fields split into two
+    groups (see ``repro.gcn.engine`` module docstring): plan-shaping
+    fields (any change -> genuinely different relay schedule) and
+    aggregation-backend fields (select the Compute-step encoding of the
+    SAME schedule). The plan cache is keyed on :meth:`plan_identity`;
+    the ELL layout cache on the full key."""
+
+    graph_fp: str
+    model: str
+    message_passing: str
+    use_rounds: bool
+    mesh_dims: tuple[int, ...]
+    agg_buffer_bytes: int
+    bidir: bool
+    # partition-shaping fields beyond the buffer size: the round budget
+    # is 2^x <= alpha * M / (feat_in * 4), so both must key the cache
+    alpha: float
+    feat_in: int
+    # registry generation of the model spec: a re-registered model must
+    # never hit plans built for its predecessor (even via stale engines)
+    model_gen: int
+    # aggregation-backend fields: part of the key (a layout/compiled step
+    # for one backend is never served for another) but NOT of the plan
+    # identity (switching backends never replans)
+    agg_impl: str = "jnp"
+    ell_block_slots: int = 128
+    ell_edge_align: int = 512
+
+    def plan_identity(self) -> "PlanKey":
+        """The sub-key that determines the ``CommPlan`` itself: the
+        aggregation-backend fields are normalized away, so keys that
+        differ only in ``agg_impl`` / ELL shape share one plan."""
+        return dataclasses.replace(self, agg_impl="", ell_block_slots=0,
+                                   ell_edge_align=0)
+
+
+def graph_fingerprint(graph: Graph) -> str:
+    """Content hash of the edge list — the plan-cache graph identity."""
+    h = hashlib.sha1()
+    h.update(np.int64(graph.num_vertices).tobytes())
+    h.update(np.ascontiguousarray(graph.src).tobytes())
+    h.update(np.ascontiguousarray(graph.dst).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Byte-bounded LRU store
+# ---------------------------------------------------------------------------
+
+
+class _LruStore:
+    """OrderedDict LRU with a byte budget and hit/miss/eviction stats.
+
+    ``budget_bytes=None`` means unbounded; ``max_entries`` additionally
+    caps the entry count (used by the step cache, whose entries have no
+    meaningful byte size). ``on_evict`` lets the owner cascade evictions
+    into dependent layers. All stores share one reentrant ``lock``
+    (cascades and nested builds re-enter it); ``get`` RELEASES it while
+    building, so a service prefetch thread planning graph B never
+    blocks the main thread's lookups for graph A — first build to
+    commit wins, a losing duplicate is discarded.
+    """
+
+    def __init__(self, name: str, lock, budget_bytes: int | None = None,
+                 max_entries: int | None = None, on_evict=None):
+        self.name = name
+        self.lock = lock
+        self.budget_bytes = budget_bytes
+        self.max_entries = max_entries
+        self.on_evict = on_evict
+        self._d: OrderedDict = OrderedDict()
+        self._bytes: dict = {}
+        self.total_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, build, nbytes=None):
+        """Return the cached value, building (and charging ``nbytes``,
+        a callable of the value) on miss. LRU order is refreshed on
+        hit."""
+        with self.lock:
+            if key in self._d:
+                self.hits += 1
+                self._d.move_to_end(key)
+                return self._d[key]
+            self.misses += 1
+        val = build()  # outside the lock: builds may be seconds long
+        with self.lock:
+            if key in self._d:  # a concurrent builder committed first
+                self._d.move_to_end(key)
+                return self._d[key]
+            nb = int(nbytes(val)) if nbytes is not None else 0
+            self._d[key] = val
+            self._bytes[key] = nb
+            self.total_bytes += nb
+            self._shrink()
+            return val
+
+    def peek(self, key) -> bool:
+        """Membership check that neither counts nor refreshes LRU."""
+        return key in self._d
+
+    def _shrink(self):
+        while ((self.budget_bytes is not None
+                and self.total_bytes > self.budget_bytes
+                and len(self._d) > 1)
+               or (self.max_entries is not None
+                   and len(self._d) > self.max_entries)):
+            key, val = self._d.popitem(last=False)
+            self.total_bytes -= self._bytes.pop(key)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(key, val)
+
+    def drop(self, pred) -> int:
+        """Remove (without cascading) every entry whose key matches."""
+        doomed = [k for k in self._d if pred(k)]
+        for k in doomed:
+            del self._d[k]
+            self.total_bytes -= self._bytes.pop(k)
+        return len(doomed)
+
+    def clear(self):
+        self._d.clear()
+        self._bytes.clear()
+        self.total_bytes = 0
+        self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> dict:
+        return {"entries": len(self._d), "bytes": self.total_bytes,
+                "budget_bytes": self.budget_bytes, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
+
+
+# ---------------------------------------------------------------------------
+# The four layers
+# ---------------------------------------------------------------------------
+
+
+def _plan_nbytes(plan: CommPlan) -> int:
+    """Host-side footprint of one relay schedule (every numpy array the
+    plan carries, including per-phase deposit schedules)."""
+    total = 0
+    for f in dataclasses.fields(plan):
+        total += _tree_nbytes(getattr(plan, f.name))
+    return total
+
+
+def _tree_nbytes(obj) -> int:
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, (list, tuple)):
+        return sum(_tree_nbytes(o) for o in obj)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(_tree_nbytes(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj))
+    return 0
+
+
+# eviction back-pointers: plan identity -> the compiled-step keys built
+# from it (a step key itself excludes the graph fingerprint so equal
+# schedules share one compile; see get_step)
+_STEP_DEPS: dict[PlanKey, set] = {}
+
+
+def _on_plan_evict(key: PlanKey, _plan):
+    # coherence: a plan's derived encodings and compiled executors can
+    # never outlive it — else a re-admitted graph could pair a FRESH
+    # plan with a stale layout built for the evicted one. A step shared
+    # with another live plan simply re-fills on that plan's next use.
+    _ELL.drop(lambda k: k.plan_identity() == key)
+    deps = _STEP_DEPS.pop(key, set())
+    _STEPS.drop(lambda k: k in deps)
+
+
+def _on_step_evict(key, _step):
+    # keep the back-pointer sets in lockstep with the store, or
+    # long-resident plans accumulate dead exec fingerprints forever
+    empty = []
+    for ident, deps in _STEP_DEPS.items():
+        deps.discard(key)
+        if not deps:
+            empty.append(ident)
+    for ident in empty:
+        del _STEP_DEPS[ident]
+
+
+# the budgets are deliberately generous defaults for a laptop-class
+# process; GCNService passes an explicit budget for serving fleets
+_LOCK = threading.RLock()  # service prefetch threads share these caches
+_PLANS = _LruStore("plan", _LOCK, budget_bytes=512 << 20,
+                   on_evict=_on_plan_evict)
+_ELL = _LruStore("ell", _LOCK, budget_bytes=256 << 20)
+_PREP = _LruStore("prep", _LOCK, budget_bytes=256 << 20)
+_STEPS = _LruStore("step", _LOCK, max_entries=64,
+                   on_evict=_on_step_evict)
+
+
+def set_cache_budget(*, plan_bytes: int | None = ...,
+                     ell_bytes: int | None = ...,
+                     prep_bytes: int | None = ...,
+                     step_entries: int | None = ...) -> None:
+    """Reconfigure the byte budgets (``None`` = unbounded; omitted
+    fields keep their current value). Shrinks immediately."""
+    with _LOCK:
+        if plan_bytes is not ...:
+            _PLANS.budget_bytes = plan_bytes
+        if ell_bytes is not ...:
+            _ELL.budget_bytes = ell_bytes
+        if prep_bytes is not ...:
+            _PREP.budget_bytes = prep_bytes
+        if step_entries is not ...:
+            _STEPS.max_entries = step_entries
+        for store in (_PLANS, _ELL, _PREP, _STEPS):
+            store._shrink()
+
+
+def get_plan(key: PlanKey, build) -> CommPlan:
+    """The plan layer: keyed on ``key.plan_identity()`` (switching
+    aggregation backends never replans)."""
+    return _PLANS.get(key.plan_identity(), build, nbytes=_plan_nbytes)
+
+
+def plan_cached(key: PlanKey) -> bool:
+    with _LOCK:
+        return _PLANS.peek(key.plan_identity())
+
+
+def get_ell(key: PlanKey, build):
+    """The ELL-layout layer: keyed on the FULL key (a layout can never
+    be served for the wrong plan or the wrong block shape)."""
+    return _ELL.get(key, build, nbytes=lambda t: sum(a.nbytes for a in t))
+
+
+def get_prep(key: tuple, build) -> tuple[Graph, np.ndarray]:
+    """The prepared-graph layer: ``(graph_fp, model, gen)`` -> model-
+    weighted graph, shared across message-passing models."""
+    def nbytes(val):
+        g2, w = val
+        return g2.src.nbytes + g2.dst.nbytes + w.nbytes
+
+    return _PREP.get(key, build, nbytes=nbytes)
+
+
+def get_step(plan_key: PlanKey, exec_fp: tuple, build):
+    """The compiled-executor layer, keyed on ``exec_fp`` ALONE.
+
+    ``exec_fp`` is the full trace identity of the jitted layer step —
+    the ``ExchangeStatics`` (hop schedule, capacities, rounds, backend)
+    plus model/combine identity, mesh axes and donate flag. The plan's
+    graph fingerprint is deliberately NOT part of it: engines whose
+    ``plan_identity()`` agrees modulo graph fingerprint share one
+    compiled step whenever their schedules match, and jax re-specializes
+    per feature shape underneath.
+
+    ``plan_key`` only records the eviction back-pointer: evicting a plan
+    drops the step entries built from it (a step shared with another
+    live plan simply re-fills on that plan's next use)."""
+    with _LOCK:
+        _STEP_DEPS.setdefault(plan_key.plan_identity(), set()).add(exec_fp)
+    return _STEPS.get(exec_fp, build)
+
+
+def step_cached(plan_key: PlanKey, exec_fp: tuple) -> bool:
+    with _LOCK:
+        return _STEPS.peek(exec_fp)
+
+
+# ---------------------------------------------------------------------------
+# Coherent clearing / reporting
+# ---------------------------------------------------------------------------
+
+
+def clear_all() -> None:
+    """Drop every layer (plans, ELL layouts, prepared graphs, compiled
+    steps) and reset all counters — the one coherent clear."""
+    with _LOCK:
+        for store in (_PLANS, _ELL, _PREP, _STEPS):
+            store.clear()
+        _STEP_DEPS.clear()
+
+
+def invalidate_model(name: str) -> None:
+    """Drop cached state for one model name across ALL four layers
+    (called by the registry when a model is re-registered with
+    ``overwrite``). Correctness does not depend on this — cache keys
+    carry the registry generation — it just releases the superseded
+    entries' memory."""
+    with _LOCK:
+        _PREP.drop(lambda k: k[1] == name)
+        _PLANS.drop(lambda k: k.model == name)
+        _ELL.drop(lambda k: k.model == name)
+        doomed = set()
+        for ident in [k for k in _STEP_DEPS if k.model == name]:
+            doomed |= _STEP_DEPS.pop(ident)
+        _STEPS.drop(lambda k: k in doomed)
+
+
+def cache_stats() -> dict:
+    """Per-layer ``{entries, bytes, budget_bytes, hits, misses,
+    evictions}`` plus the legacy flat counters (``hits``/``misses``
+    track the plan layer, as they always have)."""
+    with _LOCK:
+        out = {s.name: s.stats() for s in (_PLANS, _ELL, _PREP, _STEPS)}
+        out.update(hits=_PLANS.hits, misses=_PLANS.misses,
+                   entries=len(_PLANS._d), ell_entries=len(_ELL._d))
+        return out

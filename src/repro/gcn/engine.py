@@ -53,13 +53,18 @@ workload. Its fields split into two groups:
 Re-registering a model (``register_model(..., overwrite=True)``) bumps
 the registry generation baked into every key, so stale engines can keep
 running their old spec but can never poison the caches for fresh ones.
+
+All process-wide cached state (plans, ELL layouts, prepared graphs,
+compiled layer steps) lives in :mod:`repro.gcn.cache` — the engine is a
+thin per-graph *session* over those shared layers, which is what lets
+:class:`repro.gcn.service.GCNService` serve many graphs from one
+substrate. The module-level ``plan_cache_stats`` / ``clear_plan_cache``
+/ ``invalidate_model`` names are kept as aliases of the cache module's
+coherent operations.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-from collections import OrderedDict
-from dataclasses import dataclass
 from functools import partial
 from typing import Sequence
 
@@ -75,103 +80,18 @@ from repro.core import message_passing as mp
 from repro.core.graph import Graph
 from repro.core.partition import RoundPartition, TorusMesh, make_partition
 from repro.core.plan import CommPlan, build_plan
+from repro.gcn import cache
+from repro.gcn.cache import PlanKey, graph_fingerprint
 from repro.gcn.registry import ModelSpec, get_model
 from repro.kernels.spmm import ops as spmm_ops
 
 resolve_agg_impl = spmm_ops.resolve_impl  # "auto" -> "pallas" | "jnp"
 
-
-# ---------------------------------------------------------------------------
-# Plan cache (process-wide; engines share mapping work)
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class PlanKey:
-    """Full cache identity of one workload (see the module docstring for
-    the two-group invalidation contract). The plan cache is keyed on
-    :meth:`plan_identity`; the ELL layout cache on the full key."""
-
-    graph_fp: str
-    model: str
-    message_passing: str
-    use_rounds: bool
-    mesh_dims: tuple[int, ...]
-    agg_buffer_bytes: int
-    bidir: bool
-    # partition-shaping fields beyond the buffer size: the round budget
-    # is 2^x <= alpha * M / (feat_in * 4), so both must key the cache
-    alpha: float
-    feat_in: int
-    # registry generation of the model spec: a re-registered model must
-    # never hit plans built for its predecessor (even via stale engines)
-    model_gen: int
-    # aggregation-backend fields: part of the key (a layout/compiled step
-    # for one backend is never served for another) but NOT of the plan
-    # identity (switching backends never replans)
-    agg_impl: str = "jnp"
-    ell_block_slots: int = 128
-    ell_edge_align: int = 512
-
-    def plan_identity(self) -> "PlanKey":
-        """The sub-key that determines the ``CommPlan`` itself: the
-        aggregation-backend fields are normalized away, so keys that
-        differ only in ``agg_impl`` / ELL shape share one plan."""
-        return dataclasses.replace(self, agg_impl="", ell_block_slots=0,
-                                   ell_edge_align=0)
-
-
-_PLAN_CACHE: dict[PlanKey, CommPlan] = {}
-# host-side blocked-ELL layouts, cached alongside the plan they encode;
-# keyed by the FULL PlanKey so a layout can never outlive or mismatch its
-# plan (same graph/model/mesh AND same block shape). Alignment padding
-# makes an entry strictly larger than the COO arrays it re-encodes, so
-# like _PREP_CACHE (and unlike plans) the cache is LRU-bounded.
-_ELL_CACHE: "OrderedDict[PlanKey, tuple[np.ndarray, np.ndarray, np.ndarray]]" \
-    = OrderedDict()
-_ELL_CACHE_MAX = 8
-# prepared graphs are only needed for plan builds and reference() and can
-# be tens of MB each, so unlike plans they are LRU-bounded
-_PREP_CACHE: "OrderedDict[tuple[str, str, int], tuple[Graph, np.ndarray]]" \
-    = OrderedDict()
-_PREP_CACHE_MAX = 8
-_CACHE_STATS = {"hits": 0, "misses": 0}
-
-
-def plan_cache_stats() -> dict:
-    """Plan-cache hit/miss counters plus current entry count."""
-    return dict(_CACHE_STATS, entries=len(_PLAN_CACHE),
-                ell_entries=len(_ELL_CACHE))
-
-
-def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
-    _ELL_CACHE.clear()
-    _PREP_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0)
-
-
-def invalidate_model(name: str) -> None:
-    """Drop cached prepared graphs / plans / ELL layouts for one model
-    name (called by the registry when a model is re-registered with
-    ``overwrite``). Correctness does not depend on this — cache keys
-    carry the registry generation — it just releases the superseded
-    entries' memory."""
-    for k in [k for k in _PREP_CACHE if k[1] == name]:
-        del _PREP_CACHE[k]
-    for k in [k for k in _PLAN_CACHE if k.model == name]:
-        del _PLAN_CACHE[k]
-    for k in [k for k in _ELL_CACHE if k.model == name]:
-        del _ELL_CACHE[k]
-
-
-def graph_fingerprint(graph: Graph) -> str:
-    """Content hash of the edge list — the plan-cache graph identity."""
-    h = hashlib.sha1()
-    h.update(np.int64(graph.num_vertices).tobytes())
-    h.update(np.ascontiguousarray(graph.src).tobytes())
-    h.update(np.ascontiguousarray(graph.dst).tobytes())
-    return h.hexdigest()
+# back-compat aliases: one coherent call clears/reports ALL cache layers
+# (plan + ELL + prepared graph + compiled step) — see repro.gcn.cache
+plan_cache_stats = cache.cache_stats
+clear_plan_cache = cache.clear_all
+invalidate_model = cache.invalidate_model
 
 
 # ---------------------------------------------------------------------------
@@ -200,12 +120,18 @@ class GCNEngine:
         # lazy state — nothing below touches jax devices or builds a plan
         # until an execution path actually needs it
         self._mesh_jax = mesh_jax
+        # construction mode, NOT current materialization: derived-mesh
+        # engines must keep one step-cache identity before and after the
+        # lazy mesh materializes (all derived meshes over the same
+        # dims/names are equal by construction)
+        self._mesh_explicit = mesh_jax is not None
         self._graph_fp: str | None = None
         self._plan: CommPlan | None = None
         self._agg_impl: str | None = None  # resolved lazily (touches jax)
-        # per-backend lazies: device plan arrays and compiled layer steps
+        # lazies memoizing shared-cache lookups: device plan arrays per
+        # backend, compiled layer steps per (backend, batched) pair
         self._plan_dev: dict[str, object] = {}
-        self._layer_step: dict[str, object] = {}
+        self._layer_step: dict[tuple[str, bool], object] = {}
 
     # ---------------- construction ----------------
 
@@ -245,10 +171,14 @@ class GCNEngine:
         (e.g. ``message_passing="oppr"``). Shares the plan cache, so
         flipping a field back and forth never replans."""
         cfg = dataclasses.replace(self.cfg, **overrides)
+        # siblings inherit the construction MODE: a derived-mesh engine
+        # spawns derived-mesh siblings even after its lazy mesh
+        # materialized, so they all share one step-cache mesh identity
         return GCNEngine.build(
             cfg, self.graph,
-            None if self._mesh_jax is not None else self.dims,
-            mesh=self._mesh_jax, axis_names=self.axis_names,
+            None if self._mesh_explicit else self.dims,
+            mesh=self._mesh_jax if self._mesh_explicit else None,
+            axis_names=self.axis_names,
             bidir=self.bidir, donate=self.donate)
 
     # ---------------- host-side mapping (cached) ----------------
@@ -291,37 +221,30 @@ class GCNEngine:
     def plan_cached(self) -> bool:
         """True when this engine's plan is already in the process cache
         (checking does not build or count as a hit/miss)."""
-        return self.plan_key.plan_identity() in _PLAN_CACHE
+        return cache.plan_cached(self.plan_key)
 
     def prepared_graph(self) -> tuple[Graph, np.ndarray]:
         """Model-weighted graph (self loops + edge weights), cached per
         (graph, model, registry generation) so switching message-passing
         models reuses it but a re-registered model never sees stale
-        weights. LRU-bounded (prepared graphs can be large)."""
+        weights. Byte-bounded LRU (prepared graphs can be large)."""
         key = (self.graph_fp, self.cfg.model, self.model_spec.gen)
-        if key not in _PREP_CACHE:
-            _PREP_CACHE[key] = self.model_spec.prepare(self.graph)
-            while len(_PREP_CACHE) > _PREP_CACHE_MAX:
-                _PREP_CACHE.popitem(last=False)
-        else:
-            _PREP_CACHE.move_to_end(key)
-        return _PREP_CACHE[key]
+        return cache.get_prep(key, lambda: self.model_spec.prepare(self.graph))
 
     @property
     def plan(self) -> CommPlan:
         """The static relay schedule — built once per plan identity,
         ever (aggregation-backend fields do not participate: switching
-        ``agg_impl`` never replans)."""
+        ``agg_impl`` never replans). Byte-bounded LRU under
+        :func:`repro.gcn.cache.set_cache_budget`; evicting a plan also
+        drops the ELL layouts / compiled steps derived from it."""
         if self._plan is None:
-            key = self.plan_key.plan_identity()
-            hit = key in _PLAN_CACHE
-            _CACHE_STATS["hits" if hit else "misses"] += 1
-            if not hit:
+            def build():
                 g2, w = self.prepared_graph()
-                _PLAN_CACHE[key] = build_plan(
-                    self.cfg, g2, self.torus, self.part,
-                    edge_weights=w, bidir=self.bidir)
-            self._plan = _PLAN_CACHE[key]
+                return build_plan(self.cfg, g2, self.torus, self.part,
+                                  edge_weights=w, bidir=self.bidir)
+
+            self._plan = cache.get_plan(self.plan_key, build)
         return self._plan
 
     def statics_for(self, agg_impl: str | None = None) -> mp.ExchangeStatics:
@@ -337,20 +260,19 @@ class GCNEngine:
         """Blocked-ELL encoding of this plan's aggregation edge list —
         ``(seg, rows, w)``, each ``(R, N, nb, Eb)`` (see
         ``repro.kernels.spmm.ops`` for the layout invariants). Built
-        host-side once per full PlanKey and cached alongside the plan."""
+        host-side once per full PlanKey and cached alongside the plan
+        (evicting the plan drops the layout with it)."""
         key = dataclasses.replace(self.plan_key, agg_impl="pallas")
-        if key not in _ELL_CACHE:
+
+        def build():
             plan = self.plan
-            _ELL_CACHE[key] = spmm_ops.build_ell_layout_rounds(
+            return spmm_ops.build_ell_layout_rounds(
                 plan.edge_repl, plan.edge_slot, plan.edge_w,
                 plan.part.slots_per_round,
                 block_slots=self.cfg.ell_block_slots,
                 edge_align=self.cfg.ell_edge_align)
-            while len(_ELL_CACHE) > _ELL_CACHE_MAX:
-                _ELL_CACHE.popitem(last=False)
-        else:
-            _ELL_CACHE.move_to_end(key)
-        return _ELL_CACHE[key]
+
+        return cache.get_ell(key, build)
 
     def plan_arrays(self, agg_impl: str | None = None):
         """Device-layout plan arrays (cached jnp views of the plan), one
@@ -362,6 +284,12 @@ class GCNEngine:
             ell = self.ell_layout() if impl == "pallas" else None
             self._plan_dev[impl] = mp.plan_device_arrays(self.plan, ell=ell)
         return self._plan_dev[impl]
+
+    def plan_uploaded(self, agg_impl: str | None = None) -> bool:
+        """True when this session's plan arrays for the backend are
+        already materialized on device (checking builds nothing) — the
+        service's prefetcher uses this to skip redundant uploads."""
+        return self._impl(agg_impl) in self._plan_dev
 
     @property
     def mesh_jax(self):
@@ -408,25 +336,71 @@ class GCNEngine:
 
         return _exchange
 
-    def _compiled_layer_step(self, agg_impl: str | None = None):
-        """jit(shard_map exchange + combine): one layer of the network,
-        cached per aggregation backend. Shapes vary per layer; jax's jit
-        cache specializes per shape."""
+    def _exec_fp(self, impl: str, batched: bool) -> tuple:
+        """Trace identity of the compiled layer step: everything baked
+        into the jitted computation that is NOT a runtime argument — the
+        static schedule (``ExchangeStatics``), the combine callable's
+        registry identity, the mesh the shard_map binds, the donate
+        flag, and the plan-array tree structure (the shard_map in_specs
+        mirror it). Two engines with equal fingerprints share one
+        compiled step even across different graphs ("plan_identity
+        modulo graph fingerprint, where shapes match"); jax's jit cache
+        re-specializes per feature shape underneath."""
+        mesh_token = (("explicit", id(self._mesh_jax))
+                      if self._mesh_explicit
+                      else ("derived", self.dims, self.axis_names))
+        treedef = jax.tree.structure(self.plan_arrays(impl))
+        return (self.statics_for(impl), self.cfg.model,
+                self.model_spec.gen, self.donate, batched,
+                mesh_token, treedef)
+
+    def _compiled_layer_step(self, agg_impl: str | None = None, *,
+                             batched: bool = False):
+        """jit(shard_map exchange + combine): one layer of the network.
+        Cached process-wide (``repro.gcn.cache``) per executor identity
+        and per aggregation backend, so sibling engines — and service
+        sessions re-admitted after eviction — reuse one compiled step.
+        Shapes vary per layer; jax's jit cache specializes per shape."""
         impl = self._impl(agg_impl)
-        if impl not in self._layer_step:
+        memo = (impl, batched)
+        if memo not in self._layer_step:
             nd = len(self.dims)
             combine = self.model_spec.combine
-            exchange = self._exchange_fn(impl)
+            donate = self.donate
 
-            def step(pdev, x, layer, last):
-                accs = exchange(pdev, x)  # (*dims, R, slots, F)
-                agg = accs.reshape(accs.shape[:nd] + (-1, accs.shape[-1]))
-                return combine(layer, agg, x, last)
+            def build():
+                exchange = self._exchange_fn(impl)
 
-            self._layer_step[impl] = jax.jit(
-                step, static_argnames=("last",),
-                donate_argnums=(1,) if self.donate else ())
-        return self._layer_step[impl]
+                def step(pdev, x, layer, last):
+                    accs = exchange(pdev, x)  # (*dims, R, slots, F)
+                    agg = accs.reshape(
+                        accs.shape[:nd] + (-1, accs.shape[-1]))
+                    return combine(layer, agg, x, last)
+
+                def step_batched(pdev, x, layer, last):
+                    # x: (*dims, B, Vp, F). The exchange is LINEAR and
+                    # independent per feature column, so a batch of
+                    # requests rides folded into the feature axis — one
+                    # relay replay serves all B requests — and is
+                    # unfolded before the (nonlinear) combine.
+                    B, F = x.shape[nd], x.shape[-1]
+                    xf = jnp.moveaxis(x, nd, -2)  # (*dims, Vp, B, F)
+                    xf = xf.reshape(xf.shape[:nd + 1] + (B * F,))
+                    accs = exchange(pdev, xf)  # (*dims, R, slots, B*F)
+                    S = accs.shape[nd] * accs.shape[nd + 1]
+                    agg = accs.reshape(accs.shape[:nd] + (S, B, F))
+                    agg = jnp.moveaxis(agg, -2, nd)  # (*dims, B, S, F)
+                    return combine(layer, agg, x, last)
+
+                return jax.jit(
+                    step_batched if batched else step,
+                    static_argnames=("last",),
+                    donate_argnums=(1,) if donate else ())
+
+            self._layer_step[memo] = cache.get_step(
+                self.plan_key_for(impl), self._exec_fp(impl, batched),
+                build)
+        return self._layer_step[memo]
 
     # ---------------- parameters ----------------
 
@@ -488,6 +462,51 @@ class GCNEngine:
         for li, layer in enumerate(params):
             x = step(pdev, x, layer, last=li == len(params) - 1)
         return self.unshard(np.asarray(x)) if is_global else x
+
+    def forward_batched(self, feats_batch, params=None, *,
+                        agg_impl: str | None = None) -> np.ndarray:
+        """Run B feature-inference requests through ONE exchange replay
+        per layer.
+
+        ``feats_batch`` is ``(B, V, F)`` global host features (B
+        independent requests over the same graph and params); returns
+        ``(B, V, F_out)``. The distributed exchange is linear and
+        independent per feature column, so the batch folds into the
+        feature axis — all B requests share each round's ppermute relay
+        (one launch moving B x the payload, the bandwidth-friendly
+        regime the paper's Observation 2 targets) — and unfolds before
+        the nonlinear combine. Numerics are identical to B separate
+        :meth:`forward` calls up to fp32 summation order (the relay sums
+        in the same order; only the matmul tiling differs).
+
+        ``B == 1`` is valid; the compiled step is cached per (B, F)
+        shape like any jit specialization. :class:`~repro.gcn.service.
+        GCNService` uses this to serve compatible queued requests in one
+        step.
+        """
+        impl = self._impl(agg_impl)
+        params = self._resolve_params(params)
+        fb = np.asarray(feats_batch)
+        if fb.ndim != 3 or fb.shape[1] != self.graph.num_vertices:
+            raise ValueError(
+                f"feats_batch must be (B, V={self.graph.num_vertices}, F); "
+                f"got shape {fb.shape}")
+        nd = len(self.dims)
+        B, V, F = fb.shape
+        # host-side layout, one scatter for the whole batch: fold the
+        # batch into the feature axis (the same B-major fold the
+        # compiled step uses on device), shard once, then unfold the
+        # batch axis to land right after the mesh dims
+        xs = self.shard(np.moveaxis(fb, 0, 1).reshape(V, B * F))
+        xs = xs.reshape(xs.shape[:-1] + (B, F))  # (*dims, Vp, B, F)
+        x = jnp.asarray(np.moveaxis(xs, -2, nd))  # (*dims, B, Vp, F)
+        step = self._compiled_layer_step(impl, batched=True)
+        pdev = self.plan_arrays(impl)
+        for li, layer in enumerate(params):
+            x = step(pdev, x, layer, last=li == len(params) - 1)
+        out = np.moveaxis(np.asarray(x), nd, -2)  # (*dims, Vp, B, F_out)
+        out = self.unshard(out.reshape(out.shape[:-2] + (-1,)))
+        return np.moveaxis(out.reshape(V, B, -1), 0, 1)  # (B, V, F_out)
 
     def reference(self, feats, params=None):
         """Exact single-device oracle for this engine's model (numpy in,

@@ -1,0 +1,381 @@
+"""``GCNService`` — multi-graph GCN inference serving on one substrate.
+
+The top layer of the session/cache/service split. Where
+:class:`~repro.gcn.engine.GCNEngine` is one graph's session and
+:mod:`repro.gcn.cache` is the process-wide mapping/compile store, the
+service is the scheduler: it owns ONE mesh, admits many named graphs
+(``service.admit(name, cfg, graph)``), queues feature-inference
+requests across them, and drives execution in steps. It mirrors the
+slot-pool design of ``repro.serve.engine.ServeEngine`` (the LM-side
+substrate): ``submit`` enqueues, ``step`` admits-and-advances, ``run``
+ticks until drained.
+
+Two serving tricks, both straight from the paper's characterization
+(Observation 2: MultiAccSys GCN execution is bandwidth-bound and
+latency-tolerant):
+
+  * **Per-step request batching** — compatible queued requests (same
+    session, same feature shape) execute as one
+    :meth:`GCNEngine.forward_batched` call: the batch folds into the
+    feature axis of the exchange, so one relay replay moves B requests'
+    payload per ppermute (deeper messages over the same link schedule —
+    exactly the trade a latency-tolerant, bandwidth-bound system wants).
+  * **Async double-buffered plan upload** — while the device executes
+    session A's batch, a background thread builds and uploads the NEXT
+    distinct session's plan arrays (host-side plan build +
+    ``device_put``-equivalent ``jnp.asarray`` + ``block_until_ready``).
+    At most one prefetch is in flight (the classic two buffers:
+    executing + filling); the consumer *fences* on the prefetch thread
+    before running that session, so results are bit-identical to the
+    synchronous path (``async_upload=False`` falls back to inline
+    uploads and is the reference behavior). The overlap won is reported
+    by :meth:`stats` as ``upload_overlap_fraction``.
+
+Because every session shares the byte-bounded caches in
+``repro.gcn.cache``, admitting more graphs than the plan budget holds
+simply evicts the least-recently-served one; re-admission replans
+exactly once (see ``tests/test_gcn_cache.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.config import GCNConfig
+from repro.core.graph import Graph
+from repro.gcn import cache
+from repro.gcn.engine import GCNEngine
+
+__all__ = ["GCNService", "ServeRequest"]
+
+
+@dataclass
+class ServeRequest:
+    """One feature-inference request against an admitted graph."""
+
+    rid: int
+    session: str
+    feats: np.ndarray  # (V, F) global host features
+    out: np.ndarray | None = None  # (V, F_out) once done
+    done: bool = False
+    # timing (perf_counter seconds; t_done - t_submit = request latency)
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass
+class _Prefetch:
+    """One in-flight background upload (the 'filling' buffer)."""
+
+    session: str
+    thread: threading.Thread
+    t_start: float
+    t_end: float = 0.0
+    seconds: float = 0.0  # upload wall time, folded into counters at the fence
+    error: BaseException | None = None
+
+
+@dataclass
+class _Counters:
+    requests: int = 0
+    batches: int = 0
+    busy_s: float = 0.0  # time inside step(): fence + upload + execute
+    exec_s: float = 0.0
+    upload_s: float = 0.0
+    upload_overlap_s: float = 0.0
+    uploads: int = 0
+    uploads_async: int = 0
+    t_first: float = 0.0
+    t_last: float = 0.0
+    exec_windows: list = field(default_factory=list)
+
+
+class GCNService:
+    """Multi-graph serving frontend over shared GCN sessions.
+
+    Typical use::
+
+        svc = GCNService((4, 2), plan_budget_bytes=256 << 20)
+        svc.admit("social", cfg_a, graph_a, layer_dims=[64, 16])
+        svc.admit("web", cfg_b, graph_b, layer_dims=[32, 8])
+        svc.submit("social", feats0)
+        svc.submit("web", feats1)
+        done = svc.run()          # list of completed ServeRequests
+        print(svc.stats()["requests_per_sec"])
+
+    ``max_batch`` caps how many compatible requests one step executes;
+    ``async_upload=False`` selects the synchronous fallback (identical
+    results, no upload/execute overlap). ``plan_budget_bytes``
+    reconfigures the PROCESS-GLOBAL plan store (the cache layers are
+    shared across all services/engines by design — that sharing is the
+    point): the last setter wins, and shrinking can evict another
+    service's plans. Omit it to keep the current budget.
+    """
+
+    def __init__(self, mesh_dims: Sequence[int], *,
+                 axis_names: Sequence[str] | None = None,
+                 max_batch: int = 8, async_upload: bool = True,
+                 plan_budget_bytes: int | None = None):
+        self.dims = tuple(int(d) for d in mesh_dims)
+        self.axis_names = tuple(axis_names) if axis_names else None
+        self.max_batch = int(max_batch)
+        self.async_upload = bool(async_upload)
+        if plan_budget_bytes is not None:
+            cache.set_cache_budget(plan_bytes=int(plan_budget_bytes))
+        self.sessions: dict[str, GCNEngine] = {}
+        self.queue: list[ServeRequest] = []
+        self._next_rid = 0
+        self._prefetch: _Prefetch | None = None
+        self._c = _Counters()
+
+    # ---------------- admission ----------------
+
+    def admit(self, name: str, cfg: GCNConfig, graph: Graph, *,
+              layer_dims: Sequence[int] | None = None, params=None,
+              seed: int = 0) -> GCNEngine:
+        """Register graph ``graph`` under ``name`` as a servable session
+        on the service's mesh. Either pass trained ``params`` or
+        ``layer_dims`` (``[feat_in, hidden..., out]``) to initialize
+        fresh ones from ``seed``. Admission is host-side bookkeeping
+        only — the plan is built (or found in the shared cache) on first
+        execution or prefetch."""
+        if name in self.sessions:
+            raise ValueError(f"session {name!r} already admitted")
+        eng = GCNEngine.build(cfg, graph, self.dims,
+                              axis_names=self.axis_names)
+        if params is not None:
+            eng.params = list(params)
+        elif layer_dims is not None:
+            eng.init_params(jax.random.PRNGKey(seed), list(layer_dims))
+        self.sessions[name] = eng
+        return eng
+
+    def evict(self, name: str) -> None:
+        """Forget a session (pending requests for it are dropped; a
+        never-admitted name is a no-op, so teardown paths can call this
+        unconditionally). The shared caches keep its plan until byte
+        pressure evicts it."""
+        self.sessions.pop(name, None)
+        self.queue = [r for r in self.queue if r.session != name]
+
+    # ---------------- request queue ----------------
+
+    def submit(self, name: str, feats: np.ndarray) -> ServeRequest:
+        """Enqueue one (V, F) feature-inference request; returns the
+        request handle (``.out`` is filled when served)."""
+        eng = self.sessions[name]  # KeyError = not admitted, on purpose
+        feats = np.asarray(feats)
+        if feats.ndim != 2 or feats.shape[0] != eng.graph.num_vertices:
+            raise ValueError(
+                f"request for {name!r} must be (V={eng.graph.num_vertices}"
+                f", F); got {feats.shape}")
+        req = ServeRequest(self._next_rid, name, feats,
+                           t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def _pop_batch(self) -> list[ServeRequest]:
+        """Head-of-line batch: the oldest request plus up to
+        ``max_batch - 1`` later requests that are compatible with it
+        (same session, same feature shape). Order is preserved for the
+        rest of the queue."""
+        head = self.queue[0]
+        batch, rest = [head], []
+        for r in self.queue[1:]:
+            if (len(batch) < self.max_batch and r.session == head.session
+                    and r.feats.shape == head.feats.shape):
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        return batch
+
+    # ---------------- plan upload (the double buffer) ----------------
+
+    def _upload(self, eng: GCNEngine) -> float:
+        """Build + upload one session's plan arrays and fence with
+        ``block_until_ready``; returns the wall seconds spent (0.0 when
+        the session is already resident). Takes the engine object (not a
+        name) so an in-flight background upload keeps a coherent target
+        even if the session is evicted meanwhile. Deliberately does NOT
+        touch the counters — only the main thread folds durations into
+        ``_Counters`` (sync path inline, async path at the fence), so a
+        prefetch thread and a concurrent sync upload never race on
+        them."""
+        if eng.plan_uploaded():
+            return 0.0
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.plan_arrays())
+        return time.perf_counter() - t0
+
+    def _count_upload(self, seconds: float, *, was_async: bool) -> None:
+        if seconds <= 0.0:
+            return
+        self._c.upload_s += seconds
+        self._c.uploads += 1
+        if was_async:
+            self._c.uploads_async += 1
+
+    def _start_prefetch(self, exclude: str) -> None:
+        """Kick the background upload for the next distinct session in
+        the queue (the 'filling' buffer). At most one in flight."""
+        if not self.async_upload or self._prefetch is not None:
+            return
+        target = next(
+            (r.session for r in self.queue
+             if r.session != exclude
+             and not self.sessions[r.session].plan_uploaded()), None)
+        if target is None:
+            return
+        eng = self.sessions[target]
+        pf = _Prefetch(target, None, t_start=time.perf_counter())
+
+        def work():
+            try:
+                pf.seconds = self._upload(eng)
+            except BaseException as e:  # re-raised at the fence
+                pf.error = e
+            finally:
+                pf.t_end = time.perf_counter()
+
+        pf.thread = threading.Thread(
+            target=work, name=f"gcn-serve-upload-{target}", daemon=True)
+        pf.thread.start()
+        self._prefetch = pf
+
+    def _fence(self, name: str | None = None) -> None:
+        """Join the in-flight prefetch (all of it — the plan arrays must
+        be fully resident before any consumer runs). ``name=None``
+        fences unconditionally; otherwise only a prefetch for ``name``
+        blocks the caller. Overlap accounting: the prefetch wall time
+        that intersected device-execution windows counts as hidden."""
+        pf = self._prefetch
+        if pf is None or (name is not None and pf.session != name):
+            return
+        pf.thread.join()
+        self._prefetch = None
+        self._count_upload(pf.seconds, was_async=True)
+        if pf.error is not None:
+            if pf.session not in self.sessions:
+                pf.error = None  # evicted mid-upload: failure is moot
+            else:
+                raise pf.error
+        lo, hi = pf.t_start, pf.t_end
+        overlap = sum(
+            max(0.0, min(hi, e1) - max(lo, e0))
+            for e0, e1 in self._c.exec_windows)
+        # the thread's lifetime [lo, hi] also spans spawn/bookkeeping
+        # overhead, but only pf.seconds of actual upload was hideable —
+        # clamp so the reported fraction can never exceed 1.0
+        self._c.upload_overlap_s += min(overlap, pf.seconds)
+        self._c.exec_windows = [w for w in self._c.exec_windows
+                                if w[1] > hi]
+
+    # ---------------- execution ----------------
+
+    def step(self) -> list[ServeRequest]:
+        """One service tick: fence any prefetch for the head-of-line
+        session (sync-upload it if it is not resident), pop its batch,
+        start the NEXT session's upload in the background, execute the
+        batch, complete its requests. Returns the completed requests."""
+        if not self.queue:
+            self._fence()
+            return []
+        ts = time.perf_counter()
+        if not self._c.t_first:
+            self._c.t_first = ts
+        # fence BEFORE popping: a re-raised upload error must leave the
+        # head-of-line requests queued (retryable), not silently dropped
+        name = self.queue[0].session
+        eng = self.sessions[name]
+        self._fence(name)
+        if not eng.plan_uploaded():
+            # sync path / first-touch / post-eviction upload
+            self._count_upload(self._upload(eng), was_async=False)
+        batch = self._pop_batch()
+        self._start_prefetch(exclude=name)
+        feats = np.stack([r.feats for r in batch])
+        t0 = time.perf_counter()
+        try:
+            out = eng.forward_batched(feats)
+        except BaseException:
+            # nothing completed: put the batch back at the head so an
+            # execution error (bad feature width, transient OOM) leaves
+            # the requests retryable/observable instead of vanishing
+            self.queue = batch + self.queue
+            raise
+        t1 = time.perf_counter()
+        if self._prefetch is None:
+            # nothing in flight: no future prefetch can overlap windows
+            # that already closed, so don't accumulate them
+            self._c.exec_windows.clear()
+        self._c.exec_windows.append((t0, t1))
+        self._c.exec_s += t1 - t0
+        self._c.batches += 1
+        for b, r in enumerate(batch):
+            r.out = out[b]
+            r.done = True
+            r.t_done = t1
+        self._c.requests += len(batch)
+        self._c.busy_s += t1 - ts
+        self._c.t_last = t1
+        return batch
+
+    def run(self, max_steps: int = 100_000) -> list[ServeRequest]:
+        """Tick until the queue drains; returns completed requests in
+        completion order."""
+        done: list[ServeRequest] = []
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            done.extend(self.step())
+        self._fence()
+        return done
+
+    def infer(self, name: str, feats: np.ndarray) -> np.ndarray:
+        """Convenience synchronous call: submit + run one request."""
+        req = self.submit(name, feats)
+        self.run()
+        return req.out
+
+    # ---------------- accounting ----------------
+
+    def stats(self) -> dict:
+        """Serving counters merged with the shared cache layers'.
+
+        ``upload_overlap_fraction`` is the share of total plan-upload
+        wall time that ran concurrently with device execution — the
+        paper's latency-tolerance dividend (1.0 = every upload fully
+        hidden; 0.0 = sync fallback or nothing to hide).
+        ``requests_per_sec`` is throughput over BUSY time (seconds spent
+        inside ``step``), so idle gaps between ``run`` calls on a
+        long-lived service don't dilute it; ``wall_s`` is the raw
+        first-step-to-last-step span.
+        """
+        c = self._c
+        wall = max(c.t_last - c.t_first, 0.0)
+        return {
+            "sessions": len(self.sessions),
+            "queued": len(self.queue),
+            "requests": c.requests,
+            "batches": c.batches,
+            "mean_batch": c.requests / max(c.batches, 1),
+            "wall_s": wall,
+            "busy_s": c.busy_s,
+            "exec_s": c.exec_s,
+            "upload_s": c.upload_s,
+            "uploads": c.uploads,
+            "uploads_async": c.uploads_async,
+            "upload_overlap_s": c.upload_overlap_s,
+            "upload_overlap_fraction": (
+                c.upload_overlap_s / c.upload_s if c.upload_s else 0.0),
+            "requests_per_sec": c.requests / c.busy_s if c.busy_s else 0.0,
+            "async_upload": self.async_upload,
+            "cache": cache.cache_stats(),
+        }

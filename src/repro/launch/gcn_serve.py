@@ -1,0 +1,161 @@
+"""Multi-graph GCN serving driver: a mixed RMAT workload through
+``GCNService``.
+
+Admits ``--graphs`` distinct RMAT graphs (sizes and message-passing
+models cycle, so no two sessions share a plan), interleaves
+``--requests`` feature-inference requests across them, and serves the
+queue with per-step batching and async double-buffered plan upload.
+Prints a summary and optionally records the machine-readable perf
+trajectory (``--json BENCH_gcn.json``) that ``benchmarks/run.py
+--suite serve`` checks in for future-PR comparisons.
+
+    PYTHONPATH=src python -m repro.launch.gcn_serve \
+        --mesh 2x2 --graphs 3 --requests 24 --batch 4 --json BENCH_gcn.json
+
+``--sync`` selects the synchronous-upload fallback (same results — the
+async path is fenced — but no upload/execute overlap; useful for
+before/after measurements of the overlap win).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+
+MODELS = ("gcn", "gin", "sage")
+
+
+def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
+                  feat_in: int, layer_dims, max_batch: int,
+                  async_upload: bool, plan_budget_bytes: int | None,
+                  agg_buffer_bytes: int = 8 << 10):
+    """Admit ``num_graphs`` mixed RMAT sessions (scale and model cycle)
+    onto one service; returns ``(service, {name: graph})``."""
+    from repro.config import get_gcn_config
+    from repro.core.rmat import rmat
+    from repro.gcn import GCNService
+
+    svc = GCNService(mesh_dims, max_batch=max_batch,
+                     async_upload=async_upload,
+                     plan_budget_bytes=plan_budget_bytes)
+    graphs = {}
+    for i in range(num_graphs):
+        model = MODELS[i % len(MODELS)]
+        scale = base_scale + i % 3
+        name = f"rmat{scale}-{model}-{i}"
+        g = rmat(scale, 1 << (scale + 3), seed=100 + i, name=name)
+        cfg = dataclasses.replace(
+            get_gcn_config(f"gcn-{model}-rd", "smoke"),
+            agg_buffer_bytes=agg_buffer_bytes)
+        svc.admit(name, cfg, g, layer_dims=[feat_in, *layer_dims], seed=i)
+        graphs[name] = g
+    return svc, graphs
+
+
+def drive(svc, graphs, *, num_requests: int, feat_in: int, seed: int = 0):
+    """Interleave requests across sessions (worst case for plan
+    residency: consecutive batches almost always switch graphs) and
+    serve the whole queue."""
+    rng = np.random.default_rng(seed)
+    names = list(graphs)
+    for k in range(num_requests):
+        name = names[k % len(names)]
+        feats = rng.normal(size=(graphs[name].num_vertices, feat_in))
+        svc.submit(name, feats.astype(np.float32))
+    t0 = time.perf_counter()
+    done = svc.run()
+    wall = time.perf_counter() - t0
+    return done, wall
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--mesh", default="2x2",
+                    help="torus dims, e.g. 2x2 or 4x2 (<= forced host "
+                         "device count)")
+    ap.add_argument("--graphs", type=int, default=3,
+                    help="distinct RMAT sessions to admit")
+    ap.add_argument("--scale", type=int, default=9,
+                    help="base RMAT vertex scale (graph i uses "
+                         "scale + i %% 3)")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="max compatible requests per service step")
+    ap.add_argument("--feat", type=int, default=16)
+    ap.add_argument("--layers", default="16,8",
+                    help="comma list of hidden/output widths")
+    ap.add_argument("--sync", action="store_true",
+                    help="disable async upload (reference behavior)")
+    ap.add_argument("--plan-budget-mb", type=int, default=None,
+                    help="byte budget for the shared plan cache")
+    ap.add_argument("--json", default="",
+                    help="write the perf record here (BENCH_gcn.json)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
+    layer_dims = [int(x) for x in args.layers.split(",")]
+    svc, graphs = build_service(
+        mesh_dims, num_graphs=args.graphs, base_scale=args.scale,
+        feat_in=args.feat, layer_dims=layer_dims, max_batch=args.batch,
+        async_upload=not args.sync,
+        plan_budget_bytes=(args.plan_budget_mb << 20
+                           if args.plan_budget_mb else None))
+    done, wall = drive(svc, graphs, num_requests=args.requests,
+                       feat_in=args.feat)
+    st = svc.stats()
+    link_bytes = sum(
+        int(svc.sessions[n].stats(feat_dim=args.feat)["link_bytes"])
+        for n in svc.sessions)
+    agg_backend = next(iter(svc.sessions.values())).agg_impl
+
+    print(f"served {st['requests']} requests over {st['sessions']} graphs "
+          f"in {wall:.2f}s ({st['requests'] / wall:.2f} req/s, "
+          f"mean batch {st['mean_batch']:.1f})")
+    print(f"agg backend: {agg_backend} (jax {jax.default_backend()}); "
+          f"analytic link bytes: {link_bytes / 2**20:.1f} MiB")
+    print(f"plan upload: {st['uploads']} uploads, {st['upload_s']:.2f}s, "
+          f"overlap {st['upload_overlap_fraction']:.0%} "
+          f"({'async' if st['async_upload'] else 'sync'})")
+
+    if args.json:
+        rec = {
+            "suite": "serve",
+            "mesh": list(mesh_dims),
+            "graphs": {n: {"V": g.num_vertices, "E": g.num_edges}
+                       for n, g in graphs.items()},
+            "requests": st["requests"],
+            "batches": st["batches"],
+            "mean_batch": st["mean_batch"],
+            "wall_s": round(wall, 4),
+            "requests_per_sec": round(st["requests"] / wall, 3),
+            "exec_s": round(st["exec_s"], 4),
+            "upload_s": round(st["upload_s"], 4),
+            "upload_overlap_fraction": round(
+                st["upload_overlap_fraction"], 4),
+            "async_upload": st["async_upload"],
+            "agg_backend": agg_backend,
+            "jax_backend": jax.default_backend(),
+            "link_bytes": link_bytes,
+            "cache": {layer: {k: v for k, v in s.items()}
+                      for layer, s in st["cache"].items()
+                      if isinstance(s, dict)},
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,14 +33,20 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: LMConfig, params, *, slots: int = 4,
-                 max_len: int = 512, rules=None, temperature: float = 0.0):
+                 max_len: int = 512, rules=None, temperature: float = 0.0,
+                 cache_dtype=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.rules = rules
         self.temperature = temperature
-        self.state = lm.init_decode_state(cfg, slots, max_len)
+        # cache_dtype: KV-cache precision (default bf16 for memory);
+        # float32 makes greedy decode bit-stable against the
+        # single-request path (used by the parity test)
+        self.state = lm.init_decode_state(
+            cfg, slots, max_len,
+            **({"dtype": cache_dtype} if cache_dtype is not None else {}))
         self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)  # per-slot lengths
         self.queue: list[Request] = []

@@ -1,0 +1,211 @@
+"""The process-wide cache layer (``repro.gcn.cache``): byte-bounded LRU
+eviction with coherent cascades, compiled-step sharing across sessions,
+and the one-call clearing contract (clear/invalidate sweep plans, ELL
+layouts, prepared graphs AND compiled steps together).
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+
+def _cfg(**over):
+    from repro.config import get_gcn_config
+
+    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
+    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+
+
+@pytest.fixture
+def fresh_caches():
+    """Cleared caches + default budgets, restored afterwards so the
+    budget games below never leak into other tests."""
+    from repro.gcn import cache
+
+    cache.clear_all()
+    saved = (cache._PLANS.budget_bytes, cache._ELL.budget_bytes,
+             cache._PREP.budget_bytes, cache._STEPS.max_entries)
+    yield cache
+    cache.set_cache_budget(plan_bytes=saved[0], ell_bytes=saved[1],
+                           prep_bytes=saved[2], step_entries=saved[3])
+    cache.clear_all()
+
+
+def _engine(graph, **over):
+    from repro.gcn import GCNEngine
+
+    return GCNEngine.build(_cfg(**over), graph, (1, 1))
+
+
+def _graphs(n, seed0=50):
+    from repro.core.graph import erdos
+
+    return [erdos(256, 2048, seed=seed0 + i) for i in range(n)]
+
+
+def test_plan_lru_evicts_under_byte_budget(fresh_caches):
+    """Plans for distinct graphs evict least-recently-served first once
+    the configurable byte budget is exceeded; a re-planned graph counts
+    exactly one extra miss."""
+    cache = fresh_caches
+    ga, gb, gc = _graphs(3)
+    ea = _engine(ga)
+    _ = ea.plan
+    per_plan = cache.cache_stats()["plan"]["bytes"]
+    assert per_plan > 0
+    # room for two plans: admitting the third must evict the oldest (A)
+    cache.set_cache_budget(plan_bytes=int(per_plan * 2.5))
+    _ = _engine(gb).plan
+    assert cache.cache_stats()["plan"]["entries"] == 2
+    _ = _engine(gc).plan
+    st = cache.cache_stats()["plan"]
+    assert st["entries"] == 2 and st["evictions"] == 1
+    assert not _engine(ga).plan_cached, "A must be the evicted plan"
+    assert _engine(gb).plan_cached and _engine(gc).plan_cached
+
+    # re-admission replans EXACTLY once: one miss to rebuild, then hits
+    misses0 = cache.cache_stats()["plan"]["misses"]
+    ea2 = _engine(ga)
+    _ = ea2.plan
+    assert cache.cache_stats()["plan"]["misses"] == misses0 + 1
+    _ = _engine(ga).plan
+    st = cache.cache_stats()["plan"]
+    assert st["misses"] == misses0 + 1, "second touch must be a pure hit"
+    # the session built BEFORE eviction keeps its memoized plan (session
+    # semantics) but the store rebuilt a fresh object for new sessions
+    assert ea.plan is not ea2.plan
+
+
+def test_plan_eviction_cascades_to_ell_and_steps(fresh_caches):
+    """Evicting a plan drops the ELL layouts and compiled steps built
+    from it — a re-admitted graph can never pair a fresh plan with a
+    stale derived entry."""
+    import jax
+
+    cache = fresh_caches
+    ga, gb = _graphs(2, seed0=60)
+    ea = _engine(ga)
+    ea.init_params(jax.random.PRNGKey(0), [8, 4])
+    feats = np.zeros((256, 8), np.float32)
+    ea.forward(feats, agg_impl="pallas")  # plan + ELL + compiled step
+    st = cache.cache_stats()
+    assert st["plan"]["entries"] == 1
+    assert st["ell"]["entries"] == 1
+    assert st["step"]["entries"] >= 1
+    # budget below two plans: B's arrival evicts A and all A-derived state
+    cache.set_cache_budget(plan_bytes=int(st["plan"]["bytes"] * 1.5))
+    _ = _engine(gb).plan
+    st = cache.cache_stats()
+    assert st["plan"]["entries"] == 1 and st["plan"]["evictions"] == 1
+    assert st["ell"]["entries"] == 0, "ELL layout must die with its plan"
+    assert st["step"]["entries"] == 0, "steps must die with their plan"
+
+
+def test_clear_and_invalidate_sweep_all_layers(fresh_caches):
+    """One coherent clear: ``clear_plan_cache()`` and
+    ``invalidate_model()`` drop plan, ELL, prepared-graph AND
+    compiled-step entries together (the pre-refactor bug was stale ELL /
+    step entries surviving a plan clear)."""
+    import jax
+
+    cache = fresh_caches
+    from repro.gcn import clear_plan_cache
+    from repro.gcn.engine import invalidate_model
+
+    (g,) = _graphs(1, seed0=70)
+    for model in ("gcn", "gin"):
+        e = _engine(g, model=model)
+        e.init_params(jax.random.PRNGKey(0), [8, 4])
+        e.forward(np.zeros((256, 8), np.float32), agg_impl="pallas")
+    st = cache.cache_stats()
+    assert st["plan"]["entries"] == 2 and st["ell"]["entries"] == 2
+    assert st["prep"]["entries"] == 2 and st["step"]["entries"] == 2
+
+    invalidate_model("gin")
+    st = cache.cache_stats()
+    assert st["plan"]["entries"] == 1 and st["ell"]["entries"] == 1
+    assert st["prep"]["entries"] == 1 and st["step"]["entries"] == 1
+
+    clear_plan_cache()
+    st = cache.cache_stats()
+    for layer in ("plan", "ell", "prep", "step"):
+        assert st[layer]["entries"] == 0, layer
+
+
+def test_compiled_step_shared_across_sessions(fresh_caches):
+    """Two sessions with the same executor identity get the SAME jitted
+    layer step (one compile serves both); a different schedule (other
+    graph) or backend gets its own."""
+    import jax
+
+    cache = fresh_caches
+    ga, gb = _graphs(2, seed0=80)
+    e1, e2 = _engine(ga), _engine(ga)
+    for e in (e1, e2):
+        e.init_params(jax.random.PRNGKey(0), [8, 4])
+    assert e1._compiled_layer_step() is e2._compiled_layer_step()
+    assert cache.cache_stats()["step"]["hits"] == 1
+    # batched and unbatched variants are distinct compiled entries
+    assert e1._compiled_layer_step(batched=True) \
+        is not e1._compiled_layer_step()
+    # the mesh identity must be construction-mode stable: a sibling
+    # created AFTER e1's lazy mesh materialized still shares its steps
+    _ = e1.mesh_jax
+    sib = e1.with_config(message_passing=e1.cfg.message_passing)
+    assert sib._compiled_layer_step(batched=True) \
+        is e1._compiled_layer_step(batched=True)
+    # another graph's schedule -> its own entry (no false sharing)
+    e3 = _engine(gb)
+    e3.init_params(jax.random.PRNGKey(0), [8, 4])
+    assert e3._compiled_layer_step() is not e1._compiled_layer_step()
+
+
+def test_step_store_shares_modulo_graph_fingerprint(fresh_caches):
+    """Contract of the step layer itself: the key is the executor
+    fingerprint ALONE — two plan identities differing only in graph
+    fingerprint share one compiled entry when their schedules match —
+    while eviction back-pointers still drop a plan's steps."""
+    cache = fresh_caches
+    ka = dataclasses.replace(_plan_key_stub(), graph_fp="aaaa")
+    kb = dataclasses.replace(_plan_key_stub(), graph_fp="bbbb")
+    fp = ("same-schedule",)
+    builds = []
+    sa = cache.get_step(ka, fp, lambda: builds.append("a") or object())
+    sb = cache.get_step(kb, fp, lambda: builds.append("b") or object())
+    assert sa is sb and builds == ["a"], \
+        "equal exec fingerprints must share one compiled step"
+    # evicting A's plan drops the shared entry; B re-fills on next use
+    cache._on_plan_evict(ka.plan_identity(), None)
+    assert not cache.step_cached(kb, fp)
+    sb2 = cache.get_step(kb, fp, lambda: builds.append("b2") or object())
+    assert sb2 is not sa and builds == ["a", "b2"]
+
+
+def _plan_key_stub():
+    from repro.gcn import PlanKey
+
+    return PlanKey("", "gcn", "oppm", True, (1, 1), 4096, False, 0.75,
+                   8, 0)
+
+
+def test_forward_batched_matches_forward(fresh_caches):
+    """The folded-feature batched executor is numerically exact against
+    per-request forward calls (the exchange is linear per column, so the
+    relay sums in the same order)."""
+    import jax
+
+    (g,) = _graphs(1, seed0=90)
+    for model in ("gcn", "gin", "sage"):
+        e = _engine(g, model=model)
+        e.init_params(jax.random.PRNGKey(1), [8, 6, 4])
+        fb = np.random.default_rng(3).normal(
+            size=(3, 256, 8)).astype(np.float32)
+        out = e.forward_batched(fb)
+        assert out.shape == (3, 256, 4)
+        for b in range(3):
+            single = e.forward(fb[b])
+            np.testing.assert_allclose(out[b], single, rtol=1e-5,
+                                       atol=1e-5)
+    with pytest.raises(ValueError):
+        e.forward_batched(np.zeros((2, 100, 8), np.float32))  # wrong |V|

@@ -1,0 +1,218 @@
+"""The multi-graph serving layer (``repro.gcn.service.GCNService``):
+cross-graph parity against each session's single-device oracle, per-step
+batching of compatible requests, async-vs-sync upload equivalence
+(bit-identical), and byte-budget eviction driven through the service
+(evicted graph re-admitted -> replans exactly once).
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``); the multi-device
+serving path is exercised by ``benchmarks/run.py --suite serve`` /
+``make check`` on 8 forced host devices."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+
+def _cfg(model="gcn", **over):
+    from repro.config import get_gcn_config
+
+    cfg = get_gcn_config(f"gcn-{model}-rd", "smoke")
+    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+
+
+@pytest.fixture
+def fresh_caches():
+    from repro.gcn import cache
+
+    cache.clear_all()
+    saved = cache._PLANS.budget_bytes
+    yield cache
+    cache.set_cache_budget(plan_bytes=saved)
+    cache.clear_all()
+
+
+def _mixed_service(*, async_upload=True, max_batch=4, seed0=30):
+    """Three sessions with distinct RMAT sizes AND models on one mesh."""
+    from repro.core.rmat import rmat
+    from repro.gcn import GCNService
+
+    svc = GCNService((1, 1), max_batch=max_batch,
+                     async_upload=async_upload)
+    graphs = {}
+    for i, (model, scale) in enumerate(
+            [("gcn", 8), ("gin", 9), ("sage", 8)]):
+        name = f"{model}{scale}"
+        g = rmat(scale, 1 << (scale + 2), seed=seed0 + i, name=name)
+        svc.admit(name, _cfg(model), g, layer_dims=[8, 8, 4], seed=i)
+        graphs[name] = g
+    return svc, graphs
+
+
+def _submit_mixed(svc, graphs, n, seed=5):
+    rng = np.random.default_rng(seed)
+    names = list(graphs)
+    return [svc.submit(names[k % len(names)],
+                       rng.normal(size=(graphs[names[k % len(names)]]
+                                        .num_vertices, 8))
+                       .astype(np.float32))
+            for k in range(n)]
+
+
+def test_service_multigraph_parity(fresh_caches):
+    """Every served request matches its own session's
+    ``engine.reference()`` oracle — across >= 3 graphs with different
+    sizes and message-passing models sharing one cache."""
+    svc, graphs = _mixed_service()
+    reqs = _submit_mixed(svc, graphs, 9)
+    done = svc.run()
+    assert len(done) == 9 and all(r.done for r in reqs)
+    for r in reqs:
+        eng = svc.sessions[r.session]
+        ref = eng.reference(r.feats)
+        err = np.max(np.abs(r.out - ref)) / (np.max(np.abs(ref)) + 1e-9)
+        assert err < 1e-4, (r.session, err)
+    st = svc.stats()
+    assert st["sessions"] == 3 and st["requests"] == 9
+    # one shared plan store served all three graphs
+    assert st["cache"]["plan"]["entries"] == 3
+
+
+def test_service_batches_compatible_requests(fresh_caches):
+    """Head-of-line batching groups same-session same-shape requests up
+    to ``max_batch``; incompatible requests stay queued in order."""
+    svc, graphs = _mixed_service(max_batch=4)
+    name = next(iter(graphs))
+    other = list(graphs)[1]
+    rng = np.random.default_rng(1)
+
+    def feats_for(n):
+        return rng.normal(size=(graphs[n].num_vertices, 8)) \
+                  .astype(np.float32)
+
+    for _ in range(3):
+        svc.submit(name, feats_for(name))
+    svc.submit(other, feats_for(other))
+    svc.submit(name, feats_for(name))
+    first = svc.step()
+    # 4 compatible requests batched through one executor call...
+    assert [r.session for r in first] == [name] * 4
+    # ...and the incompatible one is served next, order preserved
+    second = svc.step()
+    assert [r.session for r in second] == [other]
+    assert svc.stats()["mean_batch"] == pytest.approx(2.5)
+
+
+def test_async_upload_bit_identical_to_sync(fresh_caches):
+    """The double-buffered background upload changes WHEN plan arrays
+    reach the device, never what executes: outputs are bit-identical to
+    the synchronous fallback."""
+    svc_a, graphs_a = _mixed_service(async_upload=True)
+    reqs_a = _submit_mixed(svc_a, graphs_a, 9, seed=11)
+    svc_a.run()
+    st = svc_a.stats()
+    assert st["uploads_async"] > 0, "async path must actually prefetch"
+
+    fresh_caches.clear_all()  # force the sync run to re-upload too
+    svc_s, graphs_s = _mixed_service(async_upload=False)
+    reqs_s = _submit_mixed(svc_s, graphs_s, 9, seed=11)
+    svc_s.run()
+    assert svc_s.stats()["uploads_async"] == 0
+    for ra, rs in zip(reqs_a, reqs_s):
+        assert ra.session == rs.session
+        np.testing.assert_array_equal(ra.out, rs.out)
+
+
+def test_service_eviction_and_readmit_replans_once(fresh_caches):
+    """Serving under a byte budget that holds two plans: graph A is
+    evicted after B and C are served; re-admitting A replans exactly
+    once (then hits)."""
+    cache = fresh_caches
+    svc, graphs = _mixed_service()
+    names = list(graphs)
+    a, b, c = names
+    rng = np.random.default_rng(2)
+
+    def serve_one(n):
+        svc.submit(n, rng.normal(size=(graphs[n].num_vertices, 8))
+                   .astype(np.float32))
+        (req,) = svc.run()
+        return req
+
+    serve_one(a)
+    pa = cache.cache_stats()["plan"]["bytes"]
+    serve_one(b)
+    serve_one(c)
+    total = cache.cache_stats()["plan"]["bytes"]
+    # room for exactly B+C (one byte short of also holding A): applying
+    # the budget evicts the least-recently-served plan — A — and only A
+    cache.set_cache_budget(plan_bytes=total - 1)
+    st = cache.cache_stats()["plan"]
+    assert st["entries"] == 2 and st["evictions"] == 1
+    assert cache.cache_stats()["plan"]["bytes"] == total - pa
+    assert not svc.sessions[a].plan_cached, "A must have been evicted"
+    assert svc.sessions[b].plan_cached and svc.sessions[c].plan_cached
+
+    # re-admit A as a fresh session (the old session object pinned its
+    # memoized plan; re-admission is how a serving fleet returns to an
+    # evicted graph)
+    feats_a = rng.normal(size=(graphs[a].num_vertices, 8)) \
+                 .astype(np.float32)
+    svc.submit(a, feats_a)
+    (req_before,) = svc.run()  # old session: memoized plan, no replan
+    misses0 = cache.cache_stats()["plan"]["misses"]
+    svc.evict(a)
+    svc.admit(a, _cfg("gcn"), graphs[a], layer_dims=[8, 8, 4], seed=0)
+    svc.submit(a, feats_a)
+    (req_after,) = svc.run()
+    assert cache.cache_stats()["plan"]["misses"] == misses0 + 1
+    svc.submit(a, feats_a)
+    svc.run()
+    assert cache.cache_stats()["plan"]["misses"] == misses0 + 1, \
+        "second serve after re-admission must be a pure cache hit"
+    # the rebuilt plan computes the same function (params re-seeded
+    # identically, request replayed)
+    np.testing.assert_allclose(req_after.out, req_before.out, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_evict_during_inflight_prefetch_is_harmless(fresh_caches):
+    """Evicting the session a background prefetch is uploading must not
+    poison later steps: the thread holds the engine object (not a name
+    lookup), and a failed upload for a no-longer-admitted session is
+    dropped at the fence instead of re-raised."""
+    svc, graphs = _mixed_service(async_upload=True, max_batch=2)
+    names = list(graphs)
+    rng = np.random.default_rng(4)
+    for k in range(6):
+        n = names[k % 3]
+        svc.submit(n, rng.normal(size=(graphs[n].num_vertices, 8))
+                   .astype(np.float32))
+    svc.step()  # serves names[0]; prefetch targets names[1]
+    svc.evict(names[1])  # mid-flight
+    done = svc.run()  # must not raise
+    assert all(r.session != names[1] for r in done)
+    assert all(r.done for r in done)
+
+
+def test_execution_error_requeues_batch(fresh_caches):
+    """A batch that fails during execution (e.g. feature width not
+    matching the session's params) goes back to the head of the queue —
+    requests stay observable/retryable instead of vanishing."""
+    svc, graphs = _mixed_service()
+    name = next(iter(graphs))
+    bad = np.zeros((graphs[name].num_vertices, 5), np.float32)  # F=5 != 8
+    req = svc.submit(name, bad)
+    with pytest.raises(Exception):
+        svc.step()
+    assert svc.queue and svc.queue[0] is req and not req.done
+
+
+def test_service_rejects_bad_requests(fresh_caches):
+    svc, graphs = _mixed_service()
+    name = next(iter(graphs))
+    with pytest.raises(KeyError):
+        svc.submit("never-admitted", np.zeros((4, 8), np.float32))
+    with pytest.raises(ValueError):
+        svc.submit(name, np.zeros((7, 8), np.float32))  # wrong |V|
+    with pytest.raises(ValueError):
+        svc.admit(name, _cfg(), graphs[name])  # duplicate name

@@ -40,25 +40,39 @@ def test_serve_engine_matches_reference_decode():
         lm.lm_init(cfg, jax.random.PRNGKey(0)))
     prompts = [np.array([3, 5, 7, 11]), np.array([2, 4, 6, 8, 10, 12])]
 
-    # reference: sequential prefill+decode per request
-    def ref_generate(prompt, max_new):
-        st = lm.init_decode_state(cfg, 1, 64)
+    # reference: sequential prefill+decode, teacher-forced on the
+    # engine's emitted tokens, returning the logits of every step.
+    # Both paths use f32 KV caches: with the default bf16 cache the
+    # batched-slot engine and this single-request reference (different
+    # compiled shapes) round differently by up to ~0.06 logits, enough
+    # to flip near-tied greedy tokens between runs.
+    def ref_logits(prompt, tokens):
+        st = lm.init_decode_state(cfg, 1, 64, dtype=jnp.float32)
         last_h, st = lm.prefill(cfg, params, jnp.asarray(prompt[None]), st)
         W = lm.lm_head_matrix(params.get("head", {}), params["embed"], cfg)
-        logits = (last_h @ W.astype(last_h.dtype)).astype(jnp.float32)
-        out = [int(jnp.argmax(logits[0]))]
-        for _ in range(max_new - 1):
-            tok = jnp.asarray([[out[-1]]], jnp.int32)
+        steps = [(last_h @ W.astype(last_h.dtype)).astype(jnp.float32)[0]]
+        for t in tokens[:-1]:
+            tok = jnp.asarray([[t]], jnp.int32)
             logits, st = lm.decode_step(cfg, params, tok, st)
-            out.append(int(jnp.argmax(logits[0])))
-        return out
+            steps.append(logits[0])
+        return np.asarray(steps)
 
-    engine = ServeEngine(cfg, params, slots=2, max_len=64)
+    engine = ServeEngine(cfg, params, slots=2, max_len=64,
+                         cache_dtype=jnp.float32)
     reqs = [Request(rid=i, prompt=p, max_new=6) for i, p in enumerate(prompts)]
     for r in reqs:
         engine.submit(r)
     engine.run_until_done(max_ticks=50)
     for r, p in zip(reqs, prompts):
         assert len(r.out) >= 6
-        ref = ref_generate(p, 6)
-        assert r.out[:6] == ref, (r.out[:6], ref)
+        toks = r.out[:6]
+        logits = ref_logits(p, toks)
+        # each engine token must be the reference argmax up to f32
+        # noise (the two paths compile with different batch shapes, so
+        # bit-identical logits are not guaranteed even at f32); a real
+        # divergence — wrong cache row, wrong position — shifts the
+        # whole hidden state and yields O(1) gaps, far above this
+        best = logits.max(axis=-1)
+        chosen = logits[np.arange(len(toks)), toks]
+        gap = best - chosen
+        assert np.all(gap <= 1e-3), (toks, gap.tolist())

@@ -33,7 +33,9 @@ SKIP_MARK = "docs-check: skip"
 
 
 def blocks_of(text: str):
-    """Yield (start_line, source) for each runnable python fence."""
+    """Yield (start_line, source, skipped) for each python fence —
+    skipped fences are surfaced (not silently dropped) so the runner
+    can report exactly which documented snippets are NOT executed."""
     lines = text.splitlines()
     i = 0
     while i < len(lines):
@@ -42,8 +44,7 @@ def blocks_of(text: str):
             j = i + 1
             while j < len(lines) and not lines[j].startswith("```"):
                 j += 1
-            if not skip:
-                yield i + 2, "\n".join(lines[i + 1:j])
+            yield i + 2, "\n".join(lines[i + 1:j]), skip
             i = j + 1
         else:
             i += 1
@@ -52,8 +53,12 @@ def blocks_of(text: str):
 def check_file(path: Path) -> int:
     ns: dict = {"__name__": "__docs_check__", "__file__": str(path)}
     failures = 0
-    n = 0
-    for lineno, src in blocks_of(path.read_text()):
+    n = skipped = 0
+    for lineno, src, skip in blocks_of(path.read_text()):
+        if skip:
+            skipped += 1
+            print(f"# SKIP {path.name}:{lineno} ({SKIP_MARK})", flush=True)
+            continue
         n += 1
         try:
             code = compile(src, f"{path.name}:{lineno}", "exec")
@@ -62,7 +67,8 @@ def check_file(path: Path) -> int:
             failures += 1
             print(f"FAIL {path.name}:{lineno}", flush=True)
             traceback.print_exc()
-    print(f"# {path.relative_to(ROOT)}: {n - failures}/{n} blocks OK",
+    note = f" ({skipped} skipped)" if skipped else ""
+    print(f"# {path.relative_to(ROOT)}: {n - failures}/{n} blocks OK{note}",
           flush=True)
     return failures
 
