@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: smoke test bench bench-json serve docs-check check
+.PHONY: smoke test bench bench-json serve train docs-check check
 
 # engine example + tier-1 tests, multi-device (8 forced host devices)
 smoke:
@@ -19,10 +19,20 @@ serve:
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite serve \
 		--json /tmp/BENCH_gcn.json
 
-# machine-readable perf trajectory: refresh BENCH_gcn.json in place so
-# PRs can diff serving perf against the checked-in baseline
+# distributed GCN training smoke bench (grad through the exchange,
+# GCN/GIN/SAGE on a 2x2 torus, train->serve handoff); scratch path for
+# the same reason as `serve`
+train:
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite train \
+		--json /tmp/BENCH_gcn.json
+
+# machine-readable perf trajectory: refresh BOTH suite records in
+# BENCH_gcn.json in place so PRs can diff serve + train perf against
+# the checked-in baseline
 bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite serve \
+		--json BENCH_gcn.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite train \
 		--json BENCH_gcn.json
 
 # execute every fenced ```python block in README.md and docs/*.md
@@ -30,4 +40,4 @@ docs-check:
 	PYTHONPATH=src $(PY) tools/check_docs.py
 
 # the CI-style gate: everything a PR must keep green
-check: smoke serve docs-check
+check: smoke serve train docs-check

@@ -7,8 +7,16 @@ microbenches. Prints ``name,us_per_call,derived`` CSV.
                                                           # on 8 host devices
   PYTHONPATH=src python -m benchmarks.run --suite serve   # multi-graph
                                                           # GCNService bench,
-                                                          # writes
-                                                          # BENCH_gcn.json
+                                                          # writes the
+                                                          # "serve" record
+  PYTHONPATH=src python -m benchmarks.run --suite train   # distributed GCN
+                                                          # training bench,
+                                                          # writes the
+                                                          # "train" record
+
+``BENCH_gcn.json`` holds one record per suite (serve + train); each
+suite refreshes only its own half, so ``make bench-json`` (both suites)
+rebuilds the full checked-in baseline.
 """
 from __future__ import annotations
 
@@ -101,23 +109,46 @@ def run_serve(json_path: str) -> int:
     return r.returncode
 
 
+def run_train(json_path: str) -> int:
+    """Distributed GCN training benchmark: full-batch node
+    classification for GCN/GIN/SAGE on one partitioned RMAT graph
+    (8 forced host devices, 2x2 torus), differentiated through the
+    multicast exchange, ending in the train->serve handoff
+    (``GCNService.adopt`` + one oracle-checked request per model).
+    Records loss trajectory, epoch wall time and measured exchange
+    bytes per step under the ``"train"`` key of ``json_path``."""
+    root = Path(__file__).resolve().parent.parent
+    env = _forced_host_env(root)
+    cmd = [sys.executable, "-m", "repro.launch.gcn_train",
+           "--mesh", "2x2", "--models", "gcn,gin,sage",
+           "--scale", "9", "--epochs", "12", "--json", json_path]
+    print(f"# train: {' '.join(cmd)}", flush=True)
+    r = subprocess.run(cmd, env=env, cwd=root)
+    print(f"# train -> {'OK' if r.returncode == 0 else 'FAIL'}", flush=True)
+    return r.returncode
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of module stems")
     ap.add_argument("--suite", default="",
                     help="'smoke' = engine example + tier-1 tests "
                          "(8 host devices); 'serve' = multi-graph "
-                         "GCNService bench -> BENCH_gcn.json")
+                         "GCNService bench; 'train' = distributed GCN "
+                         "training bench (both merge into "
+                         "BENCH_gcn.json)")
     ap.add_argument("--json", default="BENCH_gcn.json",
-                    help="perf-record path for --suite serve")
+                    help="perf-record path for --suite serve/train")
     args = ap.parse_args()
     if args.suite == "smoke":
         sys.exit(run_smoke())
     elif args.suite == "serve":
         sys.exit(run_serve(args.json))
+    elif args.suite == "train":
+        sys.exit(run_train(args.json))
     elif args.suite:
         sys.exit(f"unknown suite {args.suite!r} "
-                 "(expected 'smoke' or 'serve')")
+                 "(expected 'smoke', 'serve' or 'train')")
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
     print("name,us_per_call,derived")

@@ -1,0 +1,70 @@
+"""Distributed GCN training quickstart: full-batch node classification
+on a partitioned RMAT graph over a 2x2 torus, differentiated THROUGH
+the multicast exchange (the VJP is a reversed relay replay), ending in
+the train->serve handoff — the trained session is adopted by a
+``GCNService`` and serves without replanning.
+
+    PYTHONPATH=src python examples/gcn_train.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.config import get_gcn_config
+from repro.core.rmat import rmat
+from repro.gcn import (GCNEngine, GCNService, GCNTrainer, cache_stats,
+                       reference_loss_and_grad)
+from repro.launch.gcn_train import synthetic_labels
+
+F, C = 16, 8
+
+
+def main():
+    graph = rmat(9, 1 << 12, seed=3)
+    feats, labels = synthetic_labels(graph, F, C, seed=0)
+    mask = (np.random.default_rng(0).random(graph.num_vertices)
+            < 0.8).astype(np.float32)
+    cfg = dataclasses.replace(get_gcn_config("gcn-gcn-rd", "smoke"),
+                              agg_buffer_bytes=8 << 10)
+
+    eng = GCNEngine.build(cfg, graph, (2, 2))
+    trainer = GCNTrainer(eng, labels, mask)
+    report = trainer.fit(feats, epochs=20, layer_dims=[F, 16, C],
+                         log_every=5)
+    assert report.loss_last < report.loss_first
+    print(f"loss {report.loss_first:.4f} -> {report.loss_last:.4f}; "
+          f"train acc {trainer.evaluate(feats)['accuracy']:.2%}; "
+          f"exchange {report.exchange_bytes_per_step / 2**10:.1f} KiB per "
+          f"training step (forward + transposed backward replays)")
+
+    # distributed gradients match the dense single-node oracle
+    loss_d, grads_d = eng.loss_and_grad(feats, labels, mask)
+    loss_r, grads_r = reference_loss_and_grad(eng, feats, labels, mask)
+    err = max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        / (float(np.max(np.abs(np.asarray(b)))) + 1e-9)
+        for a, b in zip(jax.tree.leaves(grads_d), jax.tree.leaves(grads_r)))
+    assert err < 1e-4, err
+    print(f"grad parity vs single-node dense reference: "
+          f"max rel err {err:.1e}")
+
+    # train->serve handoff: the trained session serves as-is
+    svc = GCNService((2, 2))
+    misses0 = cache_stats()["plan"]["misses"]
+    svc.adopt("trained", eng)
+    out = svc.infer("trained", feats)
+    assert cache_stats()["plan"]["misses"] == misses0, "no replanning"
+    ref = eng.reference(feats)
+    rel = np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9)
+    assert rel < 1e-4, rel
+    print("served trained params through GCNService without replanning "
+          f"(oracle rel err {rel:.1e})")
+
+
+if __name__ == "__main__":
+    main()

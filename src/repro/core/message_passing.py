@@ -26,6 +26,16 @@ The Compute step (4) has two interchangeable backends, selected by
     ELL tensors ride in the plan-array tree (``ell_seg/ell_rows/ell_w``
     REPLACING the COO ``edge_*`` arrays, so only one encoding is ever
     uploaded) and are scanned/sharded exactly like the rest of the plan.
+
+Differentiability: the whole exchange is LINEAR in ``feats`` (gathers,
+masked deposits, ppermutes and weighted segment-sums), so its VJP is a
+reversed relay replay — every ``ppermute`` transposes to the inverse
+ring permutation and every deposit to a gather, all derived
+automatically by jax (the pallas Compute step carries an explicit
+transpose kernel, ``kernels.spmm.ops._spmm_ell_diff``). The training
+subsystem (:mod:`repro.gcn.train`) relies on ``jax.grad`` composing
+through this module for BOTH aggregation backends; the properties are
+pinned by ``tests/test_gcn_train.py``.
 """
 from __future__ import annotations
 
@@ -214,15 +224,29 @@ def exchange_and_aggregate(st: ExchangeStatics, plan_dev, feats):
     return accs  # (R, slots, F)
 
 
+def shard_node_values(plan: CommPlan, values: np.ndarray,
+                      fill=0) -> np.ndarray:
+    """(V,) or (V, K) per-vertex host values -> (*dims, Vp[, K]) in the
+    same node-major layout as :func:`shard_features`; the SPMD padding
+    slots (``Vp * N >= V``) are set to ``fill``.
+
+    This is how the training subsystem lands labels (int) and loss
+    masks (float; pass the mask with ``fill=0`` so padded slots never
+    contribute to the loss) on the same partition as the features."""
+    part = plan.part
+    values = np.asarray(values)
+    V = values.shape[0]
+    Vp = part.vertices_per_node()
+    out = np.full((plan.num_nodes, Vp) + values.shape[1:], fill,
+                  values.dtype)
+    v = np.arange(V)
+    out[part.node_of(v), part.local_index(v)] = values
+    return out.reshape(tuple(plan.mesh.dims) + (Vp,) + values.shape[1:])
+
+
 def shard_features(plan: CommPlan, feats_global: np.ndarray) -> np.ndarray:
     """(V, F) global features -> (*dims, Vp, F) node-major layout."""
-    part = plan.part
-    V, F = feats_global.shape
-    Vp = part.vertices_per_node()
-    out = np.zeros((plan.num_nodes, Vp, F), feats_global.dtype)
-    v = np.arange(V)
-    out[part.node_of(v), part.local_index(v)] = feats_global
-    return out.reshape(tuple(plan.mesh.dims) + (Vp, F))
+    return shard_node_values(plan, feats_global, fill=0)
 
 
 def unshard_features(plan: CommPlan, local: np.ndarray, V: int) -> np.ndarray:

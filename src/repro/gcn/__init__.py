@@ -1,14 +1,17 @@
-"""User-facing GCN serving stack: session / cache / service.
+"""User-facing GCN stack: session / cache / service / trainer.
 
 ``GCNEngine`` (session) owns the mesh pair (jax ``Mesh`` + planner
 ``TorusMesh``) and the compiled exchange for ONE graph;
 ``repro.gcn.cache`` owns every process-wide cache (plans, ELL layouts,
 prepared graphs, compiled layer steps) with byte-bounded LRU eviction;
 ``GCNService`` schedules batched multi-graph inference over shared
-sessions with async double-buffered plan upload. ``register_model``
-plugs new aggregation semantics into the shared execution path. The
-low-level layers underneath are ``repro.core.plan`` (host-side mapping)
-and ``repro.core.message_passing`` (SPMD executor).
+sessions with async double-buffered plan upload; ``GCNTrainer``
+(``repro.gcn.train``) trains full-batch node classification THROUGH the
+same exchange (its VJP is a reversed relay replay) and hands trained
+params to serving via ``GCNService.adopt``. ``register_model`` plugs
+new aggregation semantics into the shared execution path. The low-level
+layers underneath are ``repro.core.plan`` (host-side mapping) and
+``repro.core.message_passing`` (SPMD executor).
 """
 from repro.gcn.cache import (
     PlanKey,
@@ -29,10 +32,18 @@ from repro.gcn.registry import (
     registered_models,
 )
 from repro.gcn.service import GCNService, ServeRequest
+from repro.gcn.train import (
+    FitReport,
+    GCNTrainer,
+    masked_cross_entropy,
+    reference_loss_and_grad,
+)
 
 __all__ = [
+    "FitReport",
     "GCNEngine",
     "GCNService",
+    "GCNTrainer",
     "ModelSpec",
     "PlanKey",
     "ServeRequest",
@@ -40,7 +51,9 @@ __all__ = [
     "clear_plan_cache",
     "get_model",
     "graph_fingerprint",
+    "masked_cross_entropy",
     "plan_cache_stats",
+    "reference_loss_and_grad",
     "register_model",
     "registered_models",
     "resolve_agg_impl",

@@ -37,12 +37,23 @@ compiled step built from it; :func:`invalidate_model` and
 :func:`clear_all` sweep all four layers in one call (this is the home of
 what used to be three separate, partially-coherent clears inside
 ``engine.py``).
+
+Budget honesty: sessions register themselves per plan identity
+(:func:`register_session`, weak references), and plan eviction calls
+each live session's release hook so their memoized plan/device-array/
+compiled-step state is dropped WITH the store entry — ``set_cache_
+budget`` bounds the whole process, not just the shared store (the PR-3
+known limit: a long-lived session used to pin its plan forever).
+``invalidate_model`` deliberately does NOT release sessions: a stale
+engine keeps running its superseded spec (session semantics); the
+generation stamp in every key keeps it from poisoning fresh engines.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import threading
+import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
 
@@ -57,6 +68,7 @@ __all__ = [
     "clear_all",
     "graph_fingerprint",
     "invalidate_model",
+    "register_session",
     "set_cache_budget",
 ]
 
@@ -228,6 +240,23 @@ def _tree_nbytes(obj) -> int:
 # schedules share one compile; see get_step)
 _STEP_DEPS: dict[PlanKey, set] = {}
 
+# live sessions per plan identity (weak: a dead engine needs no
+# release). Budget eviction walks these and clears each session's
+# memoized plan/device-array/compiled-step state, so a long-lived
+# session can no longer pin an evicted plan's memory outside the
+# budget (the PR-3 known limit). The session transparently rebuilds
+# through the store on its next execution.
+_SESSIONS: dict[PlanKey, "weakref.WeakSet"] = {}
+
+
+def register_session(key: PlanKey, session) -> None:
+    """Record ``session`` (a ``GCNEngine``) as a live consumer of
+    ``key``'s plan; eviction of that plan calls the session's
+    ``_release_plan_memos`` hook. Idempotent; entries are weak."""
+    with _LOCK:
+        _SESSIONS.setdefault(key.plan_identity(),
+                             weakref.WeakSet()).add(session)
+
 
 def _on_plan_evict(key: PlanKey, _plan):
     # coherence: a plan's derived encodings and compiled executors can
@@ -237,6 +266,8 @@ def _on_plan_evict(key: PlanKey, _plan):
     _ELL.drop(lambda k: k.plan_identity() == key)
     deps = _STEP_DEPS.pop(key, set())
     _STEPS.drop(lambda k: k in deps)
+    for session in list(_SESSIONS.pop(key, ())):
+        session._release_plan_memos()
 
 
 def _on_step_evict(key, _step):
@@ -285,6 +316,28 @@ def get_plan(key: PlanKey, build) -> CommPlan:
     """The plan layer: keyed on ``key.plan_identity()`` (switching
     aggregation backends never replans)."""
     return _PLANS.get(key.plan_identity(), build, nbytes=_plan_nbytes)
+
+
+def get_plan_pinned(key: PlanKey, build, session) -> CommPlan:
+    """:func:`get_plan` + atomic session pin.
+
+    Registers ``session`` and calls its ``_pin_plan`` hook under the
+    store lock, AFTER confirming the plan is still resident — the lock
+    evictions also hold, so pin and release are strictly ordered and a
+    concurrent eviction (e.g. a service prefetch thread committing a
+    large plan) can never interleave between the store lookup and the
+    session's memo assignment. Without this, a session could end up
+    holding an evicted plan while deregistered — re-pinned forever,
+    the exact budget leak the release hook exists to prevent. If the
+    plan IS evicted between build commit and pin, the lookup simply
+    retries through the store (one more counted miss)."""
+    while True:
+        plan = _PLANS.get(key.plan_identity(), build, nbytes=_plan_nbytes)
+        with _LOCK:
+            if _PLANS.peek(key.plan_identity()):
+                register_session(key, session)
+                session._pin_plan(plan)
+                return plan
 
 
 def plan_cached(key: PlanKey) -> bool:
@@ -339,11 +392,17 @@ def step_cached(plan_key: PlanKey, exec_fp: tuple) -> bool:
 
 def clear_all() -> None:
     """Drop every layer (plans, ELL layouts, prepared graphs, compiled
-    steps) and reset all counters — the one coherent clear."""
+    steps) and reset all counters — the one coherent clear. Live
+    sessions are released too (same hook as budget eviction), so the
+    memory actually returns; they transparently rebuild on next use."""
     with _LOCK:
         for store in (_PLANS, _ELL, _PREP, _STEPS):
             store.clear()
         _STEP_DEPS.clear()
+        for sessions in list(_SESSIONS.values()):
+            for session in list(sessions):
+                session._release_plan_memos()
+        _SESSIONS.clear()
 
 
 def invalidate_model(name: str) -> None:

@@ -129,9 +129,20 @@ class GCNEngine:
         self._plan: CommPlan | None = None
         self._agg_impl: str | None = None  # resolved lazily (touches jax)
         # lazies memoizing shared-cache lookups: device plan arrays per
-        # backend, compiled layer steps per (backend, batched) pair
+        # backend, compiled layer steps per (backend, batched) pair,
+        # compiled training functions per (kind, backend[, opt]) key.
+        # All of these are RELEASED when the shared store evicts this
+        # session's plan (repro.gcn.cache registers a weakref), so a
+        # long-lived session can no longer pin evicted plans/uploads
+        # past the configured byte budget.
         self._plan_dev: dict[str, object] = {}
         self._layer_step: dict[tuple[str, bool], object] = {}
+        self._train_fns: dict[tuple, object] = {}
+        # batch-size bucketing (forward_batched pads B to powers of two
+        # so distinct request counts share one compiled step)
+        self._batch_buckets: set[tuple] = set()
+        self._bucket_calls = 0
+        self._bucket_hits = 0
 
     # ---------------- construction ----------------
 
@@ -244,8 +255,34 @@ class GCNEngine:
                 return build_plan(self.cfg, g2, self.torus, self.part,
                                   edge_weights=w, bidir=self.bidir)
 
-            self._plan = cache.get_plan(self.plan_key, build)
+            # the pinned getter registers this session and assigns
+            # self._plan (via _pin_plan) under the store lock, so an
+            # eviction racing the build/commit can never leave this
+            # session holding a dead plan while deregistered. Return
+            # the getter's plan, not self._plan — an eviction may
+            # legitimately release the memo again before we read it.
+            return cache.get_plan_pinned(self.plan_key, build, self)
         return self._plan
+
+    def _pin_plan(self, plan: CommPlan) -> None:
+        """Memo assignment hook, called by the cache under its lock
+        (see :func:`repro.gcn.cache.get_plan_pinned`)."""
+        self._plan = plan
+
+    def _release_plan_memos(self) -> None:
+        """Called by :mod:`repro.gcn.cache` when this session's plan is
+        evicted under byte pressure: drop every memoized derivative —
+        the plan object, per-backend device arrays (the uploads), the
+        compiled layer/training steps, and the batch-bucket ledger
+        (released steps recompile, so old buckets are no longer
+        hits). The session stays fully usable; its next execution
+        transparently replans/re-uploads through the shared store
+        (counted as one plan miss)."""
+        self._plan = None
+        self._plan_dev.clear()
+        self._layer_step.clear()
+        self._train_fns.clear()
+        self._batch_buckets.clear()
 
     def statics_for(self, agg_impl: str | None = None) -> mp.ExchangeStatics:
         return mp.exchange_statics(
@@ -424,6 +461,27 @@ class GCNEngine:
         """(V, F) global features -> (*dims, Vp, F) node-major layout."""
         return mp.shard_features(self.plan, np.asarray(feats_global))
 
+    def _shard_input(self, feats) -> tuple:
+        """Validate + normalize a feature input: a global ``(V, F)``
+        host array is sharded onto the mesh, a pre-sharded ``(*dims,
+        Vp, F)`` device array passes through. Returns ``(x,
+        is_global)`` — the ONE dispatch ``forward``, ``loss_and_grad``
+        and the trainer all share, so the input contract can never
+        diverge between inference and training."""
+        nd = len(self.dims)
+        feats_nd = np.ndim(feats)
+        if feats_nd == 2:
+            if feats.shape[0] != self.graph.num_vertices:
+                raise ValueError(
+                    f"global feats rows {feats.shape[0]} != |V| "
+                    f"{self.graph.num_vertices}")
+            return jnp.asarray(self.shard(np.asarray(feats))), True
+        if feats_nd == nd + 2:
+            return feats, False
+        raise ValueError(
+            f"feats must be (V, F) or (*{self.dims}, Vp, F); "
+            f"got ndim={feats_nd}")
+
     def unshard(self, local) -> np.ndarray:
         """Inverse of :meth:`shard` for (*dims, Vp, F) tables."""
         return mp.unshard_features(self.plan, np.asarray(local),
@@ -441,22 +499,7 @@ class GCNEngine:
         """
         impl = self._impl(agg_impl)
         params = self._resolve_params(params)
-        nd = len(self.dims)
-        feats_nd = np.ndim(feats)
-        if feats_nd == 2:
-            if feats.shape[0] != self.graph.num_vertices:
-                raise ValueError(
-                    f"global feats rows {feats.shape[0]} != |V| "
-                    f"{self.graph.num_vertices}")
-            x = jnp.asarray(self.shard(feats))
-            is_global = True
-        elif feats_nd == nd + 2:
-            x = feats
-            is_global = False
-        else:
-            raise ValueError(
-                f"feats must be (V, F) or (*{self.dims}, Vp, F); "
-                f"got ndim={feats_nd}")
+        x, is_global = self._shard_input(feats)
         step = self._compiled_layer_step(impl)
         pdev = self.plan_arrays(impl)
         for li, layer in enumerate(params):
@@ -479,10 +522,15 @@ class GCNEngine:
         :meth:`forward` calls up to fp32 summation order (the relay sums
         in the same order; only the matmul tiling differs).
 
-        ``B == 1`` is valid; the compiled step is cached per (B, F)
-        shape like any jit specialization. :class:`~repro.gcn.service.
-        GCNService` uses this to serve compatible queued requests in one
-        step.
+        ``B == 1`` is valid. The batch is padded up to the next power of
+        two with zero-feature rows (**bucketing**): the compiled step
+        specializes per (padded B, F), so request counts 5, 6, 7, 8 all
+        share the B=8 executable instead of each triggering a fresh
+        compile — padding rows cost relay payload, never a recompile
+        (the zero columns ride the same linear exchange and are sliced
+        off before returning). :meth:`stats` reports the bucket hit
+        rate. :class:`~repro.gcn.service.GCNService` uses this to serve
+        compatible queued requests in one step.
         """
         impl = self._impl(agg_impl)
         params = self._resolve_params(params)
@@ -493,20 +541,90 @@ class GCNEngine:
                 f"got shape {fb.shape}")
         nd = len(self.dims)
         B, V, F = fb.shape
+        Bpad = 1 << (B - 1).bit_length()  # next power of two >= B
+        bucket = (impl, Bpad, F)
+        self._bucket_calls += 1
+        if bucket in self._batch_buckets:
+            self._bucket_hits += 1
+        else:
+            self._batch_buckets.add(bucket)
+        if Bpad != B:
+            fb = np.concatenate(
+                [fb, np.zeros((Bpad - B, V, F), fb.dtype)])
         # host-side layout, one scatter for the whole batch: fold the
         # batch into the feature axis (the same B-major fold the
         # compiled step uses on device), shard once, then unfold the
         # batch axis to land right after the mesh dims
-        xs = self.shard(np.moveaxis(fb, 0, 1).reshape(V, B * F))
-        xs = xs.reshape(xs.shape[:-1] + (B, F))  # (*dims, Vp, B, F)
-        x = jnp.asarray(np.moveaxis(xs, -2, nd))  # (*dims, B, Vp, F)
+        xs = self.shard(np.moveaxis(fb, 0, 1).reshape(V, Bpad * F))
+        xs = xs.reshape(xs.shape[:-1] + (Bpad, F))  # (*dims, Vp, Bp, F)
+        x = jnp.asarray(np.moveaxis(xs, -2, nd))  # (*dims, Bp, Vp, F)
         step = self._compiled_layer_step(impl, batched=True)
         pdev = self.plan_arrays(impl)
         for li, layer in enumerate(params):
             x = step(pdev, x, layer, last=li == len(params) - 1)
-        out = np.moveaxis(np.asarray(x), nd, -2)  # (*dims, Vp, B, F_out)
+        out = np.moveaxis(np.asarray(x), nd, -2)  # (*dims, Vp, Bp, F_out)
         out = self.unshard(out.reshape(out.shape[:-2] + (-1,)))
-        return np.moveaxis(out.reshape(V, B, -1), 0, 1)  # (B, V, F_out)
+        # slice the zero-padding requests back off
+        return np.moveaxis(out.reshape(V, Bpad, -1), 0, 1)[:B]
+
+    # ---------------- training (repro.gcn.train) ----------------
+
+    def _compiled_loss_grad(self, agg_impl: str | None = None):
+        """jit(value_and_grad(masked CE through the exchange)):
+        ``(pdev, params, x, labels, mask) -> (loss, grads)``. Cached
+        process-wide alongside the layer steps (same executor-identity
+        sharing and plan-eviction coherence)."""
+        from repro.gcn import train as _train
+
+        impl = self._impl(agg_impl)
+        memo = ("loss_grad", impl)
+        if memo not in self._train_fns:
+            fp = ("loss_grad", self._exec_fp(impl, False))
+            self._train_fns[memo] = cache.get_step(
+                self.plan_key_for(impl), fp,
+                lambda: _train.build_loss_grad(self, impl))
+        return self._train_fns[memo]
+
+    def _compiled_train_step(self, opt_cfg, agg_impl: str | None = None):
+        """One jitted full-batch training step (loss + grads through the
+        exchange + AdamW update): ``(pdev, params, opt_state, x,
+        labels, mask) -> (params, opt_state, metrics)``. Keyed by the
+        executor identity PLUS the (frozen, hashable) optimizer config,
+        so two trainers with the same schedule share one compile."""
+        from repro.gcn import train as _train
+
+        impl = self._impl(agg_impl)
+        memo = ("train_step", impl, opt_cfg)
+        if memo not in self._train_fns:
+            fp = ("train_step", opt_cfg, self._exec_fp(impl, False))
+            self._train_fns[memo] = cache.get_step(
+                self.plan_key_for(impl), fp,
+                lambda: _train.build_train_step(self, impl, opt_cfg))
+        return self._train_fns[memo]
+
+    def loss_and_grad(self, feats, labels, mask=None, params=None, *,
+                      agg_impl: str | None = None):
+        """Masked cross-entropy and its parameter gradients, computed
+        THROUGH the distributed exchange (forward relay replay +
+        transposed replay for the backward pass).
+
+        ``feats`` is a global ``(V, F)`` host array or pre-sharded
+        ``(*dims, Vp, F)``; ``labels`` a global ``(V,)`` int array;
+        ``mask`` an optional ``(V,)`` 0/1 array of labeled vertices
+        (SPMD padding is always excluded). Returns ``(loss, grads)`` as
+        device values; gradients match
+        :func:`repro.gcn.train.reference_loss_and_grad` (the dense
+        single-node oracle) to fp32 tolerance on either aggregation
+        backend."""
+        from repro.gcn import train as _train
+
+        impl = self._impl(agg_impl)
+        params = self._resolve_params(params)
+        labels_sh, mask_sh = _train.shard_training_inputs(
+            self, labels, mask)
+        x, _ = self._shard_input(feats)
+        fn = self._compiled_loss_grad(impl)
+        return fn(self.plan_arrays(impl), params, x, labels_sh, mask_sh)
 
     def reference(self, feats, params=None):
         """Exact single-device oracle for this engine's model (numpy in,
@@ -585,6 +703,14 @@ class GCNEngine:
             agg_dense_bytes=dense_slots * feat_dim * dtype_bytes,
             agg_ell_bytes=ell_slots * feat_dim * dtype_bytes,
             agg_traffic_reduction=1.0 - ell_slots / max(dense_slots, 1),
+            # forward_batched bucketing: a hit = the padded batch size
+            # had already been executed, so the call compiled nothing
+            batch_bucket_calls=self._bucket_calls,
+            batch_bucket_hits=self._bucket_hits,
+            batch_bucket_hit_rate=(
+                self._bucket_hits / self._bucket_calls
+                if self._bucket_calls else 0.0),
+            batch_buckets=sorted({b for (_, b, _) in self._batch_buckets}),
         )
         return out
 
@@ -610,13 +736,15 @@ class GCNEngine:
             self.plan_arrays(agg_impl), feats_abs)
         return _ppermute_payload_bytes(jaxpr.jaxpr, 1)
 
-    def _default_feat_dim(self) -> int:
-        """Feature width for byte accounting: the stored params' input
-        width when recoverable (registered models may use any layer dict
-        layout), else the config's feat_in."""
-        if self.params:
+    def _default_feat_dim(self, params=None) -> int:
+        """Feature width for byte accounting: the params' input width
+        when recoverable (registered models may use any layer dict
+        layout), else the config's feat_in. ``params`` defaults to the
+        engine's stored params (the trainer passes its own)."""
+        params = params if params is not None else self.params
+        if params:
             try:
-                return int(self.params[0]["w"].shape[0])
+                return int(params[0]["w"].shape[0])
             except (KeyError, TypeError, AttributeError, IndexError):
                 pass
         return self.cfg.graph.feat_in

@@ -93,6 +93,10 @@ class _Counters:
     t_first: float = 0.0
     t_last: float = 0.0
     exec_windows: list = field(default_factory=list)
+    # bucket counts retired from evicted sessions, so stats() history
+    # survives eviction (live sessions report current - admission base)
+    bucket_calls_retired: int = 0
+    bucket_hits_retired: int = 0
 
 
 class GCNService:
@@ -132,6 +136,10 @@ class GCNService:
         self._next_rid = 0
         self._prefetch: _Prefetch | None = None
         self._c = _Counters()
+        # per-session bucket-counter baseline at admission: an adopted
+        # engine may arrive with pre-service counts (trainer use), and
+        # this service should report only traffic it scheduled
+        self._bucket_base: dict[str, tuple[int, int]] = {}
 
     # ---------------- admission ----------------
 
@@ -153,14 +161,49 @@ class GCNService:
         elif layer_dims is not None:
             eng.init_params(jax.random.PRNGKey(seed), list(layer_dims))
         self.sessions[name] = eng
+        self._bucket_base[name] = (eng._bucket_calls, eng._bucket_hits)
         return eng
+
+    def adopt(self, name: str, engine: GCNEngine, *,
+              params=None) -> GCNEngine:
+        """Admit an EXISTING session object — the train->serve handoff.
+
+        A :class:`~repro.gcn.train.GCNTrainer` leaves its trained params
+        on its engine; adopting that engine serves them with ZERO
+        rebuilt state: the plan, ELL layouts, uploaded device arrays and
+        compiled steps the session already holds (all shared through
+        ``repro.gcn.cache``) carry over as-is, so serving starts without
+        replanning or re-uploading. The engine must live on this
+        service's mesh dims; pass ``params=`` to override what it
+        carries."""
+        if name in self.sessions:
+            raise ValueError(f"session {name!r} already admitted")
+        if engine.dims != self.dims:
+            raise ValueError(
+                f"engine mesh {engine.dims} != service mesh {self.dims}")
+        if params is not None:
+            engine.params = list(params)
+        if engine.params is None:
+            raise ValueError(
+                "adopted engine has no params; train it first or pass "
+                "params=")
+        self.sessions[name] = engine
+        self._bucket_base[name] = (engine._bucket_calls,
+                                   engine._bucket_hits)
+        return engine
 
     def evict(self, name: str) -> None:
         """Forget a session (pending requests for it are dropped; a
         never-admitted name is a no-op, so teardown paths can call this
         unconditionally). The shared caches keep its plan until byte
         pressure evicts it."""
-        self.sessions.pop(name, None)
+        eng = self.sessions.pop(name, None)
+        if eng is not None:
+            # retire the session's bucket counts so stats() history
+            # survives eviction instead of vanishing with the session
+            base_c, base_h = self._bucket_base.pop(name, (0, 0))
+            self._c.bucket_calls_retired += eng._bucket_calls - base_c
+            self._c.bucket_hits_retired += eng._bucket_hits - base_h
         self.queue = [r for r in self.queue if r.session != name]
 
     # ---------------- request queue ----------------
@@ -360,9 +403,22 @@ class GCNService:
         """
         c = self._c
         wall = max(c.t_last - c.t_first, 0.0)
+        bucket_calls = c.bucket_calls_retired + sum(
+            e._bucket_calls - self._bucket_base[n][0]
+            for n, e in self.sessions.items())
+        bucket_hits = c.bucket_hits_retired + sum(
+            e._bucket_hits - self._bucket_base[n][1]
+            for n, e in self.sessions.items())
         return {
             "sessions": len(self.sessions),
             "queued": len(self.queue),
+            # forward_batched power-of-two bucketing across all
+            # sessions: the hit rate is the fraction of batched calls
+            # that reused an already-compiled padded batch size
+            "batch_bucket_calls": bucket_calls,
+            "batch_bucket_hits": bucket_hits,
+            "batch_bucket_hit_rate": (
+                bucket_hits / bucket_calls if bucket_calls else 0.0),
             "requests": c.requests,
             "batches": c.batches,
             "mean_batch": c.requests / max(c.batches, 1),

@@ -99,3 +99,47 @@ def spmm_ell(seg, messages, *, block_slots: int = 128,
         scratch_shapes=[pltpu.VMEM((block_slots, block_feat), jnp.float32)],
         interpret=interpret,
     )(seg, messages)
+
+
+def _spmm_t_kernel(seg_ref, dacc_ref, o_ref, *, block_slots, block_edges):
+    seg = seg_ref[0]  # (be,)
+    dacc = dacc_ref[0]  # (bs, bf)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block_slots, block_edges), 0)
+    ind = (seg[None, :] == slots).astype(dacc.dtype)  # (bs, be); -1 never hits
+    o_ref[0] = jax.lax.dot(ind.T, dacc).astype(o_ref.dtype)
+
+
+def spmm_ell_t(seg, dacc, *, block_slots: int = 128,
+               block_edges: int = 512, block_feat: int = 128,
+               interpret: bool = False):
+    """Transpose of :func:`spmm_ell` in its (linear) ``messages`` input:
+    scatter an accumulator cotangent back onto the edge stream.
+
+    dacc: (nb, block_slots, F); returns d_messages (nb, Eb, F) where
+    ``d_messages[b, e] = dacc[b, seg[b, e]]`` (zero for ``seg == -1``
+    padding). Same indicator-matmul trick as the forward, contracted
+    the other way — ``ind.T @ dacc`` is a dense (be, bs) x (bs, bf) MXU
+    matmul per tile, so the backward pass of the aggregation stays on
+    the systolic array. No scratch accumulator is needed: the slot
+    dimension is fully contracted within one grid cell, so each
+    (edge block, feat block) tile is written exactly once."""
+    nb, Eb = seg.shape
+    F = dacc.shape[-1]
+    block_edges = _divisor_at_most(Eb, block_edges)
+    block_feat = _divisor_at_most(F, block_feat)
+
+    kernel = functools.partial(_spmm_t_kernel, block_slots=block_slots,
+                               block_edges=block_edges)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, F // block_feat, Eb // block_edges),
+        in_specs=[
+            pl.BlockSpec((1, block_edges), lambda b, f, e: (b, e)),
+            pl.BlockSpec((1, block_slots, block_feat),
+                         lambda b, f, e: (b, 0, f)),
+        ],
+        out_specs=pl.BlockSpec((1, block_edges, block_feat),
+                               lambda b, f, e: (b, e, f)),
+        out_shape=jax.ShapeDtypeStruct((nb, Eb, F), dacc.dtype),
+        interpret=interpret,
+    )(seg, dacc)

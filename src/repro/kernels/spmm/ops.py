@@ -140,17 +140,50 @@ def build_ell_layout_rounds(edge_repl: np.ndarray, edge_slot: np.ndarray,
     return seg, rows, w
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _spmm_ell_diff(seg, msgs, block_slots, interpret):
+    """:func:`kernel.spmm_ell` with a transposition rule.
+
+    ``pallas_call`` has no built-in transpose, but the ELL spmm is
+    LINEAR in ``msgs`` (``acc = Ind @ msgs`` for the 0/1 indicator
+    matrix the kernel builds from ``seg``), so its VJP is the transposed
+    indicator matmul ``Ind.T @ d_acc`` — :func:`kernel.spmm_ell_t`,
+    itself a Pallas MXU kernel. This is what lets ``jax.grad``
+    differentiate straight through the exchange executor's Compute step
+    on the pallas backend (the training subsystem's backward pass)."""
+    return _k.spmm_ell(seg, msgs, block_slots=block_slots,
+                       interpret=interpret)
+
+
+def _spmm_ell_fwd(seg, msgs, block_slots, interpret):
+    # the only residual is the (integer, non-differentiated) layout
+    return _spmm_ell_diff(seg, msgs, block_slots, interpret), seg
+
+
+def _spmm_ell_bwd(block_slots, interpret, seg, d_acc):
+    d_msgs = _k.spmm_ell_t(seg, d_acc, block_slots=block_slots,
+                           interpret=interpret)
+    return None, d_msgs  # seg is integer-valued: no cotangent
+
+
+_spmm_ell_diff.defvjp(_spmm_ell_fwd, _spmm_ell_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("num_slots", "block_slots",
                                              "impl"))
 def aggregate(replica, seg, rows, weights, *, num_slots: int,
               block_slots: int = 128, impl: str = "auto"):
-    """replica: (R, F). Returns (num_slots, F) aggregated accumulators."""
+    """replica: (R, F). Returns (num_slots, F) aggregated accumulators.
+
+    Differentiable in ``replica`` (and ``weights``): the gather/scale
+    prologue is plain jnp, and the kernel itself carries a custom VJP
+    (see :func:`_spmm_ell_diff`), so both aggregation backends support
+    ``jax.grad`` with identical semantics."""
     nb, Eb = seg.shape
     msgs = replica[rows.reshape(-1)].reshape(nb, Eb, -1)
     msgs = msgs * weights[..., None].astype(msgs.dtype)
     if impl == "xla":
         acc = _ref.spmm_ell_ref(seg, msgs, block_slots)
     else:
-        acc = _k.spmm_ell(seg, msgs, block_slots=block_slots,
-                          interpret=_use_interpret())
+        acc = _spmm_ell_diff(seg, msgs, block_slots, _use_interpret())
     return acc.reshape(nb * block_slots, -1)[:num_slots]

@@ -1,0 +1,30 @@
+"""Shared writer for the multi-suite ``BENCH_gcn.json`` perf baseline.
+
+Since PR 4 the checked-in baseline holds one record PER SUITE
+(``{"serve": {...}, "train": {...}}``) so the serving and training
+drivers can refresh their halves independently (``make bench-json``
+runs both). A pre-PR-4 flat single-suite file (it carried its suite
+name in a top-level ``"suite"`` key) is absorbed under that key rather
+than clobbered.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def write_record(path: str, suite: str, rec: dict) -> None:
+    """Merge ``rec`` under ``suite`` in the JSON file at ``path``."""
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    if "suite" in data:  # legacy flat single-suite record
+        data = {data["suite"]: data}
+    data[suite] = rec
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -19,7 +19,6 @@ before/after measurements of the overlap win).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -150,10 +149,10 @@ def main(argv=None) -> int:
                       for layer, s in st["cache"].items()
                       if isinstance(s, dict)},
         }
-        with open(args.json, "w") as f:
-            json.dump(rec, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"wrote {args.json}")
+        from repro.launch.bench_record import write_record
+
+        write_record(args.json, "serve", rec)
+        print(f"wrote {args.json} (serve suite)")
     return 0
 
 

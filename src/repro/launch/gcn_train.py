@@ -1,0 +1,184 @@
+"""Distributed GCN training driver: full-batch node classification on a
+partitioned RMAT graph, differentiated through the multicast exchange.
+
+Trains each ``--models`` entry (paper-config GCN / GIN / SAGE smoke
+presets) on one RMAT graph with synthetic teacher labels, on a >= 2-dim
+torus mesh, and reports the loss trajectory, mean epoch wall time and
+the MEASURED exchange bytes per training step (forward relay replays +
+their transposed backward replays, counted from the traced jaxpr).
+Optionally records the machine-readable perf trajectory under the
+``"train"`` key of ``BENCH_gcn.json`` (``benchmarks/run.py --suite
+train`` checks that in as the baseline future PRs diff against).
+
+    PYTHONPATH=src python -m repro.launch.gcn_train \
+        --mesh 2x2 --models gcn,gin,sage --scale 9 --epochs 20 \
+        --json BENCH_gcn.json
+
+The trained parameters are handed straight to a ``GCNService`` at the
+end (``service.adopt``) and one serving request is verified against the
+session's single-device oracle — the train->serve handoff the
+subsystem exists for, exercised on every bench run.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import numpy as np
+
+
+def synthetic_labels(graph, feat_in: int, classes: int, seed: int = 0):
+    """Features + teacher labels for a graph: one mean-aggregation hop
+    over random features through a random linear readout. The labels
+    correlate with both the features and the topology, so a GCN can
+    actually learn them (random labels would only measure
+    memorization); loss starts near ``ln(classes)`` and falls fast.
+    Returns ``(feats (V, F) f32, labels (V,) int64)``."""
+    rng = np.random.default_rng(seed)
+    V = graph.num_vertices
+    feats = rng.normal(size=(V, feat_in)).astype(np.float32)
+    agg = np.zeros_like(feats)
+    np.add.at(agg, graph.dst, feats[graph.src])
+    deg = np.maximum(graph.in_degrees(), 1).astype(np.float32)[:, None]
+    teacher = feats + agg / deg
+    w = rng.normal(size=(feat_in, classes)).astype(np.float32)
+    return feats, np.argmax(teacher @ w, axis=1)
+
+
+def train_one(model: str, graph, mesh_dims, *, feats, labels, mask,
+              hidden: int, classes: int, epochs: int, lr: float,
+              agg_impl: str | None, agg_buffer_bytes: int,
+              log_every: int = 0, seed: int = 0):
+    """Build one session on ``mesh_dims``, fit, and return
+    ``(engine, FitReport, eval dict)``."""
+    from repro.config import get_gcn_config
+    from repro.gcn import GCNEngine, GCNTrainer
+    from repro.train import optimizer as optlib
+
+    cfg = dataclasses.replace(
+        get_gcn_config(f"gcn-{model}-rd", "smoke"),
+        agg_buffer_bytes=agg_buffer_bytes,
+        **({"agg_impl": agg_impl} if agg_impl else {}))
+    eng = GCNEngine.build(cfg, graph, mesh_dims)
+    trainer = GCNTrainer(
+        eng, labels, mask,
+        opt=optlib.AdamWConfig(lr=lr, weight_decay=0.0, warmup_steps=0,
+                               total_steps=max(epochs, 1), grad_clip=1.0))
+    report = trainer.fit(
+        feats, epochs=epochs, seed=seed, log_every=log_every,
+        layer_dims=[feats.shape[1], hidden, classes])
+    return eng, report, trainer.evaluate(feats)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--mesh", default="2x2",
+                    help="torus dims, e.g. 2x2 or 4x2 (<= forced host "
+                         "device count)")
+    ap.add_argument("--models", default="gcn,gin,sage",
+                    help="comma list of message-passing models to train")
+    ap.add_argument("--scale", type=int, default=9,
+                    help="RMAT vertex scale (V = 2^scale)")
+    ap.add_argument("--feat", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--train-frac", type=float, default=0.8,
+                    help="fraction of vertices carrying a label")
+    ap.add_argument("--agg", default="",
+                    help="aggregation backend override (jnp|pallas|auto)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=0)
+    ap.add_argument("--json", default="",
+                    help="merge the perf record under 'train' here "
+                         "(BENCH_gcn.json)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.core.rmat import rmat
+    from repro.gcn import GCNService
+    from repro.launch.bench_record import write_record
+
+    mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
+    if len(mesh_dims) < 2:
+        raise SystemExit("--mesh must have >= 2 dims (e.g. 2x2)")
+    rng = np.random.default_rng(args.seed)
+    graph = rmat(args.scale, 1 << (args.scale + 3), seed=100 + args.seed,
+                 name=f"rmat{args.scale}")
+    feats, labels = synthetic_labels(graph, args.feat, args.classes,
+                                     seed=args.seed)
+    mask = (rng.random(graph.num_vertices)
+            < args.train_frac).astype(np.float32)
+
+    svc = GCNService(mesh_dims)
+    per_model = {}
+    t0 = time.perf_counter()
+    for model in args.models.split(","):
+        model = model.strip()
+        eng, rep, ev = train_one(
+            model, graph, mesh_dims, feats=feats, labels=labels,
+            mask=mask, hidden=args.hidden, classes=args.classes,
+            epochs=args.epochs, lr=args.lr,
+            agg_impl=args.agg or None,
+            agg_buffer_bytes=8 << 10, log_every=args.log_every,
+            seed=args.seed)
+        print(f"[{model}] loss {rep.loss_first:.4f} -> {rep.loss_last:.4f} "
+              f"over {rep.epochs} epochs "
+              f"(epoch {rep.epoch_s * 1e3:.1f}ms, compile "
+              f"{rep.compile_s:.2f}s, train acc {ev['accuracy']:.2%}); "
+              f"exchange {rep.exchange_bytes_per_step / 2**10:.1f} KiB/step")
+        # the train->serve handoff: the trained session serves as-is
+        svc.adopt(model, eng)
+        out = svc.infer(model, feats)
+        ref = eng.reference(feats)
+        err = float(np.max(np.abs(out - ref))
+                    / (np.max(np.abs(ref)) + 1e-9))
+        assert err < 1e-4, f"served-vs-oracle mismatch for {model}: {err}"
+        per_model[model] = {
+            "epochs": rep.epochs,
+            "loss_first": round(rep.loss_first, 6),
+            "loss_last": round(rep.loss_last, 6),
+            "epoch_s": round(rep.epoch_s, 5),
+            "compile_s": round(rep.compile_s, 4),
+            "train_accuracy": round(ev["accuracy"], 4),
+            "exchange_bytes_per_step": rep.exchange_bytes_per_step,
+            "agg_backend": eng.agg_impl,
+        }
+        assert rep.loss_last < rep.loss_first, \
+            f"{model}: loss did not decrease"
+    wall = time.perf_counter() - t0
+    print(f"trained {len(per_model)} models on rmat{args.scale} "
+          f"(V={graph.num_vertices}, E={graph.num_edges}) over mesh "
+          f"{'x'.join(map(str, mesh_dims))} in {wall:.2f}s; all served "
+          f"through GCNService without replanning "
+          f"(jax {jax.default_backend()})")
+
+    if args.json:
+        rec = {
+            "suite": "train",
+            "mesh": list(mesh_dims),
+            "graph": {"V": graph.num_vertices, "E": graph.num_edges},
+            "feat_in": args.feat,
+            "hidden": args.hidden,
+            "classes": args.classes,
+            "train_frac": args.train_frac,
+            "lr": args.lr,
+            "wall_s": round(wall, 4),
+            "jax_backend": jax.default_backend(),
+            "models": per_model,
+        }
+        write_record(args.json, "train", rec)
+        print(f"wrote {args.json} (train suite)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

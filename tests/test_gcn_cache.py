@@ -72,9 +72,12 @@ def test_plan_lru_evicts_under_byte_budget(fresh_caches):
     _ = _engine(ga).plan
     st = cache.cache_stats()["plan"]
     assert st["misses"] == misses0 + 1, "second touch must be a pure hit"
-    # the session built BEFORE eviction keeps its memoized plan (session
-    # semantics) but the store rebuilt a fresh object for new sessions
-    assert ea.plan is not ea2.plan
+    # eviction RELEASED the pre-eviction session's memo (no pinning —
+    # the budget bounds the process, not just the store); its next
+    # access refetches the store's rebuilt object, the same one fresh
+    # sessions see
+    assert ea._plan is None
+    assert ea.plan is ea2.plan
 
 
 def test_plan_eviction_cascades_to_ell_and_steps(fresh_caches):

@@ -1,0 +1,299 @@
+"""The distributed training subsystem (``repro.gcn.train``):
+differentiation THROUGH the multicast exchange.
+
+Property coverage (the in-process 1-CPU view; the multi-device versions
+run in the ``_gcn_train_main.py`` subprocess):
+
+  * the exchange VJP is linear — the cotangent is independent of the
+    primal point, and the exchange itself is additive/homogeneous;
+  * ``loss_and_grad`` matches the dense single-node oracle
+    (``reference_loss_and_grad``) for every registered model, on BOTH
+    aggregation backends (the pallas ELL kernel carries an explicit
+    transpose kernel);
+  * two identical ``fit`` runs are bit-identical (determinism);
+  * ``fit`` decreases the loss and hands trained params to serving
+    without replanning or recompiling (``GCNService.adopt``);
+  * ``forward_batched`` buckets batch sizes to powers of two (satellite:
+    distinct request counts stop triggering per-B recompiles);
+  * plan eviction under a byte budget releases live-session memos
+    (satellite: ``set_cache_budget`` bounds the whole process).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+V, E, F, C = 256, 2048, 8, 4
+
+
+@pytest.mark.slow
+def test_train_8dev():
+    """Multi-device acceptance run (subprocess; device count must be
+    set before jax initializes): gradient parity vs the dense reference
+    for all 3 models x both backends on a (4, 2) torus, decreasing
+    loss, backward-exchange byte accounting, and the train->serve
+    handoff. See ``_gcn_train_main.py``."""
+    script = Path(__file__).parent / "_gcn_train_main.py"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL_OK" in r.stdout
+
+
+def _cfg(model="gcn", **over):
+    from repro.config import get_gcn_config
+
+    cfg = get_gcn_config(f"gcn-{model}-rd", "smoke")
+    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+
+
+@pytest.fixture
+def fresh_caches():
+    from repro.gcn import cache
+
+    cache.clear_all()
+    saved = cache._PLANS.budget_bytes
+    yield cache
+    cache.set_cache_budget(plan_bytes=saved)
+    cache.clear_all()
+
+
+def _setup(model="gcn", dims=(1, 1), seed=7, layer_dims=(F, 8, C)):
+    import jax
+
+    from repro.core.graph import erdos
+    from repro.gcn import GCNEngine
+
+    g = erdos(V, E, seed=seed)
+    eng = GCNEngine.build(_cfg(model), g, dims)
+    eng.init_params(jax.random.PRNGKey(0), list(layer_dims))
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(V, F)).astype(np.float32)
+    labels = rng.integers(0, C, size=V)
+    mask = (rng.random(V) < 0.8).astype(np.float32)
+    return eng, feats, labels, mask
+
+
+def test_exchange_vjp_is_linear(fresh_caches):
+    """The exchange is linear in the features, so (a) outputs are
+    additive/homogeneous and (b) its VJP cotangent does not depend on
+    the primal point — the backward pass is a pure reversed relay
+    replay, with no stored activations from the forward."""
+    import jax
+    import jax.numpy as jnp
+
+    eng, feats, _, _ = _setup()
+    exch = eng.exchange_fn()
+    pdev = eng.plan_arrays()
+    x1 = jnp.asarray(eng.shard(feats))
+    x2 = jnp.asarray(eng.shard(feats[::-1].copy()))
+
+    out = exch(pdev, 2.0 * x1 + 3.0 * x2)
+    ref = 2.0 * exch(pdev, x1) + 3.0 * exch(pdev, x2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    ct = jnp.asarray(
+        np.random.default_rng(0).normal(size=out.shape).astype(np.float32))
+    _, vjp1 = jax.vjp(lambda xx: exch(pdev, xx), x1)
+    _, vjp2 = jax.vjp(lambda xx: exch(pdev, xx), x2)
+    (g1,), (g2,) = vjp1(ct), vjp2(ct)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+def test_grad_parity_all_models_both_backends(fresh_caches):
+    """``loss_and_grad`` through the distributed exchange matches the
+    dense single-node oracle to fp32 tolerance for GCN/GIN/SAGE, and
+    the two aggregation backends agree with each other."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.gcn import reference_loss_and_grad
+
+    for model in ("gcn", "gin", "sage"):
+        eng, feats, labels, mask = _setup(model)
+        loss_r, grads_r = reference_loss_and_grad(eng, feats, labels, mask)
+        for impl in ("jnp", "pallas"):
+            loss_d, grads_d = eng.loss_and_grad(feats, labels, mask,
+                                                agg_impl=impl)
+            assert abs(float(loss_d) - float(loss_r)) < 1e-5, (model, impl)
+            for gd, gr in zip(jax.tree.leaves(grads_d),
+                              jax.tree.leaves(grads_r)):
+                err = float(jnp.max(jnp.abs(gd - gr))
+                            / (jnp.max(jnp.abs(gr)) + 1e-9))
+                assert err < 1e-4, (model, impl, err)
+
+
+def test_fit_decreases_loss_and_is_deterministic(fresh_caches):
+    """Two identical ``fit`` runs produce bit-identical parameters and
+    a decreasing loss trajectory."""
+    import jax
+
+    from repro.gcn import GCNTrainer
+
+    reports = []
+    for _ in range(2):
+        eng, feats, labels, mask = _setup()
+        tr = GCNTrainer(eng, labels, mask)
+        reports.append(tr.fit(feats, epochs=10))
+    ra, rb = reports
+    assert ra.loss_last < ra.loss_first
+    assert [h["loss"] for h in ra.history] == \
+        [h["loss"] for h in rb.history], "fit must be deterministic"
+    for a, b in zip(jax.tree.leaves(ra.params), jax.tree.leaves(rb.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_mask_excludes_vertices(fresh_caches):
+    """The loss only sees masked vertices: flipping an UNmasked
+    vertex's label changes nothing."""
+    eng, feats, labels, mask = _setup()
+    off = int(np.flatnonzero(mask == 0)[0])
+    loss0, _ = eng.loss_and_grad(feats, labels, mask)
+    labels2 = labels.copy()
+    labels2[off] = (labels2[off] + 1) % C
+    loss1, _ = eng.loss_and_grad(feats, labels2, mask)
+    assert float(loss0) == float(loss1)
+
+
+def test_train_serve_handoff_no_replan_no_recompile(fresh_caches):
+    """``GCNService.adopt`` serves a trainer's session as-is: no plan
+    misses at handoff, and the second identical request batch reuses
+    the compiled batched step (no step-cache miss either)."""
+    from repro.gcn import GCNService, GCNTrainer
+
+    cache = fresh_caches
+    eng, feats, labels, mask = _setup()
+    tr = GCNTrainer(eng, labels, mask)
+    tr.fit(feats, epochs=4)
+
+    svc = GCNService((1, 1))
+    plan_m0 = cache.cache_stats()["plan"]["misses"]
+    svc.adopt("trained", eng)
+    out = svc.infer("trained", feats)
+    assert cache.cache_stats()["plan"]["misses"] == plan_m0, \
+        "handoff must not replan"
+    ref = eng.reference(feats)
+    err = np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9)
+    assert err < 1e-4, err
+    step_m0 = cache.cache_stats()["step"]["misses"]
+    out2 = svc.infer("trained", feats)
+    assert cache.cache_stats()["step"]["misses"] == step_m0, \
+        "second serve must not recompile"
+    np.testing.assert_array_equal(out, out2)
+
+    # adoption validation: mesh mismatch, missing params, dup name
+    eng2, *_ = _setup(dims=(1,))
+    with pytest.raises(ValueError):
+        svc.adopt("other-mesh", eng2)
+    eng3, *_ = _setup()
+    eng3.params = None
+    with pytest.raises(ValueError):
+        svc.adopt("untrained", eng3)
+    with pytest.raises(ValueError):
+        svc.adopt("trained", eng)
+
+
+def test_loss_and_grad_rejects_bad_shapes(fresh_caches):
+    eng, feats, labels, _ = _setup()
+    with pytest.raises(ValueError):
+        eng.loss_and_grad(feats[:100], labels)  # wrong |V|
+    with pytest.raises(ValueError):
+        eng.loss_and_grad(feats, labels[:100])  # wrong label count
+    with pytest.raises(ValueError):
+        eng.loss_and_grad(feats, labels, np.ones(7))  # wrong mask
+
+
+def test_forward_batched_buckets_batch_sizes(fresh_caches):
+    """Satellite: B is padded to the next power of two, so request
+    counts 3 and 4 share one compiled step; results stay exact against
+    per-request forward, and ``stats()`` reports the hit rate."""
+    eng, feats, _, _ = _setup()
+    rng = np.random.default_rng(1)
+    fb3 = rng.normal(size=(3, V, F)).astype(np.float32)
+    out3 = eng.forward_batched(fb3)
+    assert out3.shape == (3, V, C)
+    for b in range(3):
+        np.testing.assert_allclose(out3[b], eng.forward(fb3[b]),
+                                   rtol=1e-5, atol=1e-5)
+    st = eng.stats(feat_dim=F)
+    assert st["batch_bucket_calls"] == 1 and st["batch_bucket_hits"] == 0
+    assert st["batch_buckets"] == [4]  # 3 padded up to 4
+
+    fb4 = rng.normal(size=(4, V, F)).astype(np.float32)
+    eng.forward_batched(fb4)  # same bucket: a hit, no new bucket
+    st = eng.stats(feat_dim=F)
+    assert st["batch_bucket_calls"] == 2 and st["batch_bucket_hits"] == 1
+    assert st["batch_bucket_hit_rate"] == pytest.approx(0.5)
+    assert st["batch_buckets"] == [4]
+
+    eng.forward_batched(fb4[:1])  # B=1 -> its own bucket
+    st = eng.stats(feat_dim=F)
+    assert st["batch_buckets"] == [1, 4]
+
+
+def test_service_reports_bucket_hit_rate(fresh_caches):
+    """Varying per-step batch sizes that share a bucket are served
+    without growing the bucket set; the service aggregates the rate."""
+    from repro.core.graph import erdos
+    from repro.gcn import GCNService
+
+    g = erdos(V, E, seed=11)
+    svc = GCNService((1, 1), max_batch=4)
+    svc.admit("g", _cfg(), g, layer_dims=[F, C])
+    rng = np.random.default_rng(2)
+
+    def submit(n):
+        for _ in range(n):
+            svc.submit("g", rng.normal(size=(V, F)).astype(np.float32))
+
+    submit(3)
+    svc.run()  # one batch of 3 -> bucket 4
+    submit(4)
+    svc.run()  # one batch of 4 -> bucket 4 again: hit
+    st = svc.stats()
+    assert st["batch_bucket_calls"] == 2
+    assert st["batch_bucket_hits"] == 1
+    assert st["batch_bucket_hit_rate"] == pytest.approx(0.5)
+
+
+def test_plan_eviction_releases_live_session(fresh_caches):
+    """Satellite: evicting a plan under byte pressure clears the live
+    session's memoized plan/device arrays/compiled steps (the session
+    no longer pins them), and the session transparently rebuilds
+    through the store on next use — exactly one extra plan miss."""
+    import jax
+
+    from repro.core.graph import erdos
+    from repro.gcn import GCNEngine
+
+    cache = fresh_caches
+    ga, gb = erdos(V, E, seed=21), erdos(V, E, seed=22)
+    ea = GCNEngine.build(_cfg(), ga, (1, 1))
+    ea.init_params(jax.random.PRNGKey(0), [F, C])
+    feats = np.random.default_rng(3).normal(size=(V, F)).astype(np.float32)
+    out_before = ea.forward(feats)
+    assert ea.plan_uploaded()
+    per_plan = cache.cache_stats()["plan"]["bytes"]
+
+    # budget below two plans: B's arrival evicts A AND releases ea
+    cache.set_cache_budget(plan_bytes=int(per_plan * 1.5))
+    _ = GCNEngine.build(_cfg(), gb, (1, 1)).plan
+    assert not ea.plan_cached
+    assert ea._plan is None, "eviction must release the memoized plan"
+    assert not ea.plan_uploaded(), "device arrays must be released"
+    assert ea._layer_step == {} and ea._train_fns == {}
+
+    # next use transparently replans (one miss) and matches exactly
+    misses0 = cache.cache_stats()["plan"]["misses"]
+    out_after = ea.forward(feats)
+    assert cache.cache_stats()["plan"]["misses"] == misses0 + 1
+    np.testing.assert_array_equal(out_before, out_after)
+    # the budget still binds: only the LRU-allowed entries are resident
+    assert cache.cache_stats()["plan"]["entries"] == 1
