@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: smoke test bench bench-json serve train docs-check check
+.PHONY: smoke test bench bench-json serve train train-sampled \
+	docs-check check
 
 # engine example + tier-1 tests, multi-device (8 forced host devices)
 smoke:
@@ -26,7 +27,13 @@ train:
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite train \
 		--json /tmp/BENCH_gcn.json
 
-# machine-readable perf trajectory: refresh BOTH suite records in
+# neighbor-sampled mini-batch training smoke bench (per-batch subgraph
+# plans, batch-plan cache hit rate asserted > 0); scratch path as above
+train-sampled:
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-sampled \
+		--json /tmp/BENCH_gcn.json
+
+# machine-readable perf trajectory: refresh ALL suite records in
 # BENCH_gcn.json in place so PRs can diff serve + train perf against
 # the checked-in baseline
 bench-json:
@@ -34,10 +41,12 @@ bench-json:
 		--json BENCH_gcn.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite train \
 		--json BENCH_gcn.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-sampled \
+		--json BENCH_gcn.json
 
 # execute every fenced ```python block in README.md and docs/*.md
 docs-check:
 	PYTHONPATH=src $(PY) tools/check_docs.py
 
 # the CI-style gate: everything a PR must keep green
-check: smoke serve train docs-check
+check: smoke serve train train-sampled docs-check

@@ -13,10 +13,16 @@ microbenches. Prints ``name,us_per_call,derived`` CSV.
                                                           # training bench,
                                                           # writes the
                                                           # "train" record
+  PYTHONPATH=src python -m benchmarks.run --suite train-sampled
+                                                          # neighbor-sampled
+                                                          # mini-batch bench,
+                                                          # writes the
+                                                          # "train-sampled"
+                                                          # record
 
-``BENCH_gcn.json`` holds one record per suite (serve + train); each
-suite refreshes only its own half, so ``make bench-json`` (both suites)
-rebuilds the full checked-in baseline.
+``BENCH_gcn.json`` holds one record per suite (serve + train +
+train-sampled); each suite refreshes only its own slot, so ``make
+bench-json`` (all suites) rebuilds the full checked-in baseline.
 """
 from __future__ import annotations
 
@@ -128,6 +134,29 @@ def run_train(json_path: str) -> int:
     return r.returncode
 
 
+def run_train_sampled(json_path: str) -> int:
+    """Neighbor-sampled mini-batch training benchmark: bounded-fanout
+    subgraph batches over one RMAT graph on a 2x2 torus (8 forced host
+    devices), each batch on its own cached+padded relay plan — the
+    full-batch plan is never built by training (the driver asserts it),
+    and fixed seed sets must hit the batch-plan cache from epoch 2 on
+    (asserted > 0: the smoke-level tripwire for subgraph-fingerprint
+    regressions). Records epoch wall, batch-plan cache hit rate and
+    the exchange bytes of one sampled step under ``"train-sampled"``."""
+    root = Path(__file__).resolve().parent.parent
+    env = _forced_host_env(root)
+    cmd = [sys.executable, "-m", "repro.launch.gcn_train",
+           "--mesh", "2x2", "--models", "gcn,gin,sage",
+           "--scale", "9", "--epochs", "12", "--sampler",
+           "--batch-size", "128", "--fanout", "8,8",
+           "--json", json_path]
+    print(f"# train-sampled: {' '.join(cmd)}", flush=True)
+    r = subprocess.run(cmd, env=env, cwd=root)
+    print(f"# train-sampled -> {'OK' if r.returncode == 0 else 'FAIL'}",
+          flush=True)
+    return r.returncode
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of module stems")
@@ -135,10 +164,12 @@ def main() -> None:
                     help="'smoke' = engine example + tier-1 tests "
                          "(8 host devices); 'serve' = multi-graph "
                          "GCNService bench; 'train' = distributed GCN "
-                         "training bench (both merge into "
+                         "training bench; 'train-sampled' = neighbor-"
+                         "sampled mini-batch bench (all merge into "
                          "BENCH_gcn.json)")
     ap.add_argument("--json", default="BENCH_gcn.json",
-                    help="perf-record path for --suite serve/train")
+                    help="perf-record path for --suite "
+                         "serve/train/train-sampled")
     args = ap.parse_args()
     if args.suite == "smoke":
         sys.exit(run_smoke())
@@ -146,9 +177,11 @@ def main() -> None:
         sys.exit(run_serve(args.json))
     elif args.suite == "train":
         sys.exit(run_train(args.json))
+    elif args.suite == "train-sampled":
+        sys.exit(run_train_sampled(args.json))
     elif args.suite:
-        sys.exit(f"unknown suite {args.suite!r} "
-                 "(expected 'smoke', 'serve' or 'train')")
+        sys.exit(f"unknown suite {args.suite!r} (expected 'smoke', "
+                 "'serve', 'train' or 'train-sampled')")
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
     print("name,us_per_call,derived")

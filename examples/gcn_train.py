@@ -2,7 +2,9 @@
 on a partitioned RMAT graph over a 2x2 torus, differentiated THROUGH
 the multicast exchange (the VJP is a reversed relay replay), ending in
 the train->serve handoff — the trained session is adopted by a
-``GCNService`` and serves without replanning.
+``GCNService`` and serves without replanning — plus the
+neighbor-sampled mini-batch pipeline (``fit_sampled``) that trains the
+same graph through per-batch subgraph plans.
 
     PYTHONPATH=src python examples/gcn_train.py
 """
@@ -64,6 +66,21 @@ def main():
     assert rel < 1e-4, rel
     print("served trained params through GCNService without replanning "
           f"(oracle rel err {rel:.1e})")
+
+    # scale past the mesh: neighbor-sampled mini-batches train through
+    # per-batch subgraph plans — the full-batch plan is never needed
+    eng_s = GCNEngine.build(cfg, graph, (2, 2))
+    trainer_s = GCNTrainer(eng_s, labels, mask)
+    rep = trainer_s.fit_sampled(feats, epochs=8, batch_size=128,
+                                fanouts=(8, 8), layer_dims=[F, 16, C])
+    assert rep.loss_last < rep.loss_first
+    assert rep.batch_plan_hit_rate > 0
+    print(f"sampled: loss {rep.loss_first:.4f} -> {rep.loss_last:.4f} "
+          f"({rep.batches_per_epoch} batches/epoch, vertex buckets "
+          f"{rep.vertex_buckets}, batch-plan hit rate "
+          f"{rep.batch_plan_hit_rate:.2f}, "
+          f"{rep.exchange_bytes_per_step / 2**10:.1f} KiB exchanged per "
+          f"sampled step)")
 
 
 if __name__ == "__main__":

@@ -41,13 +41,18 @@ class Graph:
     def out_degrees(self) -> np.ndarray:
         return np.bincount(self.src, minlength=self.num_vertices).astype(np.int32)
 
-    def csr_in(self):
-        """CSR over destinations: (indptr, src_indices) sorted by dst."""
+    def csr_in(self, return_order: bool = False):
+        """CSR over destinations: (indptr, src_indices) sorted by dst.
+        ``return_order=True`` also returns the stable edge permutation,
+        so per-edge side arrays (e.g. prepared weights) can be carried
+        into the same order (see ``repro.core.sampling``)."""
         order = np.argsort(self.dst, kind="stable")
         dsts = self.dst[order]
         indptr = np.zeros(self.num_vertices + 1, np.int64)
         np.add.at(indptr, dsts + 1, 1)
         np.cumsum(indptr, out=indptr)
+        if return_order:
+            return indptr, self.src[order], order
         return indptr, self.src[order]
 
     def with_self_loops(self) -> "Graph":

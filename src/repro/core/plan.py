@@ -214,9 +214,11 @@ def build_plan(cfg: GCNConfig, graph: Graph, mesh: TorusMesh,
             key = s_.astype(np.int64) * N + dn_
             gorder = np.argsort(key, kind="stable")
             ks = key[gorder]
-            # iterate groups of identical (src, dst_node)
+            # iterate groups of identical (src, dst_node); an edgeless
+            # round (padded sampled subgraphs) has no groups at all
             grp_bounds = np.flatnonzero(
-                np.concatenate([[True], ks[1:] != ks[:-1], [True]]))
+                np.concatenate([[True], ks[1:] != ks[:-1], [True]])) \
+                if ks.size else np.zeros(1, np.int64)
             # per (src vertex): collect (dst node -> [(slot, w)])
             per_vertex: dict[int, dict[int, list[tuple[int, float]]]] = {}
             for gi in range(grp_bounds.size - 1):
@@ -447,3 +449,88 @@ def build_plan(cfg: GCNConfig, graph: Graph, mesh: TorusMesh,
     return CommPlan(mesh, part, model, R, orig_rows, orig_valid, phases,
                     max(replica_rows, 1), repl_lc_src, repl_lc_dst,
                     repl_lc_valid, edge_repl, edge_slot, edge_w, stats)
+
+
+# ---------------------------------------------------------------------------
+# Capacity bucketing (sampled mini-batch plans)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_pow2(n: int) -> int:
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _pad_last(a: np.ndarray, length: int, fill=0) -> np.ndarray:
+    if a.shape[-1] >= length:
+        return a
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, length - a.shape[-1])]
+    return np.pad(a, pad, constant_values=fill)
+
+
+def pad_plan_pow2(plan: CommPlan) -> CommPlan:
+    """Round every content-derived capacity of ``plan`` up to a power of
+    two: buffer capacities, per-hop relay prefix lengths, replica rows,
+    local-copy widths and the aggregation edge-slot count.
+
+    The padding is pure dead weight to the executor — padded origination
+    slots are invalid (zero contribution), padded relay rows are never
+    deposited (masks stay False), padded edges carry weight 0 — so the
+    replayed result is bit-identical to the unpadded plan. What it buys
+    is *shape- and statics-stability*: two plans padded to the same
+    buckets produce equal :class:`~repro.core.message_passing.
+    ExchangeStatics` (the static values baked into the jitted executor)
+    whenever their bucketed capacities agree, which is what lets the
+    sampled mini-batch trainer reuse ONE compiled train step across
+    different same-sized subgraphs instead of recompiling per batch
+    (mirroring ``forward_batched``'s power-of-two request bucketing).
+
+    Only unidirectional plans are supported (the sampled path never
+    builds bidir plans); partition/round structure is untouched — bucket
+    the vertex count BEFORE planning to align those.
+    """
+    if any(ph.hop_len_rev for ph in plan.phases):
+        raise ValueError("pad_plan_pow2 supports unidirectional plans only")
+    R, N = plan.num_rounds, plan.num_nodes
+    phases: list[PhasePlan] = []
+    for ph in plan.phases:
+        cap = _ceil_pow2(ph.capacity)
+        # pad hop prefixes, preserving the relay invariants: each L_h is
+        # a power of two, <= the buffer it slices (cap, then the
+        # previous hop's length), and once zero stays zero
+        hop_len, prev = [], cap
+        for L in ph.hop_len:
+            L = min(_ceil_pow2(L), prev) if L else 0
+            hop_len.append(L)
+            prev = L if L else prev
+        Lmax = max(max(hop_len, default=0), 1)
+        CL = _ceil_pow2(ph.lc_src.shape[-1])
+        padded = PhasePlan(
+            ph.dim_size, cap, hop_len,
+            _pad_last(ph.dep, Lmax, False), _pad_last(ph.dep_slot, Lmax),
+            _pad_last(ph.lc_src, CL), _pad_last(ph.lc_dst, CL),
+            _pad_last(ph.lc_valid, CL, False),
+            cap_fwd=cap)
+        if ph.dup is not None:  # phases k >= 1 carry (possibly all-
+            ds, dd, dv = ph.dup  # invalid) direction-split copy tables
+            CD = _ceil_pow2(ds.shape[-1])
+            padded.dup = (_pad_last(ds, CD), _pad_last(dd, CD),
+                          _pad_last(dv, CD, False))
+        phases.append(padded)
+    C0 = phases[0].capacity
+    replica_rows = _ceil_pow2(plan.replica_rows)
+    CRL = _ceil_pow2(plan.repl_lc_src.shape[-1])
+    E = _ceil_pow2(plan.edge_repl.shape[-1])
+    stats = dict(plan.stats)
+    stats["replica_rows"] = replica_rows
+    stats["agg_edge_slots_padded"] = R * N * E
+    stats["executor_feat_slots"] = sum(
+        sum(ph.hop_len) * N * R for ph in phases)
+    return CommPlan(
+        plan.mesh, plan.part, plan.model, R,
+        _pad_last(plan.orig_rows, C0), _pad_last(plan.orig_valid, C0, False),
+        phases, replica_rows,
+        _pad_last(plan.repl_lc_src, CRL), _pad_last(plan.repl_lc_dst, CRL),
+        _pad_last(plan.repl_lc_valid, CRL, False),
+        _pad_last(plan.edge_repl, E), _pad_last(plan.edge_slot, E),
+        _pad_last(plan.edge_w, E, 0.0), stats)

@@ -1,0 +1,222 @@
+"""Seeded layer-wise neighbor sampling for mini-batch GCN training.
+
+The paper's whole premise is that full graphs outgrow a single node's
+memory; the repo-level mirror of that axis is the trainer's working set.
+This module bounds it GraphSAGE-style: per mini-batch of *seed* vertices
+(the vertices whose loss terms the batch optimizes), expand the in-
+neighborhood layer by layer with a bounded fanout over ``Graph.csr_in``,
+then take the **vertex-induced** subgraph of the visited set. MG-GCN
+(Balin et al.) and Demirci et al. plan communication per mini-batch in
+exactly this regime; here each sampled subgraph gets its own (cached,
+padded) relay plan on the same torus — see ``repro.gcn.train``.
+
+Design contracts (pinned by ``tests/test_sampling.py``):
+
+  * **bounded fanout** — at each layer every frontier vertex samples at
+    most ``fanout`` of its in-neighbors (without replacement; ``-1`` =
+    all of them);
+  * **stable local<->global map** — ``SampledBatch.nodes`` is the sorted
+    global id array; local id ``i`` IS ``nodes[i]``, so the same visited
+    set always produces the same subgraph (and the same fingerprint,
+    which is what makes the batch-plan cache hit on recurring seed
+    sets);
+  * **vertex-induced edges** — the subgraph keeps every parent edge with
+    both endpoints in the visited set, so subgraph edges are a subset of
+    the parent's under the map, and with full fanout the subgraph is
+    exactly the closed k-hop in-neighborhood of the seeds (k =
+    ``len(fanouts)``) — the guarantee the sampled-vs-full-batch parity
+    tests lean on;
+  * **per-seed-set determinism** — the sample drawn for a seed set
+    depends only on ``(sampler seed, seed set)``, not on how many
+    batches were drawn before it, so a seed set recurring across epochs
+    reproduces its subgraph bit-for-bit (and therefore its cached
+    plan).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+__all__ = ["NeighborSampler", "SampledBatch", "csr_in_with_values",
+           "induce_in_edges"]
+
+
+def csr_in_with_values(graph: Graph, values: np.ndarray | None = None):
+    """:meth:`Graph.csr_in` plus an optional per-edge ``values`` array
+    (e.g. the prepared model's edge weights) permuted into the same
+    order, so induced subgraphs can carry parent-derived weights."""
+    indptr, src, order = graph.csr_in(return_order=True)
+    vals = None if values is None else np.asarray(values)[order]
+    return indptr, src, vals
+
+
+def induce_in_edges(indptr: np.ndarray, src: np.ndarray,
+                    values: np.ndarray | None, nodes: np.ndarray,
+                    num_vertices: int | None = None, *, name: str = "sub"):
+    """Vertex-induced subgraph over ``nodes`` (sorted global ids) from a
+    destination-CSR view of the parent.
+
+    Keeps every parent edge whose src AND dst are in ``nodes`` and
+    relabels both endpoints to local ids (``local i == nodes[i]``).
+    ``num_vertices`` may exceed ``len(nodes)`` to leave padding vertices
+    (no edges) — the power-of-two bucketing the batch planner uses.
+    Returns ``(Graph, values_sub)`` (``values_sub`` is None when
+    ``values`` is)."""
+    nodes = np.asarray(nodes, np.int64)
+    S = int(nodes.size)
+    Vout = S if num_vertices is None else int(num_vertices)
+    if Vout < S:
+        raise ValueError(f"num_vertices {Vout} < |nodes| {S}")
+    counts = (indptr[nodes + 1] - indptr[nodes]).astype(np.int64)
+    if counts.sum() == 0:
+        empty = np.zeros(0, np.int32)
+        return (Graph(Vout, empty, empty.copy(), name=name),
+                None if values is None else np.zeros(0, values.dtype))
+    # gather all in-edges of the node set, then membership-filter sources
+    idx = np.concatenate([np.arange(indptr[v], indptr[v + 1])
+                          for v in nodes])
+    dst_local = np.repeat(np.arange(S, dtype=np.int64), counts)
+    src_glob = src[idx].astype(np.int64)
+    pos = np.searchsorted(nodes, src_glob)
+    pos_c = np.minimum(pos, S - 1)
+    keep = nodes[pos_c] == src_glob
+    sub = Graph(Vout, pos_c[keep].astype(np.int32),
+                dst_local[keep].astype(np.int32), name=name)
+    vals = None if values is None else values[idx[keep]]
+    return sub, vals
+
+
+@dataclass
+class SampledBatch:
+    """One sampled mini-batch: seeds, the visited node set (sorted —
+    local id ``i`` <-> global id ``nodes[i]``), the per-layer visited
+    frontiers (``layers[0]`` is the seed set; ``layers[l]`` the set
+    after ``l`` expansions — cumulative, for the fanout/coverage
+    property tests), and the vertex-induced subgraph in local ids."""
+
+    seeds: np.ndarray  # (B,) int64, sorted unique global ids
+    nodes: np.ndarray  # (S,) int64, sorted unique global ids
+    layers: tuple  # tuple of (Si,) int64 arrays, cumulative per layer
+    subgraph: Graph | None  # vertex-induced, local ids (None if skipped)
+    parent_vertices: int
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.nodes.size)
+
+    def local_of(self, global_ids) -> np.ndarray:
+        """Global ids (must be in ``nodes``) -> local subgraph ids."""
+        g = np.asarray(global_ids, np.int64)
+        pos = np.searchsorted(self.nodes, g)
+        if pos.size and (np.any(pos >= self.nodes.size)
+                         or np.any(self.nodes[pos] != g)):
+            raise ValueError("global id not in the sampled node set")
+        return pos
+
+    def fingerprint(self) -> str:
+        """Content identity of the batch: parent size + node set + seed
+        set. Two batches with equal fingerprints induce the same
+        subgraph AND the same loss mask, so this is the batch-plan
+        cache key (``repro.gcn.cache.get_batch``)."""
+        h = hashlib.sha1()
+        h.update(np.int64(self.parent_vertices).tobytes())
+        h.update(np.ascontiguousarray(self.nodes).tobytes())
+        h.update(np.ascontiguousarray(self.seeds).tobytes())
+        return h.hexdigest()
+
+
+class NeighborSampler:
+    """Layer-wise bounded-fanout in-neighbor sampler over one parent
+    graph.
+
+    ``fanouts`` has one entry per GCN layer (applied seed-set outward);
+    entry ``-1`` (or ``None``) means take the full in-neighborhood at
+    that layer. Sampling is without replacement and **per-seed-set
+    deterministic**: the rng for one batch is derived from the sampler
+    seed and the seed-set content, so identical seed sets always sample
+    identical subgraphs regardless of draw order.
+
+    ``epoch_batches`` partitions a train-vertex array into seed sets of
+    ``batch_size`` (deterministic shuffle per ``(seed, epoch)``).
+    """
+
+    def __init__(self, graph: Graph, fanouts, *, seed: int = 0):
+        self.graph = graph
+        self.fanouts = tuple(-1 if f is None else int(f) for f in fanouts)
+        if any(f < -1 for f in self.fanouts):
+            raise ValueError(f"fanouts must be >= 0 or -1 (full): "
+                             f"{self.fanouts}")
+        self.seed = int(seed)
+        self.indptr, self.src = graph.csr_in()
+
+    # ---------------- one batch ----------------
+
+    def _batch_rng(self, seeds: np.ndarray) -> np.random.Generator:
+        h = hashlib.sha1(np.ascontiguousarray(seeds).tobytes()).digest()
+        words = np.frombuffer(h[:16], np.uint32)
+        return np.random.default_rng([self.seed, *map(int, words)])
+
+    def sample_in_neighbors(self, vertices, fanout: int,
+                            rng: np.random.Generator) -> np.ndarray:
+        """At most ``fanout`` in-neighbors per vertex (without
+        replacement; ``-1`` = all), unioned over ``vertices``."""
+        picks = []
+        for v in np.asarray(vertices, np.int64):
+            lo, hi = int(self.indptr[v]), int(self.indptr[v + 1])
+            nbrs = self.src[lo:hi]
+            if 0 <= fanout < nbrs.size:
+                nbrs = rng.choice(nbrs, size=fanout, replace=False)
+            picks.append(nbrs)
+        if not picks:
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate(picks).astype(np.int64))
+
+    def sample(self, seeds, *, induce_subgraph: bool = True) -> SampledBatch:
+        """Sample one mini-batch for ``seeds`` (global vertex ids).
+
+        ``induce_subgraph=False`` skips materializing the raw induced
+        edge list (``SampledBatch.subgraph`` is None) — the training
+        path only needs the node set (its execution subgraph is induced
+        from the parent *prepared* graph so edge weights carry parent
+        degrees; see ``repro.gcn.train``)."""
+        seeds = np.unique(np.asarray(seeds, np.int64))
+        if seeds.size == 0:
+            raise ValueError("empty seed set")
+        V = self.graph.num_vertices
+        if seeds.min() < 0 or seeds.max() >= V:
+            raise ValueError(f"seed ids must be in [0, {V})")
+        rng = self._batch_rng(seeds)
+        nodes = seeds
+        layers = [seeds]
+        for fanout in self.fanouts:
+            sampled = self.sample_in_neighbors(nodes, fanout, rng)
+            nodes = np.union1d(nodes, sampled)
+            layers.append(nodes)
+        sub = None
+        if induce_subgraph:
+            sub, _ = induce_in_edges(self.indptr, self.src, None, nodes,
+                                     name=f"{self.graph.name}#batch")
+        return SampledBatch(seeds=seeds, nodes=nodes, layers=tuple(layers),
+                            subgraph=sub, parent_vertices=V)
+
+    # ---------------- epoch iteration ----------------
+
+    def epoch_batches(self, train_nodes, batch_size: int, *,
+                      epoch: int = 0) -> list[np.ndarray]:
+        """Partition ``train_nodes`` into seed sets of ``batch_size``
+        (last one may be smaller), shuffled deterministically per
+        ``(sampler seed, epoch)``. ``epoch=0`` every epoch keeps the
+        SAME seed sets across epochs — what makes the batch-plan cache
+        hit from epoch 2 on (``GCNTrainer.fit_sampled`` default)."""
+        train_nodes = np.unique(np.asarray(train_nodes, np.int64))
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        rng = np.random.default_rng([self.seed, 0x5EED, int(epoch)])
+        order = rng.permutation(train_nodes.size)
+        shuffled = train_nodes[order]
+        return [shuffled[i:i + batch_size]
+                for i in range(0, shuffled.size, batch_size)]

@@ -33,19 +33,23 @@ from repro.gcn.registry import (
 )
 from repro.gcn.service import GCNService, ServeRequest
 from repro.gcn.train import (
+    BatchSession,
     FitReport,
     GCNTrainer,
+    SampledFitReport,
     masked_cross_entropy,
     reference_loss_and_grad,
 )
 
 __all__ = [
+    "BatchSession",
     "FitReport",
     "GCNEngine",
     "GCNService",
     "GCNTrainer",
     "ModelSpec",
     "PlanKey",
+    "SampledFitReport",
     "ServeRequest",
     "cache_stats",
     "clear_plan_cache",

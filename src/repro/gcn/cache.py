@@ -11,7 +11,7 @@ This is the middle layer of the session/cache/service split:
     uploads;
   * ``repro.gcn.service`` schedules requests across sessions on top.
 
-Four coherent cache layers, all keyed off :class:`PlanKey`:
+Five cache layers, all keyed off :class:`PlanKey`:
 
   ``plan``   ``PlanKey.plan_identity()`` -> ``CommPlan``. Byte-bounded
              LRU: the host-side relay schedules of many admitted graphs
@@ -30,8 +30,15 @@ Four coherent cache layers, all keyed off :class:`PlanKey`:
              graph, or on different graphs that happen to produce the
              same static schedule, compile once. Count-bounded LRU
              (compiled executables have no portable byte size).
+  ``batch``  subgraph-fingerprinted ``PlanKey`` -> sampled mini-batch
+             session (``repro.gcn.train.fit_sampled``): padded batch
+             plan + local<->global node map + sub-engine. Byte-bounded
+             LRU with its OWN budget, deliberately separate from
+             ``plan`` — sampled training exists to run under a plan
+             budget the full-batch plan would not fit, so batch plans
+             must never compete with full plans for one budget.
 
-Coherence contract: the three derived layers can never outlive the plan
+Coherence contract: the three plan-derived layers can never outlive the plan
 they encode. Evicting or clearing a plan drops every ELL layout and
 compiled step built from it; :func:`invalidate_model` and
 :func:`clear_all` sweep all four layers in one call (this is the home of
@@ -66,6 +73,7 @@ __all__ = [
     "PlanKey",
     "cache_stats",
     "clear_all",
+    "get_batch",
     "graph_fingerprint",
     "invalidate_model",
     "register_session",
@@ -291,12 +299,22 @@ _ELL = _LruStore("ell", _LOCK, budget_bytes=256 << 20)
 _PREP = _LruStore("prep", _LOCK, budget_bytes=256 << 20)
 _STEPS = _LruStore("step", _LOCK, max_entries=64,
                    on_evict=_on_step_evict)
+# sampled mini-batch sessions (repro.gcn.train.fit_sampled): subgraph
+# fingerprint -> batch session (padded plan + node map + sub-engine).
+# Deliberately SEPARATE from the plan store: the whole point of sampled
+# training is to run under a plan budget the full-batch plan would not
+# fit, so batch plans must not compete with (or be evicted by) full
+# plans under one budget knob. Entries are self-contained — eviction
+# just drops the session object (nothing derived lives elsewhere keyed
+# by it except shared compiled steps, which expire via the step LRU).
+_BATCH = _LruStore("batch", _LOCK, budget_bytes=256 << 20)
 
 
 def set_cache_budget(*, plan_bytes: int | None = ...,
                      ell_bytes: int | None = ...,
                      prep_bytes: int | None = ...,
-                     step_entries: int | None = ...) -> None:
+                     step_entries: int | None = ...,
+                     batch_bytes: int | None = ...) -> None:
     """Reconfigure the byte budgets (``None`` = unbounded; omitted
     fields keep their current value). Shrinks immediately."""
     with _LOCK:
@@ -308,7 +326,9 @@ def set_cache_budget(*, plan_bytes: int | None = ...,
             _PREP.budget_bytes = prep_bytes
         if step_entries is not ...:
             _STEPS.max_entries = step_entries
-        for store in (_PLANS, _ELL, _PREP, _STEPS):
+        if batch_bytes is not ...:
+            _BATCH.budget_bytes = batch_bytes
+        for store in (_PLANS, _ELL, _PREP, _STEPS, _BATCH):
             store._shrink()
 
 
@@ -385,6 +405,20 @@ def step_cached(plan_key: PlanKey, exec_fp: tuple) -> bool:
         return _STEPS.peek(exec_fp)
 
 
+def get_batch(key, build, nbytes=None):
+    """The sampled mini-batch layer: subgraph-fingerprint key -> batch
+    session (padded per-batch plan + local<->global node map + the
+    sub-engine holding its device arrays). Byte-bounded LRU
+    (``set_cache_budget(batch_bytes=...)``); a recurring seed set is a
+    pure hit — no re-sample, no re-plan, no re-upload."""
+    return _BATCH.get(key, build, nbytes=nbytes)
+
+
+def batch_cached(key) -> bool:
+    with _LOCK:
+        return _BATCH.peek(key)
+
+
 # ---------------------------------------------------------------------------
 # Coherent clearing / reporting
 # ---------------------------------------------------------------------------
@@ -396,7 +430,7 @@ def clear_all() -> None:
     sessions are released too (same hook as budget eviction), so the
     memory actually returns; they transparently rebuild on next use."""
     with _LOCK:
-        for store in (_PLANS, _ELL, _PREP, _STEPS):
+        for store in (_PLANS, _ELL, _PREP, _STEPS, _BATCH):
             store.clear()
         _STEP_DEPS.clear()
         for sessions in list(_SESSIONS.values()):
@@ -415,6 +449,7 @@ def invalidate_model(name: str) -> None:
         _PREP.drop(lambda k: k[1] == name)
         _PLANS.drop(lambda k: k.model == name)
         _ELL.drop(lambda k: k.model == name)
+        _BATCH.drop(lambda k: k.model == name)
         doomed = set()
         for ident in [k for k in _STEP_DEPS if k.model == name]:
             doomed |= _STEP_DEPS.pop(ident)
@@ -426,7 +461,8 @@ def cache_stats() -> dict:
     evictions}`` plus the legacy flat counters (``hits``/``misses``
     track the plan layer, as they always have)."""
     with _LOCK:
-        out = {s.name: s.stats() for s in (_PLANS, _ELL, _PREP, _STEPS)}
+        out = {s.name: s.stats()
+               for s in (_PLANS, _ELL, _PREP, _STEPS, _BATCH)}
         out.update(hits=_PLANS.hits, misses=_PLANS.misses,
                    entries=len(_PLANS._d), ell_entries=len(_ELL._d))
         return out

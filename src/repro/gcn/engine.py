@@ -177,6 +177,45 @@ class GCNEngine:
         return cls(cfg, graph, dims, names, spec, part,
                    bidir=bidir, donate=donate, mesh_jax=mesh)
 
+    @classmethod
+    def from_plan(cls, cfg: GCNConfig, plan: CommPlan,
+                  mesh_dims: Sequence[int], *, graph_fp: str,
+                  axis_names: Sequence[str] | None = None,
+                  name: str = "subplan") -> "GCNEngine":
+        """Session over an EXTERNALLY built plan — the sampled
+        mini-batch path (``repro.gcn.train.fit_sampled``).
+
+        The plan store is bypassed entirely: the caller owns the plan's
+        lifetime (batch plans live in the separate byte-bounded
+        ``batch`` layer of :mod:`repro.gcn.cache`), so this session is
+        never registered for plan eviction and ``set_cache_budget(plan_
+        bytes=...)`` cannot touch it. ``graph_fp`` is the caller's
+        content identity for the plan's graph (e.g. a
+        ``SampledBatch.fingerprint()``) — it keys the ELL-layout and
+        compiled-step stores, so equal fingerprints share and distinct
+        ones never collide. The session carries a placeholder edgeless
+        graph of ``plan.part.num_vertices`` vertices: execution paths
+        (``forward`` / ``loss_and_grad`` / compiled steps / ELL layout
+        / stats — all plan-derived) are fully functional, but
+        graph-derived paths (``prepared_graph``, ``reference``) see no
+        edges — aggregation structure comes from the plan, which
+        already encodes the prepared edges."""
+        dims = tuple(int(d) for d in mesh_dims)
+        if tuple(plan.mesh.dims) != dims:
+            raise ValueError(
+                f"plan mesh {tuple(plan.mesh.dims)} != mesh_dims {dims}")
+        V = plan.part.num_vertices
+        placeholder = Graph(V, np.zeros(0, np.int32),
+                            np.zeros(0, np.int32), name=name)
+        eng = cls.build(cfg, placeholder, dims, axis_names=axis_names)
+        if eng.part != plan.part:
+            raise ValueError(
+                f"plan partition {plan.part} disagrees with the one "
+                f"cfg/mesh imply ({eng.part})")
+        eng._graph_fp = str(graph_fp)
+        eng._plan = plan
+        return eng
+
     def with_config(self, **overrides) -> "GCNEngine":
         """Sibling engine on the same graph/mesh with cfg fields replaced
         (e.g. ``message_passing="oppr"``). Shares the plan cache, so

@@ -20,11 +20,22 @@ Layering (mirrors the serving split):
   * ``GCNEngine.loss_and_grad`` (session layer, defined here as
     :func:`loss_and_grad`) — one jitted ``value_and_grad`` through the
     exchange, cached in the shared compiled-step store;
-  * :class:`GCNTrainer` — owns sharded labels/mask, the AdamW state
-    (``repro.train.optimizer``, reused from the LM substrate), and the
-    epoch loop; ``fit`` returns a :class:`FitReport` with per-epoch
-    wall times and the MEASURED exchange bytes per step (forward +
-    backward ppermute payload, counted from the traced jaxpr);
+  * :class:`GCNTrainer` — owns labels/mask (sharded lazily: the
+    sampled path must never build the full-batch plan), the AdamW
+    state (``repro.train.optimizer``, reused from the LM substrate),
+    and the epoch loop; ``fit`` returns a :class:`FitReport` with
+    per-epoch wall times and the MEASURED exchange bytes per step
+    (forward + backward ppermute payload, counted from the traced
+    jaxpr);
+  * ``GCNTrainer.fit_sampled`` — neighbor-sampled mini-batch training
+    (``repro.core.sampling``): per seed set, a bounded-fanout sampled
+    subgraph gets its OWN relay plan (``build_plan`` on the induced
+    subgraph, capacities power-of-two padded via ``pad_plan_pow2`` so
+    same-bucket batches share one jitted step), cached by subgraph
+    fingerprint in the byte-bounded ``batch`` layer of
+    ``repro.gcn.cache`` — the step that trains graphs whose full-batch
+    plan would not fit the budget (cf. MG-GCN / Demirci et al., whose
+    scale hinges on exactly this bounded per-batch working set);
   * ``GCNService.adopt`` — the train->serve handoff: the trainer's
     session object is admitted as-is, so the plan, ELL layouts, device
     arrays and compiled steps it already holds serve without
@@ -38,7 +49,9 @@ broadcast, inserted by jit/GSPMD when it partitions the
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -48,10 +61,14 @@ import numpy as np
 
 from repro.core import gcn_models as gm
 from repro.core import message_passing as mp
+from repro.core import sampling
+from repro.core.partition import make_partition
+from repro.core.plan import build_plan, pad_plan_pow2
+from repro.gcn import cache
 from repro.train import optimizer as optlib
 
-__all__ = ["FitReport", "GCNTrainer", "masked_cross_entropy",
-           "reference_loss_and_grad"]
+__all__ = ["BatchSession", "FitReport", "GCNTrainer", "SampledFitReport",
+           "masked_cross_entropy", "reference_loss_and_grad"]
 
 
 # ---------------------------------------------------------------------------
@@ -107,10 +124,26 @@ def build_loss_grad(engine, impl: str):
                    vg(params, pdev, x, labels, mask))
 
 
+def _donation_argnums() -> tuple[int, ...]:
+    """Argnums of the train step's donated buffers: params and opt
+    state, both replaced wholesale every step, so XLA may update them
+    in place (halving peak params+moments residency — the open ROADMAP
+    item from PR 4). Donation changes buffer aliasing only, never
+    numerics (the bit-identical double-``fit`` test pins that), but it
+    is only implemented on gpu/tpu — cpu ignores the flag with a
+    warning per compile, so resolve per backend instead of spamming the
+    CI logs."""
+    return (1, 2) if jax.default_backend() in ("gpu", "tpu") else ()
+
+
 def build_train_step(engine, impl: str, opt_cfg: optlib.AdamWConfig):
-    """One full-batch training step: loss + grads through the exchange,
-    then the AdamW update (``repro.train.optimizer``) — all inside one
-    jit, so the optimizer math is fused with the backward pass."""
+    """One training step: loss + grads through the exchange, then the
+    AdamW update (``repro.train.optimizer``) — all inside one jit, so
+    the optimizer math is fused with the backward pass. Params and opt
+    state are DONATED on backends that support it (see
+    :func:`_donation_argnums`): callers must treat the passed-in trees
+    as consumed and keep only the returned ones (the ``fit`` /
+    ``fit_sampled`` loops already do)."""
     fwd = forward_layers(engine, impl)
 
     def step(pdev, params, opt_state, x, labels, mask):
@@ -122,7 +155,28 @@ def build_train_step(engine, impl: str, opt_cfg: optlib.AdamWConfig):
             opt_cfg, params, grads, opt_state)
         return params, opt_state, {"loss": loss, **metrics}
 
-    return jax.jit(step)
+    return jax.jit(step, donate_argnums=_donation_argnums())
+
+
+def _train_exchange_bytes(engine, params, impl: str) -> int:
+    """ppermute payload bytes of one training step on ``engine``'s plan
+    (forward relay replays + their transposed backward replays),
+    counted from the traced ``value_and_grad`` jaxpr with abstract
+    inputs — works identically for full-batch sessions and sampled
+    batch sessions."""
+    from repro.gcn import engine as _engine
+
+    pdev = engine.plan_arrays(impl)
+    Vp = engine.plan.part.vertices_per_node()
+    F = engine._default_feat_dim(params)
+    x_abs = jax.ShapeDtypeStruct(engine.dims + (Vp, F), jnp.float32)
+    lb_abs = jax.ShapeDtypeStruct(engine.dims + (Vp,), jnp.int32)
+    mk_abs = jax.ShapeDtypeStruct(engine.dims + (Vp,), jnp.float32)
+    fn = build_loss_grad(engine, impl)
+    jaxpr = jax.make_jaxpr(
+        lambda pd, p, xx, lb, mk: fn(pd, p, xx, lb, mk))(
+        pdev, params, x_abs, lb_abs, mk_abs)
+    return _engine._ppermute_payload_bytes(jaxpr.jaxpr, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +235,48 @@ class FitReport:
         return self.history[-1]["loss"] if self.history else float("nan")
 
 
+@dataclass
+class SampledFitReport(FitReport):
+    """:class:`FitReport` plus the sampled-pipeline accounting the
+    ``--suite train-sampled`` bench records: batch-plan cache traffic
+    (recurring seed sets must HIT — a regression in subgraph
+    fingerprinting shows up here), the power-of-two vertex buckets the
+    batches landed in, and how many train-step compiles the whole run
+    actually paid (bucketing exists to keep this near the bucket
+    count, not the batch count)."""
+
+    batch_size: int = 0
+    fanouts: tuple = ()
+    batches_per_epoch: int = 0
+    batch_plan_hits: int = 0
+    batch_plan_misses: int = 0
+    vertex_buckets: list = field(default_factory=list)
+    train_step_compiles: int = 0
+
+    @property
+    def batch_plan_hit_rate(self) -> float:
+        calls = self.batch_plan_hits + self.batch_plan_misses
+        return self.batch_plan_hits / calls if calls else 0.0
+
+
+@dataclass
+class BatchSession:
+    """One cached sampled-batch execution context: the (sorted) global
+    node set, the seed set its loss covers, and a
+    :class:`~repro.gcn.engine.GCNEngine` session over the batch's
+    padded relay plan (built once per subgraph fingerprint, held in the
+    byte-bounded ``batch`` cache layer together with its device
+    uploads and shared compiled steps)."""
+
+    nodes: np.ndarray  # (S,) int64 sorted global ids; local i == nodes[i]
+    seeds: np.ndarray  # (B,) int64 sorted global ids, subset of nodes
+    engine: object  # GCNEngine.from_plan session (padded Vpad vertices)
+
+    @property
+    def num_padded_vertices(self) -> int:
+        return self.engine.graph.num_vertices
+
+
 class GCNTrainer:
     """Full-batch node-classification trainer over one
     :class:`~repro.gcn.engine.GCNEngine` session.
@@ -206,11 +302,30 @@ class GCNTrainer:
                  agg_impl: str | None = None):
         self.engine = engine
         self.impl = engine._impl(agg_impl)
+        V = engine.graph.num_vertices
         self.labels = np.asarray(labels)
+        if self.labels.shape != (V,):
+            raise ValueError(
+                f"labels must be (V={V},); got {self.labels.shape}")
         self.train_mask = (None if train_mask is None
                            else np.asarray(train_mask, np.float32))
-        self.labels_sh, self.mask_sh = shard_training_inputs(
-            engine, self.labels, self.train_mask)
+        if self.train_mask is not None and self.train_mask.shape != (V,):
+            raise ValueError(
+                f"mask must be (V={V},); got {self.train_mask.shape}")
+        # full-batch label/mask sharding is LAZY: it needs the parent
+        # plan, and a purely sampled trainer must never build the
+        # full-batch plan (that plan not fitting is the reason to
+        # sample — see fit_sampled)
+        self._labels_sh = None
+        self._mask_sh = None
+        # sampled-pipeline memos: one NeighborSampler per (fanouts,
+        # seed) and the destination-CSR view of the PARENT prepared
+        # graph (subgraph edge weights are induced from it, so degree
+        # normalization uses parent degrees — full-fanout batches stay
+        # exactly parity with full-batch training)
+        self._samplers: dict[tuple, sampling.NeighborSampler] = {}
+        self._batch_memo: "OrderedDict" = OrderedDict()
+        self._prep_csr = None
         # full-batch GCN defaults: no warmup (one graph, not a stream),
         # no weight decay (2-layer nets underfit already), flat-ish lr
         self.opt = opt if opt is not None else optlib.AdamWConfig(
@@ -220,6 +335,20 @@ class GCNTrainer:
         # exchange-byte measurement memo: the trace is a full re-trace
         # of the value_and_grad network, so pay it once per feat width
         self._exch_bytes: dict[tuple, int] = {}
+
+    @property
+    def labels_sh(self):
+        """Device-layout ``(*dims, Vp)`` labels on the PARENT plan's
+        partition (lazy — touching this builds the full-batch plan)."""
+        if self._labels_sh is None:
+            self._labels_sh, self._mask_sh = shard_training_inputs(
+                self.engine, self.labels, self.train_mask)
+        return self._labels_sh
+
+    @property
+    def mask_sh(self):
+        _ = self.labels_sh
+        return self._mask_sh
 
     # ---------------- the epoch loop ----------------
 
@@ -276,6 +405,235 @@ class GCNTrainer:
             exchange_bytes_per_step=self.measured_exchange_bytes(params),
             params=params)
 
+    # ---------------- neighbor-sampled mini-batch training ----------------
+
+    def _sampler(self, fanouts, seed: int) -> sampling.NeighborSampler:
+        key = (tuple(fanouts), int(seed))
+        if key not in self._samplers:
+            self._samplers[key] = sampling.NeighborSampler(
+                self.engine.graph, fanouts, seed=seed)
+        return self._samplers[key]
+
+    def _prepared_csr(self):
+        """Destination-CSR of the parent PREPARED graph (self loops +
+        model edge weights), built once per trainer: batch subgraphs
+        are induced from it, so every induced edge carries the weight
+        the parent normalization gave it."""
+        if self._prep_csr is None:
+            g2, w = self.engine.prepared_graph()
+            self._prep_csr = sampling.csr_in_with_values(g2, w)
+        return self._prep_csr
+
+    def _sampled_batch(self, sampler: sampling.NeighborSampler,
+                       seeds) -> sampling.SampledBatch:
+        """Memoized ``sampler.sample`` for the training loop: the
+        sample is per-seed-set deterministic, so with fixed seed sets
+        (the default) every epoch would otherwise redo the whole
+        host-side neighbor expansion just to recompute an identical
+        cache key. Bounded LRU (reshuffled runs churn keys)."""
+        seeds = np.unique(np.asarray(seeds, np.int64))
+        key = (sampler.fanouts, sampler.seed, seeds.tobytes())
+        memo = self._batch_memo
+        if key in memo:
+            memo.move_to_end(key)
+        else:
+            if len(memo) >= 512:
+                memo.popitem(last=False)
+            memo[key] = sampler.sample(seeds, induce_subgraph=False)
+        return memo[key]
+
+    def _batch_session(self, batch: sampling.SampledBatch) -> BatchSession:
+        """The cached per-batch execution context: subgraph fingerprint
+        -> (padded plan + sub-session) through the byte-bounded
+        ``batch`` cache layer. A recurring seed set re-samples (cheap,
+        deterministic) but never re-plans, re-uploads or recompiles."""
+        from repro.gcn.engine import GCNEngine
+
+        eng = self.engine
+        # the key folds in the PARENT's graph fingerprint: the batch
+        # fingerprint hashes (V, nodes, seeds) but not the parent's
+        # edges, and the batch store is process-wide — without the
+        # parent fp, two trainers on different graphs with coinciding
+        # node sets would share (wrong) plans
+        key = dataclasses.replace(
+            eng.plan_key.plan_identity(),
+            graph_fp=f"batch:{eng.graph_fp}:{batch.fingerprint()}")
+
+        def build():
+            indptr, src, w = self._prepared_csr()
+            S = batch.num_nodes
+            vpad = 1 if S <= 1 else 1 << (S - 1).bit_length()
+            sub_g2, sub_w = sampling.induce_in_edges(
+                indptr, src, w, batch.nodes, num_vertices=vpad,
+                name=f"{eng.graph.name}#batch")
+            part = make_partition(eng.cfg, eng.torus.num_nodes,
+                                  num_vertices=vpad)
+            plan = pad_plan_pow2(build_plan(
+                eng.cfg, sub_g2, eng.torus, part, edge_weights=sub_w,
+                bidir=eng.bidir))
+            sub = GCNEngine.from_plan(
+                eng.cfg, plan, eng.dims, graph_fp=key.graph_fp,
+                axis_names=eng.axis_names, name=sub_g2.name)
+            return BatchSession(nodes=batch.nodes, seeds=batch.seeds,
+                                engine=sub)
+
+        def nbytes(bs):
+            return (cache._plan_nbytes(bs.engine.plan)
+                    + bs.nodes.nbytes + bs.seeds.nbytes)
+
+        return cache.get_batch(key, build, nbytes=nbytes)
+
+    def _batch_inputs(self, bs: BatchSession, feats: np.ndarray):
+        """Parent-global features/labels/mask -> the batch session's
+        sharded device layout. The loss mask covers the SEED vertices
+        only (carrying the parent mask's weights); padding vertices and
+        non-seed neighbors contribute activations, never loss terms."""
+        sub = bs.engine
+        vpad = sub.graph.num_vertices
+        S = bs.nodes.size
+        xb = np.zeros((vpad, feats.shape[1]), np.float32)
+        xb[:S] = feats[bs.nodes]
+        lb = np.zeros(vpad, np.int32)
+        lb[:S] = self.labels[bs.nodes]
+        mk = np.zeros(vpad, np.float32)
+        seed_local = np.searchsorted(bs.nodes, bs.seeds)
+        mk[seed_local] = (1.0 if self.train_mask is None
+                          else self.train_mask[bs.seeds])
+        x, _ = sub._shard_input(xb)
+        lb_sh, mk_sh = shard_training_inputs(sub, lb, mk)
+        return x, lb_sh, mk_sh
+
+    def fit_sampled(self, feats, *, epochs: int = 10, batch_size: int = 64,
+                    fanouts: Sequence[int] = (8, 8), params=None,
+                    layer_dims: Sequence[int] | None = None, seed: int = 0,
+                    reshuffle_each_epoch: bool = False, log_every: int = 0,
+                    reset_opt: bool = False,
+                    agg_impl: str | None = None) -> SampledFitReport:
+        """Neighbor-sampled mini-batch training: each step optimizes the
+        masked CE over one seed set of ``batch_size`` labeled vertices,
+        computed on that batch's sampled subgraph with its OWN (cached,
+        padded) relay plan — the per-step working set is bounded by the
+        sample, not by |V|, so graphs whose full-batch plan exceeds the
+        plan budget still train (the full-batch plan is never built).
+
+        ``fanouts`` bounds the in-neighbor expansion per layer
+        (``-1`` = full; with full fanout and one batch covering every
+        labeled vertex, loss/gradients match :meth:`fit` to fp32
+        tolerance). Subgraph vertex counts are bucketed to powers of
+        two and every plan capacity is power-of-two padded
+        (``pad_plan_pow2``), so same-bucket batches reuse one jitted
+        train step instead of recompiling per batch — the exact analog
+        of ``forward_batched``'s request bucketing. By default the seed
+        sets are fixed across epochs (``reshuffle_each_epoch=False``),
+        which makes every epoch after the first a pure batch-plan cache
+        hit; the report carries the hit/miss counts the bench asserts
+        on. Determinism matches :meth:`fit`: same inputs, same seeds,
+        bit-identical parameters."""
+        eng = self.engine
+        if eng.bidir:
+            raise ValueError(
+                "fit_sampled supports unidirectional plans only")
+        impl = eng._impl(agg_impl) if agg_impl is not None else self.impl
+        V = eng.graph.num_vertices
+        feats = np.asarray(feats, np.float32)
+        if feats.ndim != 2 or feats.shape[0] != V:
+            raise ValueError(
+                f"fit_sampled needs global (V={V}, F) host features; "
+                f"got {feats.shape}")
+        if params is None and eng.params is None:
+            if layer_dims is None:
+                raise ValueError(
+                    "no params: pass params=, call engine.init_params(), "
+                    "or pass layer_dims=[feat_in, hidden..., classes]")
+            eng.init_params(jax.random.PRNGKey(seed), list(layer_dims))
+        params = eng._resolve_params(params)
+        train_nodes = (np.arange(V) if self.train_mask is None
+                       else np.flatnonzero(self.train_mask > 0))
+        if train_nodes.size == 0:
+            raise ValueError("no labeled vertices to sample seeds from")
+        sampler = self._sampler(fanouts, seed)
+        if self.opt_state is None or reset_opt:
+            self.opt_state = optlib.init(params)
+        c0 = cache.cache_stats()
+        history, epoch_walls = [], []
+        compile_s = 0.0
+        buckets: set[int] = set()
+        big_bs = None  # largest-bucket session: the byte-accounting rep
+        n_batches = 0
+        for ep in range(epochs):
+            t0 = time.perf_counter()
+            seed_sets = sampler.epoch_batches(
+                train_nodes, batch_size,
+                epoch=ep if reshuffle_each_epoch else 0)
+            n_batches = len(seed_sets)
+            loss_sum = weight = 0.0
+            for seeds in seed_sets:
+                bs = self._batch_session(self._sampled_batch(sampler,
+                                                             seeds))
+                step = bs.engine._compiled_train_step(self.opt, impl)
+                pdev = bs.engine.plan_arrays(impl)
+                x, lb_sh, mk_sh = self._batch_inputs(bs, feats)
+                params, self.opt_state, metrics = step(
+                    pdev, params, self.opt_state, x, lb_sh, mk_sh)
+                w = float(seeds.size)
+                loss_sum += float(metrics["loss"]) * w
+                weight += w
+                buckets.add(bs.num_padded_vertices)
+                if (big_bs is None
+                        or bs.num_padded_vertices
+                        > big_bs.num_padded_vertices):
+                    big_bs = bs
+            dt = time.perf_counter() - t0
+            if ep == 0:
+                compile_s = dt  # first epoch pays plan builds + compiles
+            else:
+                epoch_walls.append(dt)
+            rec = {"epoch": ep, "epoch_s": dt, "batches": n_batches,
+                   "loss": loss_sum / max(weight, 1.0)}
+            history.append(rec)
+            if log_every and (ep % log_every == 0 or ep == epochs - 1):
+                print(f"[gcn-train-sampled] epoch={ep} "
+                      f"loss={rec['loss']:.4f} ({n_batches} batches, "
+                      f"{dt * 1e3:.1f}ms)")
+        eng.params = params
+        c1 = cache.cache_stats()
+        return SampledFitReport(
+            history=history, epochs=epochs,
+            epoch_s=float(np.mean(epoch_walls)) if epoch_walls else compile_s,
+            compile_s=compile_s,
+            # measured on the LARGEST bucket's session: the remainder
+            # batch is systematically the runt, and the bench baseline
+            # should reflect the dominant per-step payload
+            exchange_bytes_per_step=(
+                _train_exchange_bytes(big_bs.engine, params, impl)
+                if big_bs is not None else 0),
+            params=params,
+            batch_size=int(batch_size), fanouts=tuple(sampler.fanouts),
+            batches_per_epoch=n_batches,
+            batch_plan_hits=c1["batch"]["hits"] - c0["batch"]["hits"],
+            batch_plan_misses=c1["batch"]["misses"] - c0["batch"]["misses"],
+            vertex_buckets=sorted(buckets),
+            train_step_compiles=c1["step"]["misses"] - c0["step"]["misses"])
+
+    def sampled_loss_and_grad(self, feats, seeds, *,
+                              fanouts: Sequence[int], seed: int = 0,
+                              params=None, agg_impl: str | None = None):
+        """``(loss, grads)`` of ONE sampled batch — the masked CE over
+        the seed vertices on the batch's padded subgraph plan. The
+        parity anchor: with full fanout (``-1`` per layer, depth >= the
+        network depth) and ``seeds`` = every labeled vertex, this
+        matches :meth:`engine.loss_and_grad` on the full graph to fp32
+        tolerance on either aggregation backend."""
+        eng = self.engine
+        impl = eng._impl(agg_impl) if agg_impl is not None else self.impl
+        params = eng._resolve_params(params)
+        feats = np.asarray(feats, np.float32)
+        bs = self._batch_session(
+            self._sampled_batch(self._sampler(fanouts, seed), seeds))
+        fn = bs.engine._compiled_loss_grad(impl)
+        x, lb_sh, mk_sh = self._batch_inputs(bs, feats)
+        return fn(bs.engine.plan_arrays(impl), params, x, lb_sh, mk_sh)
+
     def evaluate(self, feats, params=None) -> dict:
         """Loss + accuracy of the CURRENT params over the masked
         vertices (host-side, via ``engine.forward``)."""
@@ -294,31 +652,23 @@ class GCNTrainer:
     # ---------------- accounting ----------------
 
     def measured_exchange_bytes(self, params=None) -> int:
-        """ppermute payload bytes of ONE training step, measured from
-        the traced ``value_and_grad`` jaxpr — counts the forward relay
-        replays AND their transposed (backward) replays, per layer. The
-        repo-level evidence that the backward pass is the same
-        bandwidth-bound exchange the paper characterizes (the bench
-        suite records this as ``exchange_bytes_per_step``). Memoized
-        per (backend, feature width, param structure): the measurement
-        is a fresh trace of the whole backward graph, so repeated
-        ``fit`` calls on one trainer pay it once."""
-        from repro.gcn import engine as _engine
-
+        """ppermute payload bytes of ONE full-batch training step,
+        measured from the traced ``value_and_grad`` jaxpr — counts the
+        forward relay replays AND their transposed (backward) replays,
+        per layer. The repo-level evidence that the backward pass is
+        the same bandwidth-bound exchange the paper characterizes (the
+        bench suite records this as ``exchange_bytes_per_step``; the
+        sampled pipeline reports the same quantity for one batch plan).
+        Memoized per (backend, feature width, param structure): the
+        measurement is a fresh trace of the whole backward graph, so
+        repeated ``fit`` calls on one trainer pay it once."""
         eng = self.engine
         params = eng._resolve_params(params)
         F = eng._default_feat_dim(params)
         key = (self.impl, F, jax.tree.structure(params))
         if key not in self._exch_bytes:
-            pdev = eng.plan_arrays(self.impl)
-            Vp = eng.plan.part.vertices_per_node()
-            x_abs = jax.ShapeDtypeStruct(eng.dims + (Vp, F), jnp.float32)
-            fn = build_loss_grad(eng, self.impl)
-            jaxpr = jax.make_jaxpr(
-                lambda pd, p, xx, lb, mk: fn(pd, p, xx, lb, mk))(
-                pdev, params, x_abs, self.labels_sh, self.mask_sh)
-            self._exch_bytes[key] = _engine._ppermute_payload_bytes(
-                jaxpr.jaxpr, 1)
+            self._exch_bytes[key] = _train_exchange_bytes(
+                eng, params, self.impl)
         return self._exch_bytes[key]
 
 

@@ -14,6 +14,13 @@ train`` checks that in as the baseline future PRs diff against).
         --mesh 2x2 --models gcn,gin,sage --scale 9 --epochs 20 \
         --json BENCH_gcn.json
 
+``--sampler`` switches to neighbor-sampled mini-batch training
+(``GCNTrainer.fit_sampled``): bounded-fanout subgraphs per seed batch,
+each with its own cached+padded relay plan — the full-batch plan is
+never built by training (asserted), and the record lands under the
+``"train-sampled"`` key with the batch-plan cache hit rate (asserted
+> 0 for fixed seed sets) and the exchange bytes of one sampled step.
+
 The trained parameters are handed straight to a ``GCNService`` at the
 end (``service.adopt``) and one serving request is verified against the
 session's single-device oracle — the train->serve handoff the
@@ -54,9 +61,13 @@ def synthetic_labels(graph, feat_in: int, classes: int, seed: int = 0):
 def train_one(model: str, graph, mesh_dims, *, feats, labels, mask,
               hidden: int, classes: int, epochs: int, lr: float,
               agg_impl: str | None, agg_buffer_bytes: int,
-              log_every: int = 0, seed: int = 0):
+              log_every: int = 0, seed: int = 0,
+              sampler: dict | None = None):
     """Build one session on ``mesh_dims``, fit, and return
-    ``(engine, FitReport, eval dict)``."""
+    ``(engine, FitReport, eval dict)``. ``sampler`` (a dict of
+    ``fit_sampled`` kwargs: batch_size, fanouts, reshuffle_each_epoch)
+    switches to the neighbor-sampled mini-batch pipeline — the
+    full-batch plan is then never built by training."""
     from repro.config import get_gcn_config
     from repro.gcn import GCNEngine, GCNTrainer
     from repro.train import optimizer as optlib
@@ -70,9 +81,23 @@ def train_one(model: str, graph, mesh_dims, *, feats, labels, mask,
         eng, labels, mask,
         opt=optlib.AdamWConfig(lr=lr, weight_decay=0.0, warmup_steps=0,
                                total_steps=max(epochs, 1), grad_clip=1.0))
-    report = trainer.fit(
-        feats, epochs=epochs, seed=seed, log_every=log_every,
-        layer_dims=[feats.shape[1], hidden, classes])
+    layer_dims = [feats.shape[1], hidden, classes]
+    if sampler is not None:
+        from repro.gcn import cache_stats
+
+        plan_entries0 = cache_stats()["plan"]["entries"]
+        report = trainer.fit_sampled(
+            feats, epochs=epochs, seed=seed, log_every=log_every,
+            layer_dims=layer_dims, **sampler)
+        # scale proof: the sampled pipeline trains without ever
+        # building the full-batch plan (the evaluate()/serve handoff
+        # below builds it deliberately — serving is full-graph)
+        assert cache_stats()["plan"]["entries"] == plan_entries0, \
+            "fit_sampled must not build the full-batch plan"
+    else:
+        report = trainer.fit(
+            feats, epochs=epochs, seed=seed, log_every=log_every,
+            layer_dims=layer_dims)
     return eng, report, trainer.evaluate(feats)
 
 
@@ -97,8 +122,20 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=0)
     ap.add_argument("--json", default="",
-                    help="merge the perf record under 'train' here "
-                         "(BENCH_gcn.json)")
+                    help="merge the perf record under 'train' (or "
+                         "'train-sampled') here (BENCH_gcn.json)")
+    ap.add_argument("--sampler", action="store_true",
+                    help="neighbor-sampled mini-batch training "
+                         "(GCNTrainer.fit_sampled): per-batch subgraph "
+                         "plans, full-batch plan never built")
+    ap.add_argument("--batch-size", type=int, default=128,
+                    help="seed vertices per sampled batch")
+    ap.add_argument("--fanout", default="8,8",
+                    help="comma list of per-layer in-neighbor fanouts "
+                         "(-1 = full)")
+    ap.add_argument("--reshuffle", action="store_true",
+                    help="re-shuffle seed sets every epoch (defeats the "
+                         "batch-plan cache; default keeps them fixed)")
     args = ap.parse_args(argv)
 
     import jax
@@ -118,6 +155,13 @@ def main(argv=None) -> int:
     mask = (rng.random(graph.num_vertices)
             < args.train_frac).astype(np.float32)
 
+    sampler_kw = None
+    if args.sampler:
+        fanouts = tuple(int(f) for f in args.fanout.split(","))
+        sampler_kw = dict(batch_size=args.batch_size, fanouts=fanouts,
+                          reshuffle_each_epoch=args.reshuffle)
+    suite = "train-sampled" if args.sampler else "train"
+
     svc = GCNService(mesh_dims)
     per_model = {}
     t0 = time.perf_counter()
@@ -129,20 +173,13 @@ def main(argv=None) -> int:
             epochs=args.epochs, lr=args.lr,
             agg_impl=args.agg or None,
             agg_buffer_bytes=8 << 10, log_every=args.log_every,
-            seed=args.seed)
+            seed=args.seed, sampler=sampler_kw)
         print(f"[{model}] loss {rep.loss_first:.4f} -> {rep.loss_last:.4f} "
               f"over {rep.epochs} epochs "
               f"(epoch {rep.epoch_s * 1e3:.1f}ms, compile "
               f"{rep.compile_s:.2f}s, train acc {ev['accuracy']:.2%}); "
               f"exchange {rep.exchange_bytes_per_step / 2**10:.1f} KiB/step")
-        # the train->serve handoff: the trained session serves as-is
-        svc.adopt(model, eng)
-        out = svc.infer(model, feats)
-        ref = eng.reference(feats)
-        err = float(np.max(np.abs(out - ref))
-                    / (np.max(np.abs(ref)) + 1e-9))
-        assert err < 1e-4, f"served-vs-oracle mismatch for {model}: {err}"
-        per_model[model] = {
+        rec = {
             "epochs": rep.epochs,
             "loss_first": round(rep.loss_first, 6),
             "loss_last": round(rep.loss_last, 6),
@@ -152,6 +189,34 @@ def main(argv=None) -> int:
             "exchange_bytes_per_step": rep.exchange_bytes_per_step,
             "agg_backend": eng.agg_impl,
         }
+        if args.sampler:
+            rec.update(
+                batch_size=rep.batch_size,
+                fanouts=list(rep.fanouts),
+                batches_per_epoch=rep.batches_per_epoch,
+                batch_plan_hits=rep.batch_plan_hits,
+                batch_plan_misses=rep.batch_plan_misses,
+                batch_plan_hit_rate=round(rep.batch_plan_hit_rate, 4),
+                vertex_buckets=rep.vertex_buckets,
+                train_step_compiles=rep.train_step_compiles,
+            )
+            print(f"  sampled: {rep.batches_per_epoch} batches/epoch, "
+                  f"buckets {rep.vertex_buckets}, batch-plan hit rate "
+                  f"{rep.batch_plan_hit_rate:.2f}, "
+                  f"{rep.train_step_compiles} step compiles")
+            if args.epochs >= 2 and not args.reshuffle:
+                # regression tripwire for subgraph fingerprinting:
+                # fixed seed sets must hit from epoch 2 on
+                assert rep.batch_plan_hit_rate > 0, \
+                    "recurring seed sets must hit the batch-plan cache"
+        # the train->serve handoff: the trained session serves as-is
+        svc.adopt(model, eng)
+        out = svc.infer(model, feats)
+        ref = eng.reference(feats)
+        err = float(np.max(np.abs(out - ref))
+                    / (np.max(np.abs(ref)) + 1e-9))
+        assert err < 1e-4, f"served-vs-oracle mismatch for {model}: {err}"
+        per_model[model] = rec
         assert rep.loss_last < rep.loss_first, \
             f"{model}: loss did not decrease"
     wall = time.perf_counter() - t0
@@ -163,7 +228,7 @@ def main(argv=None) -> int:
 
     if args.json:
         rec = {
-            "suite": "train",
+            "suite": suite,
             "mesh": list(mesh_dims),
             "graph": {"V": graph.num_vertices, "E": graph.num_edges},
             "feat_in": args.feat,
@@ -175,8 +240,13 @@ def main(argv=None) -> int:
             "jax_backend": jax.default_backend(),
             "models": per_model,
         }
-        write_record(args.json, "train", rec)
-        print(f"wrote {args.json} (train suite)")
+        if args.sampler:
+            rec["sampler"] = {"batch_size": args.batch_size,
+                              "fanouts": [int(f) for f in
+                                          args.fanout.split(",")],
+                              "reshuffle_each_epoch": args.reshuffle}
+        write_record(args.json, suite, rec)
+        print(f"wrote {args.json} ({suite} suite)")
     return 0
 
 

@@ -26,6 +26,11 @@ from repro.core.graph import erdos
 from repro.gcn import (GCNEngine, GCNService, GCNTrainer, cache_stats,
                        reference_loss_and_grad)
 
+# covers (among the full-batch acceptance criteria) the sampled
+# mini-batch pipeline on a REAL 2-dim torus: full-fanout parity against
+# full-batch loss/grads on both backends, and bounded-fanout training
+# that decreases the loss without ever building the full-batch plan
+
 V, E, F, C = 512, 4096, 8, 4
 DIMS = (4, 2)
 
@@ -98,6 +103,49 @@ def test_handoff_serves_without_replanning(eng, feats):
           f"{st['batch_bucket_hit_rate']:.2f}, uploads {st['uploads']})")
 
 
+def test_sampled_parity_and_bounded_training(g, feats, labels, mask):
+    """Neighbor-sampled pipeline on the (4, 2) torus. Full fanout +
+    seeds = every labeled vertex: one sampled batch's loss/grads equal
+    full-batch ``loss_and_grad`` (both agg backends, each batch on its
+    own padded subgraph plan). Bounded fanout: the loss decreases,
+    recurring seed sets hit the batch-plan cache, and the full-batch
+    plan store is never touched by training."""
+    eng = GCNEngine.build(base_cfg(), g, DIMS)
+    eng.init_params(jax.random.PRNGKey(2), [F, 8, C])
+    tr = GCNTrainer(eng, labels, mask)
+    seeds = np.flatnonzero(mask > 0)
+    for impl in ("jnp", "pallas"):
+        loss_f, grads_f = eng.loss_and_grad(feats, labels, mask,
+                                            agg_impl=impl)
+        loss_s, grads_s = tr.sampled_loss_and_grad(
+            feats, seeds, fanouts=(-1, -1), agg_impl=impl)
+        assert abs(float(loss_s) - float(loss_f)) < 1e-5, impl
+        errs = [
+            float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+            for a, b in zip(jax.tree.leaves(grads_s),
+                            jax.tree.leaves(grads_f))]
+        assert max(errs) < 1e-4, (impl, max(errs))
+        print(f"ok sampled full-fanout parity {impl} "
+              f"(max rel err {max(errs):.1e})")
+
+    eng2 = GCNEngine.build(base_cfg(), g, DIMS)
+    eng2.init_params(jax.random.PRNGKey(3), [F, 8, C])
+    tr2 = GCNTrainer(eng2, labels, mask)
+    st0 = cache_stats()["plan"]
+    rep = tr2.fit_sampled(feats, epochs=6, batch_size=128,
+                          fanouts=(8, 8))
+    assert rep.loss_last < rep.loss_first, (rep.loss_first, rep.loss_last)
+    assert rep.batch_plan_hit_rate > 0, "fixed seed sets must hit"
+    st1 = cache_stats()["plan"]
+    assert (st1["misses"], st1["hits"]) == (st0["misses"], st0["hits"]), \
+        "sampled training must not touch the full-batch plan store"
+    print(f"ok sampled training loss {rep.loss_first:.4f} -> "
+          f"{rep.loss_last:.4f} ({rep.batches_per_epoch} batches/epoch, "
+          f"buckets {rep.vertex_buckets}, hit rate "
+          f"{rep.batch_plan_hit_rate:.2f}, "
+          f"{rep.train_step_compiles} step compiles)")
+
+
 def main():
     g = erdos(V, E, seed=5)
     rng = np.random.default_rng(0)
@@ -108,6 +156,7 @@ def main():
     eng, _ = test_fit_decreasing_loss_and_backward_bytes(
         g, feats, labels, mask)
     test_handoff_serves_without_replanning(eng, feats)
+    test_sampled_parity_and_bounded_training(g, feats, labels, mask)
 
 
 if __name__ == "__main__":

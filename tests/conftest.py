@@ -1,7 +1,23 @@
 """Shared fixtures. NOTE: device count deliberately NOT forced here —
 smoke tests and benches should see the 1 real CPU device. Multi-device
 tests live in files that spawn a subprocess or set XLA_FLAGS via
-pytest-forked-style isolation (see test_distributed_gcn.py)."""
+pytest-forked-style isolation (see test_distributed_gcn.py).
+
+GCN-stack fixtures (used by test_gcn_train / test_gcn_service /
+test_gcn_agg_impl / test_gcn_cache / test_gcn_train_sampled, which used
+to each re-implement them):
+
+  * ``gcn_cfg``      — smoke-config factory (small aggregation buffer so
+                       the SREM rounds path is exercised even at test
+                       scale);
+  * ``erdos_graph``  — seeded graph factory, session-memoized so the
+                       same (V, E, seed) triple is built once per run;
+  * ``gcn_setup``    — (engine, feats, labels, mask) factory for
+                       trainer-shaped tests;
+  * ``fresh_caches`` — cleared process-wide GCN caches with ALL budgets
+                       saved/restored, so budget games never leak
+                       across tests.
+"""
 import os
 import sys
 from pathlib import Path
@@ -20,3 +36,78 @@ def pytest_configure(config):
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def gcn_cfg():
+    """Factory: smoke GCNConfig for ``model`` with overrides. The small
+    default aggregation buffer forces several SREM rounds at |V|=256."""
+    import dataclasses
+
+    from repro.config import get_gcn_config
+
+    def make(model="gcn", *, agg_buffer_bytes=4 << 10, **over):
+        cfg = get_gcn_config(f"gcn-{model}-rd", "smoke")
+        return dataclasses.replace(cfg, agg_buffer_bytes=agg_buffer_bytes,
+                                   **over)
+
+    return make
+
+
+@pytest.fixture(scope="session")
+def erdos_graph():
+    """Factory: seeded Erdos graph, memoized per (V, E, seed) — graphs
+    are immutable inputs, so one build serves every module."""
+    from repro.core.graph import erdos
+
+    memo = {}
+
+    def make(V=256, E=2048, seed=0):
+        key = (int(V), int(E), int(seed))
+        if key not in memo:
+            memo[key] = erdos(*key[:2], seed=key[2])
+        return memo[key]
+
+    return make
+
+
+@pytest.fixture
+def gcn_setup(gcn_cfg, erdos_graph):
+    """Factory: one GCN training workload — a fresh engine on a seeded
+    Erdos graph with initialized params, plus seeded features, integer
+    labels and a 0/1 train mask. Engines are built per call (tests
+    play cache games); graphs/arrays are deterministic per seed."""
+    import jax
+
+    from repro.gcn import GCNEngine
+
+    def make(model="gcn", dims=(1, 1), *, V=256, E=2048, F=8, C=4,
+             seed=7, layer_dims=None, train_frac=0.8, **cfg_over):
+        g = erdos_graph(V, E, seed=seed)
+        eng = GCNEngine.build(gcn_cfg(model, **cfg_over), g, dims)
+        eng.init_params(jax.random.PRNGKey(0),
+                        list(layer_dims or (F, 8, C)))
+        arr = np.random.default_rng(seed)
+        feats = arr.normal(size=(V, F)).astype(np.float32)
+        labels = arr.integers(0, C, size=V)
+        mask = (arr.random(V) < train_frac).astype(np.float32)
+        return eng, feats, labels, mask
+
+    return make
+
+
+@pytest.fixture
+def fresh_caches():
+    """Cleared GCN caches + all five budgets saved/restored, so the
+    budget games below never leak into other tests."""
+    from repro.gcn import cache
+
+    cache.clear_all()
+    saved = (cache._PLANS.budget_bytes, cache._ELL.budget_bytes,
+             cache._PREP.budget_bytes, cache._STEPS.max_entries,
+             cache._BATCH.budget_bytes)
+    yield cache
+    cache.set_cache_budget(plan_bytes=saved[0], ell_bytes=saved[1],
+                           prep_bytes=saved[2], step_entries=saved[3],
+                           batch_bytes=saved[4])
+    cache.clear_all()

@@ -7,28 +7,15 @@ never replans.
 Runs in-process on the 1-CPU view with a (1, 1) mesh (the pallas kernel
 runs in interpret mode off-TPU — the same code path a TPU takes, minus
 Mosaic lowering). The 8-device variants live in _gcn_engine_main.py.
+Config/graph setup comes from the shared conftest fixtures (``gcn_cfg``
+builds the smoke config with the small aggregation buffer that forces
+several SREM rounds even at |V|=256; ``erdos_graph`` memoizes the
+seeded graph).
 """
-import dataclasses
-import os
-
 import numpy as np
 import pytest
 
 V, E, F = 256, 2048, 8
-
-
-def _cfg(**over):
-    from repro.config import get_gcn_config
-
-    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
-    # small aggregation buffer -> several SREM rounds even at |V|=256
-    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
-
-
-def _graph():
-    from repro.core.graph import erdos
-
-    return erdos(V, E, seed=11)
 
 
 def _feats(rng_seed=0, f=F):
@@ -40,16 +27,16 @@ def _rel_err(a, b):
     return np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
 
 
-def test_parity_all_registered_models():
+def test_parity_all_registered_models(gcn_cfg, erdos_graph):
     """pallas and jnp backends both match reference() for every model
     in the registry (GCN / GIN / SAGE + any user-registered)."""
     import jax
     from repro.gcn import GCNEngine, registered_models
 
-    g = _graph()
+    g = erdos_graph(V, E, seed=11)
     feats = _feats()
     for model in registered_models():
-        eng = GCNEngine.build(_cfg(model=model), g, (1, 1))
+        eng = GCNEngine.build(gcn_cfg(model=model), g, (1, 1))
         eng.init_params(jax.random.PRNGKey(3), [F, 12, 6])
         assert eng.plan.num_rounds > 1, "rounds path must be exercised"
         ref = eng.reference(feats)
@@ -60,14 +47,14 @@ def test_parity_all_registered_models():
 
 @pytest.mark.parametrize("mpm", ["oppe", "oppr", "oppm"])
 @pytest.mark.parametrize("use_rounds", [True, False])
-def test_parity_all_modes(mpm, use_rounds):
+def test_parity_all_modes(mpm, use_rounds, gcn_cfg, erdos_graph):
     """The ELL path must agree with the oracle under every
     message-passing model, with and without SREM rounds."""
     import jax
     from repro.gcn import GCNEngine
 
     eng = GCNEngine.build(
-        _cfg(message_passing=mpm, use_rounds=use_rounds), _graph(), (1, 1))
+        gcn_cfg(message_passing=mpm, use_rounds=use_rounds), erdos_graph(V, E, seed=11), (1, 1))
     eng.init_params(jax.random.PRNGKey(0), [F, 6])
     feats = _feats(1)
     ref = eng.reference(feats)
@@ -75,12 +62,12 @@ def test_parity_all_modes(mpm, use_rounds):
     assert (eng.plan.num_rounds > 1) == use_rounds
 
 
-def test_agg_impl_is_part_of_key_but_never_replans():
+def test_agg_impl_is_part_of_key_but_never_replans(gcn_cfg, erdos_graph):
     from repro.gcn import GCNEngine, plan_cache_stats
 
-    g = _graph()
-    e_jnp = GCNEngine.build(_cfg(agg_impl="jnp"), g, (1, 1))
-    e_pal = GCNEngine.build(_cfg(agg_impl="pallas"), g, (1, 1))
+    g = erdos_graph(V, E, seed=11)
+    e_jnp = GCNEngine.build(gcn_cfg(agg_impl="jnp"), g, (1, 1))
+    e_pal = GCNEngine.build(gcn_cfg(agg_impl="pallas"), g, (1, 1))
     # agg_impl IS part of the (full) key: layouts/compiled steps are
     # per-backend...
     assert e_jnp.plan_key != e_pal.plan_key
@@ -101,14 +88,14 @@ def test_agg_impl_is_part_of_key_but_never_replans():
     del before
 
 
-def test_ell_layout_cached_alongside_plan():
+def test_ell_layout_cached_alongside_plan(gcn_cfg, erdos_graph):
     """The host-side ELL layout is built once per full PlanKey, shared
     by engines on the same workload, and keyed apart by block shape."""
     from repro.gcn import GCNEngine, plan_cache_stats
 
-    g = _graph()
-    e1 = GCNEngine.build(_cfg(), g, (1, 1))
-    e2 = GCNEngine.build(_cfg(), g, (1, 1))
+    g = erdos_graph(V, E, seed=11)
+    e1 = GCNEngine.build(gcn_cfg(), g, (1, 1))
+    e2 = GCNEngine.build(gcn_cfg(), g, (1, 1))
     l1 = e1.ell_layout()
     assert e2.ell_layout() is l1, "same workload must share one layout"
     seg, rows, w = l1
@@ -123,14 +110,14 @@ def test_ell_layout_cached_alongside_plan():
     # a different block shape is a different full key -> separate layout
     S = e1.plan.part.slots_per_round
     small = max(1, S // 2)
-    e3 = GCNEngine.build(_cfg(ell_block_slots=small), g, (1, 1))
+    e3 = GCNEngine.build(gcn_cfg(ell_block_slots=small), g, (1, 1))
     l3 = e3.ell_layout()
     assert l3 is not l1 and l3[0].shape[2] == -(-S // small)
     assert e3.plan is e1.plan, "block shape must not replan either"
     assert plan_cache_stats()["ell_entries"] >= 2
 
 
-def test_resolution_and_stats_traffic_keys():
+def test_resolution_and_stats_traffic_keys(gcn_cfg, erdos_graph):
     import jax
     from repro.gcn import GCNEngine, resolve_agg_impl
 
@@ -141,7 +128,7 @@ def test_resolution_and_stats_traffic_keys():
     with pytest.raises(ValueError):
         resolve_agg_impl("systolic")
 
-    eng = GCNEngine.build(_cfg(), _graph(), (1, 1))
+    eng = GCNEngine.build(gcn_cfg(), erdos_graph(V, E, seed=11), (1, 1))
     eng.init_params(jax.random.PRNGKey(0), [F, 4])
     st = eng.stats(feat_dim=F)
     assert st["agg_impl"] == auto
@@ -158,7 +145,7 @@ def test_resolution_and_stats_traffic_keys():
     np.testing.assert_allclose(out_auto, eng.forward(feats), atol=1e-6)
 
 
-def test_ell_layout_rounds_matches_coo():
+def test_ell_layout_rounds_matches_coo(gcn_cfg, erdos_graph):
     """Property check of the batched layout builder itself: rebuilding
     the COO sum from the ELL tensors reproduces every (round, node)
     accumulator."""
@@ -166,7 +153,7 @@ def test_ell_layout_rounds_matches_coo():
     from repro.kernels.spmm import ref as spr
     import jax.numpy as jnp
 
-    eng = GCNEngine.build(_cfg(), _graph(), (1, 1))
+    eng = GCNEngine.build(gcn_cfg(), erdos_graph(V, E, seed=11), (1, 1))
     plan = eng.plan
     seg, rows, w = eng.ell_layout()
     R, N = plan.num_rounds, plan.num_nodes

@@ -3,48 +3,35 @@ eviction with coherent cascades, compiled-step sharing across sessions,
 and the one-call clearing contract (clear/invalidate sweep plans, ELL
 layouts, prepared graphs AND compiled steps together).
 
-Runs in-process on the 1-CPU view (mesh ``(1, 1)``)."""
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``). Config/graph/
+cache fixtures come from the shared conftest (``gcn_cfg``,
+``erdos_graph``, ``fresh_caches`` — which saves/restores ALL budgets).
+"""
 import dataclasses
 
 import numpy as np
 import pytest
 
 
-def _cfg(**over):
-    from repro.config import get_gcn_config
+@pytest.fixture
+def _engine(gcn_cfg):
+    from repro.gcn import GCNEngine
 
-    cfg = get_gcn_config("gcn-gcn-rd", "smoke")
-    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+    def make(graph, **over):
+        return GCNEngine.build(gcn_cfg(**over), graph, (1, 1))
+
+    return make
 
 
 @pytest.fixture
-def fresh_caches():
-    """Cleared caches + default budgets, restored afterwards so the
-    budget games below never leak into other tests."""
-    from repro.gcn import cache
+def _graphs(erdos_graph):
+    def make(n, seed0=50):
+        return [erdos_graph(256, 2048, seed=seed0 + i) for i in range(n)]
 
-    cache.clear_all()
-    saved = (cache._PLANS.budget_bytes, cache._ELL.budget_bytes,
-             cache._PREP.budget_bytes, cache._STEPS.max_entries)
-    yield cache
-    cache.set_cache_budget(plan_bytes=saved[0], ell_bytes=saved[1],
-                           prep_bytes=saved[2], step_entries=saved[3])
-    cache.clear_all()
+    return make
 
 
-def _engine(graph, **over):
-    from repro.gcn import GCNEngine
-
-    return GCNEngine.build(_cfg(**over), graph, (1, 1))
-
-
-def _graphs(n, seed0=50):
-    from repro.core.graph import erdos
-
-    return [erdos(256, 2048, seed=seed0 + i) for i in range(n)]
-
-
-def test_plan_lru_evicts_under_byte_budget(fresh_caches):
+def test_plan_lru_evicts_under_byte_budget(fresh_caches, _engine, _graphs):
     """Plans for distinct graphs evict least-recently-served first once
     the configurable byte budget is exceeded; a re-planned graph counts
     exactly one extra miss."""
@@ -80,7 +67,7 @@ def test_plan_lru_evicts_under_byte_budget(fresh_caches):
     assert ea.plan is ea2.plan
 
 
-def test_plan_eviction_cascades_to_ell_and_steps(fresh_caches):
+def test_plan_eviction_cascades_to_ell_and_steps(fresh_caches, _engine, _graphs):
     """Evicting a plan drops the ELL layouts and compiled steps built
     from it — a re-admitted graph can never pair a fresh plan with a
     stale derived entry."""
@@ -105,7 +92,7 @@ def test_plan_eviction_cascades_to_ell_and_steps(fresh_caches):
     assert st["step"]["entries"] == 0, "steps must die with their plan"
 
 
-def test_clear_and_invalidate_sweep_all_layers(fresh_caches):
+def test_clear_and_invalidate_sweep_all_layers(fresh_caches, _engine, _graphs):
     """One coherent clear: ``clear_plan_cache()`` and
     ``invalidate_model()`` drop plan, ELL, prepared-graph AND
     compiled-step entries together (the pre-refactor bug was stale ELL /
@@ -136,7 +123,7 @@ def test_clear_and_invalidate_sweep_all_layers(fresh_caches):
         assert st[layer]["entries"] == 0, layer
 
 
-def test_compiled_step_shared_across_sessions(fresh_caches):
+def test_compiled_step_shared_across_sessions(fresh_caches, _engine, _graphs):
     """Two sessions with the same executor identity get the SAME jitted
     layer step (one compile serves both); a different schedule (other
     graph) or backend gets its own."""
@@ -192,7 +179,7 @@ def _plan_key_stub():
                    8, 0)
 
 
-def test_forward_batched_matches_forward(fresh_caches):
+def test_forward_batched_matches_forward(fresh_caches, _engine, _graphs):
     """The folded-feature batched executor is numerically exact against
     per-request forward calls (the exchange is linear per column, so the
     relay sums in the same order)."""

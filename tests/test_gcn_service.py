@@ -6,46 +6,33 @@ batching of compatible requests, async-vs-sync upload equivalence
 
 Runs in-process on the 1-CPU view (mesh ``(1, 1)``); the multi-device
 serving path is exercised by ``benchmarks/run.py --suite serve`` /
-``make check`` on 8 forced host devices."""
-import dataclasses
-
+``make check`` on 8 forced host devices. Config/cache fixtures come
+from the shared conftest (``gcn_cfg``, ``fresh_caches``)."""
 import numpy as np
 import pytest
 
 
-def _cfg(model="gcn", **over):
-    from repro.config import get_gcn_config
-
-    cfg = get_gcn_config(f"gcn-{model}-rd", "smoke")
-    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
-
-
 @pytest.fixture
-def fresh_caches():
-    from repro.gcn import cache
-
-    cache.clear_all()
-    saved = cache._PLANS.budget_bytes
-    yield cache
-    cache.set_cache_budget(plan_bytes=saved)
-    cache.clear_all()
-
-
-def _mixed_service(*, async_upload=True, max_batch=4, seed0=30):
-    """Three sessions with distinct RMAT sizes AND models on one mesh."""
+def mixed_service(gcn_cfg):
+    """Factory: three sessions with distinct RMAT sizes AND models on
+    one mesh."""
     from repro.core.rmat import rmat
     from repro.gcn import GCNService
 
-    svc = GCNService((1, 1), max_batch=max_batch,
-                     async_upload=async_upload)
-    graphs = {}
-    for i, (model, scale) in enumerate(
-            [("gcn", 8), ("gin", 9), ("sage", 8)]):
-        name = f"{model}{scale}"
-        g = rmat(scale, 1 << (scale + 2), seed=seed0 + i, name=name)
-        svc.admit(name, _cfg(model), g, layer_dims=[8, 8, 4], seed=i)
-        graphs[name] = g
-    return svc, graphs
+    def make(*, async_upload=True, max_batch=4, seed0=30):
+        svc = GCNService((1, 1), max_batch=max_batch,
+                         async_upload=async_upload)
+        graphs = {}
+        for i, (model, scale) in enumerate(
+                [("gcn", 8), ("gin", 9), ("sage", 8)]):
+            name = f"{model}{scale}"
+            g = rmat(scale, 1 << (scale + 2), seed=seed0 + i, name=name)
+            svc.admit(name, gcn_cfg(model), g, layer_dims=[8, 8, 4],
+                      seed=i)
+            graphs[name] = g
+        return svc, graphs
+
+    return make
 
 
 def _submit_mixed(svc, graphs, n, seed=5):
@@ -58,11 +45,11 @@ def _submit_mixed(svc, graphs, n, seed=5):
             for k in range(n)]
 
 
-def test_service_multigraph_parity(fresh_caches):
+def test_service_multigraph_parity(fresh_caches, mixed_service):
     """Every served request matches its own session's
     ``engine.reference()`` oracle — across >= 3 graphs with different
     sizes and message-passing models sharing one cache."""
-    svc, graphs = _mixed_service()
+    svc, graphs = mixed_service()
     reqs = _submit_mixed(svc, graphs, 9)
     done = svc.run()
     assert len(done) == 9 and all(r.done for r in reqs)
@@ -77,10 +64,10 @@ def test_service_multigraph_parity(fresh_caches):
     assert st["cache"]["plan"]["entries"] == 3
 
 
-def test_service_batches_compatible_requests(fresh_caches):
+def test_service_batches_compatible_requests(fresh_caches, mixed_service):
     """Head-of-line batching groups same-session same-shape requests up
     to ``max_batch``; incompatible requests stay queued in order."""
-    svc, graphs = _mixed_service(max_batch=4)
+    svc, graphs = mixed_service(max_batch=4)
     name = next(iter(graphs))
     other = list(graphs)[1]
     rng = np.random.default_rng(1)
@@ -102,18 +89,18 @@ def test_service_batches_compatible_requests(fresh_caches):
     assert svc.stats()["mean_batch"] == pytest.approx(2.5)
 
 
-def test_async_upload_bit_identical_to_sync(fresh_caches):
+def test_async_upload_bit_identical_to_sync(fresh_caches, mixed_service):
     """The double-buffered background upload changes WHEN plan arrays
     reach the device, never what executes: outputs are bit-identical to
     the synchronous fallback."""
-    svc_a, graphs_a = _mixed_service(async_upload=True)
+    svc_a, graphs_a = mixed_service(async_upload=True)
     reqs_a = _submit_mixed(svc_a, graphs_a, 9, seed=11)
     svc_a.run()
     st = svc_a.stats()
     assert st["uploads_async"] > 0, "async path must actually prefetch"
 
     fresh_caches.clear_all()  # force the sync run to re-upload too
-    svc_s, graphs_s = _mixed_service(async_upload=False)
+    svc_s, graphs_s = mixed_service(async_upload=False)
     reqs_s = _submit_mixed(svc_s, graphs_s, 9, seed=11)
     svc_s.run()
     assert svc_s.stats()["uploads_async"] == 0
@@ -122,14 +109,14 @@ def test_async_upload_bit_identical_to_sync(fresh_caches):
         np.testing.assert_array_equal(ra.out, rs.out)
 
 
-def test_service_eviction_and_readmit_replans_once(fresh_caches):
+def test_service_eviction_and_readmit_replans_once(fresh_caches, mixed_service, gcn_cfg):
     """Serving under a byte budget that holds two plans: graph A is
     evicted after B and C are served — and A's LIVE session is released
     with it (``set_cache_budget`` bounds the process, not just the
     shared store). Serving A again replans exactly once, then hits; the
     budget keeps holding two plans throughout."""
     cache = fresh_caches
-    svc, graphs = _mixed_service()
+    svc, graphs = mixed_service()
     names = list(graphs)
     a, b, c = names
     rng = np.random.default_rng(2)
@@ -177,19 +164,19 @@ def test_service_eviction_and_readmit_replans_once(fresh_caches):
     # re-admitting A as a FRESH session is now also a pure hit (the
     # old session's rebuild refilled the shared store)
     svc.evict(a)
-    svc.admit(a, _cfg("gcn"), graphs[a], layer_dims=[8, 8, 4], seed=0)
+    svc.admit(a, gcn_cfg("gcn"), graphs[a], layer_dims=[8, 8, 4], seed=0)
     req3 = serve_one(a, feats_a)
     assert cache.cache_stats()["plan"]["misses"] == misses0 + 1
     # same seed, same graph, same plan -> the same served function
     np.testing.assert_allclose(req3.out, req1.out, rtol=1e-5, atol=1e-5)
 
 
-def test_evict_during_inflight_prefetch_is_harmless(fresh_caches):
+def test_evict_during_inflight_prefetch_is_harmless(fresh_caches, mixed_service):
     """Evicting the session a background prefetch is uploading must not
     poison later steps: the thread holds the engine object (not a name
     lookup), and a failed upload for a no-longer-admitted session is
     dropped at the fence instead of re-raised."""
-    svc, graphs = _mixed_service(async_upload=True, max_batch=2)
+    svc, graphs = mixed_service(async_upload=True, max_batch=2)
     names = list(graphs)
     rng = np.random.default_rng(4)
     for k in range(6):
@@ -203,11 +190,11 @@ def test_evict_during_inflight_prefetch_is_harmless(fresh_caches):
     assert all(r.done for r in done)
 
 
-def test_execution_error_requeues_batch(fresh_caches):
+def test_execution_error_requeues_batch(fresh_caches, mixed_service):
     """A batch that fails during execution (e.g. feature width not
     matching the session's params) goes back to the head of the queue —
     requests stay observable/retryable instead of vanishing."""
-    svc, graphs = _mixed_service()
+    svc, graphs = mixed_service()
     name = next(iter(graphs))
     bad = np.zeros((graphs[name].num_vertices, 5), np.float32)  # F=5 != 8
     req = svc.submit(name, bad)
@@ -216,12 +203,12 @@ def test_execution_error_requeues_batch(fresh_caches):
     assert svc.queue and svc.queue[0] is req and not req.done
 
 
-def test_service_rejects_bad_requests(fresh_caches):
-    svc, graphs = _mixed_service()
+def test_service_rejects_bad_requests(fresh_caches, mixed_service, gcn_cfg):
+    svc, graphs = mixed_service()
     name = next(iter(graphs))
     with pytest.raises(KeyError):
         svc.submit("never-admitted", np.zeros((4, 8), np.float32))
     with pytest.raises(ValueError):
         svc.submit(name, np.zeros((7, 8), np.float32))  # wrong |V|
     with pytest.raises(ValueError):
-        svc.admit(name, _cfg(), graphs[name])  # duplicate name
+        svc.admit(name, gcn_cfg(), graphs[name])  # duplicate name

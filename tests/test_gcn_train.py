@@ -18,7 +18,6 @@ run in the ``_gcn_train_main.py`` subprocess):
   * plan eviction under a byte budget releases live-session memos
     (satellite: ``set_cache_budget`` bounds the whole process).
 """
-import dataclasses
 import os
 import subprocess
 import sys
@@ -35,8 +34,10 @@ def test_train_8dev():
     """Multi-device acceptance run (subprocess; device count must be
     set before jax initializes): gradient parity vs the dense reference
     for all 3 models x both backends on a (4, 2) torus, decreasing
-    loss, backward-exchange byte accounting, and the train->serve
-    handoff. See ``_gcn_train_main.py``."""
+    loss, backward-exchange byte accounting, the train->serve handoff,
+    and the neighbor-sampled pipeline (full-fanout parity + bounded-
+    fanout training that never builds the full-batch plan). See
+    ``_gcn_train_main.py``."""
     script = Path(__file__).parent / "_gcn_train_main.py"
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
@@ -46,41 +47,12 @@ def test_train_8dev():
     assert "ALL_OK" in r.stdout
 
 
-def _cfg(model="gcn", **over):
-    from repro.config import get_gcn_config
-
-    cfg = get_gcn_config(f"gcn-{model}-rd", "smoke")
-    return dataclasses.replace(cfg, agg_buffer_bytes=4 << 10, **over)
+# engine/graph/feats/labels/mask setup is shared with the other GCN
+# test modules via the seeded conftest fixtures (gcn_cfg, erdos_graph,
+# gcn_setup, fresh_caches)
 
 
-@pytest.fixture
-def fresh_caches():
-    from repro.gcn import cache
-
-    cache.clear_all()
-    saved = cache._PLANS.budget_bytes
-    yield cache
-    cache.set_cache_budget(plan_bytes=saved)
-    cache.clear_all()
-
-
-def _setup(model="gcn", dims=(1, 1), seed=7, layer_dims=(F, 8, C)):
-    import jax
-
-    from repro.core.graph import erdos
-    from repro.gcn import GCNEngine
-
-    g = erdos(V, E, seed=seed)
-    eng = GCNEngine.build(_cfg(model), g, dims)
-    eng.init_params(jax.random.PRNGKey(0), list(layer_dims))
-    rng = np.random.default_rng(seed)
-    feats = rng.normal(size=(V, F)).astype(np.float32)
-    labels = rng.integers(0, C, size=V)
-    mask = (rng.random(V) < 0.8).astype(np.float32)
-    return eng, feats, labels, mask
-
-
-def test_exchange_vjp_is_linear(fresh_caches):
+def test_exchange_vjp_is_linear(fresh_caches, gcn_setup):
     """The exchange is linear in the features, so (a) outputs are
     additive/homogeneous and (b) its VJP cotangent does not depend on
     the primal point — the backward pass is a pure reversed relay
@@ -88,7 +60,7 @@ def test_exchange_vjp_is_linear(fresh_caches):
     import jax
     import jax.numpy as jnp
 
-    eng, feats, _, _ = _setup()
+    eng, feats, _, _ = gcn_setup()
     exch = eng.exchange_fn()
     pdev = eng.plan_arrays()
     x1 = jnp.asarray(eng.shard(feats))
@@ -107,7 +79,7 @@ def test_exchange_vjp_is_linear(fresh_caches):
     np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
 
 
-def test_grad_parity_all_models_both_backends(fresh_caches):
+def test_grad_parity_all_models_both_backends(fresh_caches, gcn_setup):
     """``loss_and_grad`` through the distributed exchange matches the
     dense single-node oracle to fp32 tolerance for GCN/GIN/SAGE, and
     the two aggregation backends agree with each other."""
@@ -117,7 +89,7 @@ def test_grad_parity_all_models_both_backends(fresh_caches):
     from repro.gcn import reference_loss_and_grad
 
     for model in ("gcn", "gin", "sage"):
-        eng, feats, labels, mask = _setup(model)
+        eng, feats, labels, mask = gcn_setup(model)
         loss_r, grads_r = reference_loss_and_grad(eng, feats, labels, mask)
         for impl in ("jnp", "pallas"):
             loss_d, grads_d = eng.loss_and_grad(feats, labels, mask,
@@ -130,7 +102,7 @@ def test_grad_parity_all_models_both_backends(fresh_caches):
                 assert err < 1e-4, (model, impl, err)
 
 
-def test_fit_decreases_loss_and_is_deterministic(fresh_caches):
+def test_fit_decreases_loss_and_is_deterministic(fresh_caches, gcn_setup):
     """Two identical ``fit`` runs produce bit-identical parameters and
     a decreasing loss trajectory."""
     import jax
@@ -139,7 +111,7 @@ def test_fit_decreases_loss_and_is_deterministic(fresh_caches):
 
     reports = []
     for _ in range(2):
-        eng, feats, labels, mask = _setup()
+        eng, feats, labels, mask = gcn_setup()
         tr = GCNTrainer(eng, labels, mask)
         reports.append(tr.fit(feats, epochs=10))
     ra, rb = reports
@@ -150,10 +122,10 @@ def test_fit_decreases_loss_and_is_deterministic(fresh_caches):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_trainer_mask_excludes_vertices(fresh_caches):
+def test_trainer_mask_excludes_vertices(fresh_caches, gcn_setup):
     """The loss only sees masked vertices: flipping an UNmasked
     vertex's label changes nothing."""
-    eng, feats, labels, mask = _setup()
+    eng, feats, labels, mask = gcn_setup()
     off = int(np.flatnonzero(mask == 0)[0])
     loss0, _ = eng.loss_and_grad(feats, labels, mask)
     labels2 = labels.copy()
@@ -162,14 +134,14 @@ def test_trainer_mask_excludes_vertices(fresh_caches):
     assert float(loss0) == float(loss1)
 
 
-def test_train_serve_handoff_no_replan_no_recompile(fresh_caches):
+def test_train_serve_handoff_no_replan_no_recompile(fresh_caches, gcn_setup):
     """``GCNService.adopt`` serves a trainer's session as-is: no plan
     misses at handoff, and the second identical request batch reuses
     the compiled batched step (no step-cache miss either)."""
     from repro.gcn import GCNService, GCNTrainer
 
     cache = fresh_caches
-    eng, feats, labels, mask = _setup()
+    eng, feats, labels, mask = gcn_setup()
     tr = GCNTrainer(eng, labels, mask)
     tr.fit(feats, epochs=4)
 
@@ -189,10 +161,10 @@ def test_train_serve_handoff_no_replan_no_recompile(fresh_caches):
     np.testing.assert_array_equal(out, out2)
 
     # adoption validation: mesh mismatch, missing params, dup name
-    eng2, *_ = _setup(dims=(1,))
+    eng2, *_ = gcn_setup(dims=(1,))
     with pytest.raises(ValueError):
         svc.adopt("other-mesh", eng2)
-    eng3, *_ = _setup()
+    eng3, *_ = gcn_setup()
     eng3.params = None
     with pytest.raises(ValueError):
         svc.adopt("untrained", eng3)
@@ -200,8 +172,8 @@ def test_train_serve_handoff_no_replan_no_recompile(fresh_caches):
         svc.adopt("trained", eng)
 
 
-def test_loss_and_grad_rejects_bad_shapes(fresh_caches):
-    eng, feats, labels, _ = _setup()
+def test_loss_and_grad_rejects_bad_shapes(fresh_caches, gcn_setup):
+    eng, feats, labels, _ = gcn_setup()
     with pytest.raises(ValueError):
         eng.loss_and_grad(feats[:100], labels)  # wrong |V|
     with pytest.raises(ValueError):
@@ -210,11 +182,11 @@ def test_loss_and_grad_rejects_bad_shapes(fresh_caches):
         eng.loss_and_grad(feats, labels, np.ones(7))  # wrong mask
 
 
-def test_forward_batched_buckets_batch_sizes(fresh_caches):
+def test_forward_batched_buckets_batch_sizes(fresh_caches, gcn_setup):
     """Satellite: B is padded to the next power of two, so request
     counts 3 and 4 share one compiled step; results stay exact against
     per-request forward, and ``stats()`` reports the hit rate."""
-    eng, feats, _, _ = _setup()
+    eng, feats, _, _ = gcn_setup()
     rng = np.random.default_rng(1)
     fb3 = rng.normal(size=(3, V, F)).astype(np.float32)
     out3 = eng.forward_batched(fb3)
@@ -238,15 +210,15 @@ def test_forward_batched_buckets_batch_sizes(fresh_caches):
     assert st["batch_buckets"] == [1, 4]
 
 
-def test_service_reports_bucket_hit_rate(fresh_caches):
+def test_service_reports_bucket_hit_rate(fresh_caches, gcn_cfg,
+                                         erdos_graph):
     """Varying per-step batch sizes that share a bucket are served
     without growing the bucket set; the service aggregates the rate."""
-    from repro.core.graph import erdos
     from repro.gcn import GCNService
 
-    g = erdos(V, E, seed=11)
+    g = erdos_graph(V, E, seed=11)
     svc = GCNService((1, 1), max_batch=4)
-    svc.admit("g", _cfg(), g, layer_dims=[F, C])
+    svc.admit("g", gcn_cfg(), g, layer_dims=[F, C])
     rng = np.random.default_rng(2)
 
     def submit(n):
@@ -263,19 +235,18 @@ def test_service_reports_bucket_hit_rate(fresh_caches):
     assert st["batch_bucket_hit_rate"] == pytest.approx(0.5)
 
 
-def test_plan_eviction_releases_live_session(fresh_caches):
+def test_plan_eviction_releases_live_session(fresh_caches, gcn_cfg, erdos_graph):
     """Satellite: evicting a plan under byte pressure clears the live
     session's memoized plan/device arrays/compiled steps (the session
     no longer pins them), and the session transparently rebuilds
     through the store on next use — exactly one extra plan miss."""
     import jax
 
-    from repro.core.graph import erdos
     from repro.gcn import GCNEngine
 
     cache = fresh_caches
-    ga, gb = erdos(V, E, seed=21), erdos(V, E, seed=22)
-    ea = GCNEngine.build(_cfg(), ga, (1, 1))
+    ga, gb = erdos_graph(V, E, seed=21), erdos_graph(V, E, seed=22)
+    ea = GCNEngine.build(gcn_cfg(), ga, (1, 1))
     ea.init_params(jax.random.PRNGKey(0), [F, C])
     feats = np.random.default_rng(3).normal(size=(V, F)).astype(np.float32)
     out_before = ea.forward(feats)
@@ -284,7 +255,7 @@ def test_plan_eviction_releases_live_session(fresh_caches):
 
     # budget below two plans: B's arrival evicts A AND releases ea
     cache.set_cache_budget(plan_bytes=int(per_plan * 1.5))
-    _ = GCNEngine.build(_cfg(), gb, (1, 1)).plan
+    _ = GCNEngine.build(gcn_cfg(), gb, (1, 1)).plan
     assert not ea.plan_cached
     assert ea._plan is None, "eviction must release the memoized plan"
     assert not ea.plan_uploaded(), "device arrays must be released"

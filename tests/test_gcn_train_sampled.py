@@ -1,0 +1,257 @@
+"""Neighbor-sampled mini-batch training (``GCNTrainer.fit_sampled``):
+parity against full-batch training under full fanout, bounded working
+sets under byte budgets, batch-plan caching by subgraph fingerprint,
+and the power-of-two plan padding that lets same-bucket batches share
+one jitted train step.
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``); the 8-device
+variants live in ``_gcn_train_main.py``.
+"""
+import numpy as np
+import pytest
+
+V, E, F, C = 256, 2048, 8, 4
+
+
+def _trainer(gcn_setup, **kw):
+    from repro.gcn import GCNTrainer
+
+    eng, feats, labels, mask = gcn_setup(**kw)
+    return GCNTrainer(eng, labels, mask), eng, feats, labels, mask
+
+
+def test_sampled_full_fanout_parity_both_backends(fresh_caches, gcn_setup):
+    """With full fanout (depth = network depth) and seeds = every
+    labeled vertex, one sampled batch's loss/grads equal the full-batch
+    ``loss_and_grad`` to fp32 tolerance — on BOTH aggregation backends.
+    The subgraph runs on its own padded plan with parent-derived edge
+    weights, so this is the end-to-end correctness pin of the whole
+    sampled pipeline."""
+    import jax
+
+    tr, eng, feats, labels, mask = _trainer(gcn_setup)
+    seeds = np.flatnonzero(mask > 0)
+    for impl in ("jnp", "pallas"):
+        loss_f, grads_f = eng.loss_and_grad(feats, labels, mask,
+                                            agg_impl=impl)
+        loss_s, grads_s = tr.sampled_loss_and_grad(
+            feats, seeds, fanouts=(-1, -1), agg_impl=impl)
+        assert abs(float(loss_s) - float(loss_f)) < 1e-5, impl
+        for gs, gf in zip(jax.tree.leaves(grads_s),
+                          jax.tree.leaves(grads_f)):
+            err = float(np.max(np.abs(np.asarray(gs) - np.asarray(gf)))
+                        / (np.max(np.abs(np.asarray(gf))) + 1e-9))
+            assert err < 1e-4, (impl, err)
+
+
+def test_fit_sampled_matches_fit_trajectory(fresh_caches, gcn_setup):
+    """Full fanout + one batch covering all labeled vertices: the
+    sampled loop IS full-batch training — per-epoch losses and final
+    params match ``fit`` to tight tolerance."""
+    import jax
+
+    from repro.gcn import GCNTrainer
+
+    tr_f, _, feats, _, _ = _trainer(gcn_setup)
+    rep_f = tr_f.fit(feats, epochs=5)
+    tr_s, _, feats, _, _ = _trainer(gcn_setup)
+    rep_s = tr_s.fit_sampled(feats, epochs=5, batch_size=V,
+                             fanouts=(-1, -1))
+    for hf, hs in zip(rep_f.history, rep_s.history):
+        assert hs["loss"] == pytest.approx(hf["loss"], abs=1e-5)
+    for a, b in zip(jax.tree.leaves(rep_s.params),
+                    jax.tree.leaves(rep_f.params)):
+        err = float(np.max(np.abs(np.asarray(a) - np.asarray(b)))
+                    / (np.max(np.abs(np.asarray(b))) + 1e-9))
+        assert err < 1e-4, err
+    del GCNTrainer
+
+
+def test_fit_sampled_decreases_loss_and_caches_batch_plans(
+        fresh_caches, gcn_setup):
+    """Bounded fanout: the loss decreases strictly across epochs, seed
+    sets fixed across epochs hit the batch-plan cache from epoch 2 on,
+    the full-batch plan store is never touched, and bucketed batches
+    share compiled train steps (compiles == buckets, not batches)."""
+    cache = fresh_caches
+    tr, eng, feats, _, _ = _trainer(gcn_setup)
+    rep = tr.fit_sampled(feats, epochs=4, batch_size=64, fanouts=(4, 4))
+    losses = [h["loss"] for h in rep.history]
+    assert all(b < a for a, b in zip(losses, losses[1:])), losses
+    assert rep.batches_per_epoch == 4  # ~205 train nodes / 64
+    # epoch 1 misses once per distinct batch; epochs 2..4 are pure hits
+    assert rep.batch_plan_misses == rep.batches_per_epoch
+    assert rep.batch_plan_hits == rep.batches_per_epoch * 3
+    assert rep.batch_plan_hit_rate == pytest.approx(0.75)
+    # power-of-two bucketing: distinct subgraph sizes collapse into few
+    # buckets, and compiled train steps are shared within a bucket
+    assert rep.vertex_buckets and all(
+        b & (b - 1) == 0 for b in rep.vertex_buckets)
+    assert rep.train_step_compiles == len(rep.vertex_buckets)
+    # the whole point: the full-batch plan was never built
+    st = cache.cache_stats()
+    assert st["plan"]["entries"] == 0 and st["plan"]["misses"] == 0
+    assert st["batch"]["entries"] == rep.batches_per_epoch
+    assert not eng.plan_cached
+
+
+def test_fit_sampled_deterministic(fresh_caches, gcn_setup):
+    """Two identical sampled runs (fresh engines, cleared caches in
+    between) produce bit-identical parameters and loss histories."""
+    import jax
+
+    reports = []
+    for _ in range(2):
+        fresh_caches.clear_all()
+        tr, _, feats, _, _ = _trainer(gcn_setup)
+        reports.append(tr.fit_sampled(feats, epochs=3, batch_size=64,
+                                      fanouts=(4, 4)))
+    ra, rb = reports
+    assert [h["loss"] for h in ra.history] == \
+        [h["loss"] for h in rb.history]
+    for a, b in zip(jax.tree.leaves(ra.params), jax.tree.leaves(rb.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fit_sampled_under_budget_that_evicts_full_batch_state(
+        fresh_caches, gcn_setup, erdos_graph):
+    """The acceptance scenario: full-batch state is evicted under a
+    byte budget (releasing the live session's memos), yet sampled
+    training keeps going — batch plans live in their own store, so the
+    graph trains with a bounded working set the full-batch path could
+    not satisfy. The full plan is never rebuilt."""
+    from repro.gcn import GCNEngine
+
+    cache = fresh_caches
+    tr, eng, feats, _, _ = _trainer(gcn_setup)
+    tr.fit(feats, epochs=2)  # builds + uses the full-batch plan
+    full_bytes = cache.cache_stats()["plan"]["bytes"]
+    assert full_bytes > 0 and eng.plan_cached
+
+    # a second graph's plan + a budget below two plans evicts the
+    # full-batch plan (LRU) and releases the live session's memos
+    other = GCNEngine.build(eng.cfg, erdos_graph(V, E, seed=99), (1, 1))
+    cache.set_cache_budget(plan_bytes=int(full_bytes * 1.5))
+    _ = other.plan
+    assert not eng.plan_cached and eng._plan is None
+    assert not eng.plan_uploaded()
+
+    # sampled training proceeds under the same budget, never replans
+    # the full graph, and still learns
+    misses0 = cache.cache_stats()["plan"]["misses"]
+    rep = tr.fit_sampled(feats, epochs=4, batch_size=64, fanouts=(4, 4))
+    losses = [h["loss"] for h in rep.history]
+    assert all(b < a for a, b in zip(losses, losses[1:])), losses
+    assert cache.cache_stats()["plan"]["misses"] == misses0, \
+        "sampled training must not rebuild the full-batch plan"
+    assert rep.batch_plan_hit_rate > 0
+    assert not eng.plan_cached
+
+
+def test_batch_store_byte_budget_evicts_and_recovers(
+        fresh_caches, gcn_setup):
+    """The batch layer is itself byte-bounded: a budget holding ~one
+    batch plan forces evictions (recurring seed sets re-miss instead of
+    hitting), but training stays correct — identical losses to the
+    unbounded run."""
+    cache = fresh_caches
+    tr, _, feats, _, _ = _trainer(gcn_setup)
+    rep_free = tr.fit_sampled(feats, epochs=2, batch_size=64,
+                              fanouts=(4, 4))
+    per_batch = cache.cache_stats()["batch"]["bytes"] \
+        // max(cache.cache_stats()["batch"]["entries"], 1)
+    cache.clear_all()
+
+    cache.set_cache_budget(batch_bytes=int(per_batch * 1.5))
+    tr2, _, feats2, _, _ = _trainer(gcn_setup)
+    rep_tight = tr2.fit_sampled(feats2, epochs=2, batch_size=64,
+                                fanouts=(4, 4))
+    st = cache.cache_stats()["batch"]
+    assert st["evictions"] > 0 and st["entries"] <= 2
+    assert [h["loss"] for h in rep_tight.history] == \
+        [h["loss"] for h in rep_free.history], \
+        "eviction must change cost, never results"
+
+
+def test_pad_plan_pow2_is_execution_invariant(fresh_caches, gcn_setup):
+    """Unit contract of the plan padding: every capacity becomes a
+    power of two, and a session over the padded plan computes exactly
+    what the unpadded engine computes."""
+    from repro.core.plan import pad_plan_pow2
+    from repro.gcn.engine import GCNEngine
+
+    eng, feats, labels, mask = gcn_setup()
+    ref = eng.forward(feats)
+    padded = pad_plan_pow2(eng.plan)
+    for ph in padded.phases:
+        assert ph.capacity & (ph.capacity - 1) == 0
+        for L in ph.hop_len:
+            assert L == 0 or (L & (L - 1)) == 0
+    assert padded.replica_rows & (padded.replica_rows - 1) == 0
+    sub = GCNEngine.from_plan(eng.cfg, padded, eng.dims,
+                              graph_fp="padded:" + eng.graph_fp)
+    out = sub.forward(feats, params=eng.params)
+    np.testing.assert_allclose(out, ref, rtol=0, atol=1e-7)
+    # gradients ride the padded plan identically too
+    lf, _ = eng.loss_and_grad(feats, labels, mask)
+    tr_labels = np.asarray(labels)
+    ls, _ = sub.loss_and_grad(feats, tr_labels, mask, params=eng.params)
+    assert float(ls) == pytest.approx(float(lf), abs=1e-6)
+
+
+def test_donation_argnums_resolve_per_backend(monkeypatch):
+    """Params/opt-state donation (ROADMAP item): requested on backends
+    that implement it, skipped on cpu (XLA would warn per compile).
+    Numerics are covered by the bit-identical double-fit test."""
+    import jax
+
+    from repro.gcn import train as trn
+
+    assert trn._donation_argnums() == ()  # CI runs on cpu
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert trn._donation_argnums() == (1, 2)
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert trn._donation_argnums() == (1, 2)
+
+
+def test_batch_cache_keys_on_parent_graph(fresh_caches, gcn_setup):
+    """Regression: the batch-plan key folds in the PARENT graph's
+    fingerprint. Two trainers on different graphs with the same vertex
+    count and coinciding seed sets must NOT share batch sessions —
+    each computes its own graph's loss."""
+    from repro.gcn import GCNTrainer
+
+    cache = fresh_caches
+    tr_a, eng_a, feats, _, _ = _trainer(gcn_setup, seed=7)
+    tr_b, eng_b, _, labels_b, mask_b = _trainer(gcn_setup, seed=8)
+    seeds = np.arange(0, 64)
+    la, _ = tr_a.sampled_loss_and_grad(feats, seeds, fanouts=(0, 0))
+    hits0 = cache.cache_stats()["batch"]["hits"]
+    lb, _ = tr_b.sampled_loss_and_grad(feats, seeds, fanouts=(0, 0))
+    assert cache.cache_stats()["batch"]["hits"] == hits0, \
+        "a different parent graph must be a batch-cache MISS"
+    # clean-cache reference for graph B: values must match exactly
+    cache.clear_all()
+    tr_b2 = GCNTrainer(eng_b, labels_b, mask_b)
+    lb2, _ = tr_b2.sampled_loss_and_grad(feats, seeds, fanouts=(0, 0))
+    assert float(lb) == float(lb2)
+    assert float(la) != float(lb)  # different graphs, different losses
+
+
+def test_fit_sampled_zero_epochs_returns_empty_report(
+        fresh_caches, gcn_setup):
+    """epochs=0 mirrors fit(): a valid (empty) report, no crash, no
+    batch sessions built."""
+    tr, _, feats, _, _ = _trainer(gcn_setup)
+    rep = tr.fit_sampled(feats, epochs=0, batch_size=64, fanouts=(2, 2))
+    assert rep.history == [] and np.isnan(rep.loss_last)
+    assert rep.exchange_bytes_per_step == 0
+    assert fresh_caches.cache_stats()["batch"]["entries"] == 0
+
+
+def test_fit_sampled_rejects_bad_inputs(fresh_caches, gcn_setup):
+    tr, eng, feats, _, _ = _trainer(gcn_setup)
+    with pytest.raises(ValueError):
+        tr.fit_sampled(feats[:100], epochs=1)  # wrong |V|
+    with pytest.raises(ValueError):
+        tr.fit_sampled(np.stack([feats, feats]), epochs=1)  # not (V, F)

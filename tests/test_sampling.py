@@ -1,0 +1,186 @@
+"""Property tests for the neighbor sampler (``repro.core.sampling``),
+via the hypothesis shim in ``_hypothesis_compat``:
+
+  * the per-layer fanout bound is respected (per frontier vertex AND in
+    aggregate);
+  * subgraph edges are a subset of the parent's under the local<->global
+    node map (vertex-induced contract);
+  * the same sampler seed + seed set reproduces the batch bit-for-bit
+    (and the fingerprint with it), independent of draw order;
+  * full fanout on a small graph yields exactly the closed k-hop
+    in-neighborhood of the seeds;
+  * induced prepared subgraphs carry the PARENT's edge weights (degree
+    normalization never recomputed on the truncated subgraph).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+V, E = 128, 768
+
+
+def _graph(seed=3):
+    from repro.core.graph import erdos
+
+    return erdos(V, E, seed=seed)
+
+
+def _khop_in_neighborhood(graph, seeds, k):
+    """BFS reference: the closed k-hop in-neighborhood of ``seeds``."""
+    indptr, src = graph.csr_in()
+    nodes = set(int(s) for s in seeds)
+    for _ in range(k):
+        nxt = set()
+        for v in nodes:
+            nxt |= set(src[indptr[v]:indptr[v + 1]].tolist())
+        nodes |= nxt
+    return np.array(sorted(nodes), np.int64)
+
+
+@settings(max_examples=8, deadline=None)
+@given(fanout=st.integers(0, 6), seed=st.integers(0, 3))
+def test_fanout_bound_respected_per_layer(fanout, seed):
+    """Each layer adds at most fanout * |frontier| new vertices, and
+    the per-vertex primitive never returns more than fanout
+    in-neighbors (and only true in-neighbors)."""
+    from repro.core.sampling import NeighborSampler
+
+    g = _graph()
+    s = NeighborSampler(g, (fanout, fanout), seed=seed)
+    batch = s.sample(np.arange(0, V, 7))
+    assert len(batch.layers) == 3  # seeds + one per fanout entry
+    for lo, hi in zip(batch.layers, batch.layers[1:]):
+        assert hi.size - lo.size <= fanout * lo.size
+        assert np.all(np.isin(lo, hi))  # cumulative
+
+    indptr, src = g.csr_in()
+    rng = np.random.default_rng(0)
+    for v in batch.layers[0][:16]:
+        picked = s.sample_in_neighbors([v], fanout, rng)
+        assert picked.size <= fanout
+        assert np.all(np.isin(picked, src[indptr[v]:indptr[v + 1]]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(fanout=st.integers(1, 5), seed=st.integers(0, 5))
+def test_subgraph_edges_subset_of_parent(fanout, seed):
+    """Every subgraph edge, mapped local->global, is a parent edge; and
+    the subgraph is vertex-INDUCED: it has every parent edge whose two
+    endpoints were both visited."""
+    from repro.core.sampling import NeighborSampler
+
+    g = _graph()
+    batch = NeighborSampler(g, (fanout, fanout), seed=seed).sample(
+        np.arange(0, V, 11))
+    sub = batch.subgraph
+    assert sub.num_vertices == batch.num_nodes
+    parent_edges = set(zip(g.src.tolist(), g.dst.tolist()))
+    mapped = set(zip(batch.nodes[sub.src].tolist(),
+                     batch.nodes[sub.dst].tolist()))
+    assert mapped <= parent_edges
+    # induced completeness: parent edges inside the node set all appear
+    node_set = set(batch.nodes.tolist())
+    inside = set((int(s), int(d)) for s, d in zip(g.src, g.dst)
+                 if s in node_set and d in node_set)
+    assert mapped == inside
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 7), fanout=st.integers(1, 4))
+def test_same_seed_identical_batches(seed, fanout):
+    """Same sampler seed + same seed set => identical nodes, edges and
+    fingerprint — even when the two samplers drew different batches
+    before (per-seed-set rng derivation)."""
+    from repro.core.sampling import NeighborSampler
+
+    g = _graph()
+    sa = NeighborSampler(g, (fanout, fanout), seed=seed)
+    sb = NeighborSampler(g, (fanout, fanout), seed=seed)
+    sb.sample(np.arange(0, 40))  # perturb sb's call history
+    seeds = np.arange(0, V, 5)
+    ba, bb = sa.sample(seeds), sb.sample(seeds)
+    np.testing.assert_array_equal(ba.nodes, bb.nodes)
+    np.testing.assert_array_equal(ba.subgraph.src, bb.subgraph.src)
+    np.testing.assert_array_equal(ba.subgraph.dst, bb.subgraph.dst)
+    assert ba.fingerprint() == bb.fingerprint()
+    # a different sampler seed is allowed to differ (and here does not
+    # have to), but a different SEED SET must change the fingerprint
+    assert sa.sample(seeds[:-1]).fingerprint() != ba.fingerprint()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed_v=st.integers(0, V - 1), depth=st.integers(1, 3))
+def test_full_fanout_covers_khop_neighborhood(seed_v, depth):
+    """fanout = -1 at every layer => the visited set is exactly the
+    closed k-hop in-neighborhood, and the induced subgraph carries all
+    of its internal edges."""
+    from repro.core.sampling import NeighborSampler
+
+    g = _graph()
+    batch = NeighborSampler(g, (-1,) * depth, seed=0).sample([seed_v])
+    ref = _khop_in_neighborhood(g, [seed_v], depth)
+    np.testing.assert_array_equal(batch.nodes, ref)
+
+
+def test_epoch_batches_partition_and_determinism():
+    from repro.core.sampling import NeighborSampler
+
+    g = _graph()
+    s = NeighborSampler(g, (2,), seed=9)
+    train = np.arange(0, V, 3)
+    batches = s.epoch_batches(train, 16, epoch=0)
+    # a partition: disjoint, complete, all within batch_size
+    got = np.sort(np.concatenate(batches))
+    np.testing.assert_array_equal(got, train)
+    assert all(b.size <= 16 for b in batches)
+    # deterministic per (seed, epoch); different epoch reshuffles
+    again = s.epoch_batches(train, 16, epoch=0)
+    assert all(np.array_equal(a, b) for a, b in zip(batches, again))
+    other = s.epoch_batches(train, 16, epoch=1)
+    assert any(not np.array_equal(a, b) for a, b in zip(batches, other))
+
+
+def test_induced_prepared_carries_parent_weights():
+    """Subgraphs induced from the parent PREPARED graph keep the
+    parent's per-edge weights — the degree normalization a truncated
+    subgraph cannot reproduce (GCN weights use both endpoints'
+    parent in-degrees)."""
+    from repro.core.gcn_models import gcn_prepare
+    from repro.core.sampling import csr_in_with_values, induce_in_edges
+
+    g = _graph()
+    g2, w = gcn_prepare(g)
+    indptr, src, wv = csr_in_with_values(g2, w)
+    nodes = np.unique(np.arange(0, V, 4).astype(np.int64))
+    sub, w_sub = induce_in_edges(indptr, src, wv, nodes, num_vertices=64)
+    assert sub.num_vertices == 64
+    # look up each induced edge in the parent and compare weights
+    parent = {}
+    for s_, d_, ww in zip(g2.src.tolist(), g2.dst.tolist(), w.tolist()):
+        parent[(s_, d_)] = ww  # duplicate edges share one prepared w
+    for s_, d_, ww in zip(nodes[sub.src], nodes[sub.dst], w_sub):
+        assert parent[(int(s_), int(d_))] == pytest.approx(float(ww))
+    # self loops (added by prepare) survive induction for every node
+    loops = set(zip(sub.src[sub.src == sub.dst].tolist(),
+                    sub.dst[sub.src == sub.dst].tolist()))
+    assert loops == {(i, i) for i in range(len(nodes))}
+
+
+def test_sampler_rejects_bad_inputs():
+    from repro.core.sampling import NeighborSampler
+
+    g = _graph()
+    with pytest.raises(ValueError):
+        NeighborSampler(g, (1, -2))
+    s = NeighborSampler(g, (1,))
+    with pytest.raises(ValueError):
+        s.sample([])
+    with pytest.raises(ValueError):
+        s.sample([V + 5])
+    with pytest.raises(ValueError):
+        s.epoch_batches(np.arange(8), 0)
+    batch = s.sample([0])
+    outside = np.setdiff1d(np.arange(V), batch.nodes)[0]
+    with pytest.raises(ValueError):
+        batch.local_of([outside])
