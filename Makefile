@@ -28,7 +28,9 @@ train:
 		--json /tmp/BENCH_gcn.json
 
 # neighbor-sampled mini-batch training smoke bench (per-batch subgraph
-# plans, batch-plan cache hit rate asserted > 0); scratch path as above
+# plans, batch-plan cache hit rate asserted > 0, feature-store hit rate
+# asserted > 0.5 with gathered bytes below the dense baseline); scratch
+# path as above
 train-sampled:
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-sampled \
 		--json /tmp/BENCH_gcn.json

@@ -102,13 +102,16 @@ def run_serve(json_path: str) -> int:
     plan upload) on 8 forced host devices, recording the machine-
     readable perf trajectory to ``json_path`` — suite, wall time,
     requests/sec, aggregation backend, link bytes, upload-overlap
-    fraction — so future PRs can diff serving perf against a baseline.
-    Runs in a subprocess so the device-count flag precedes jax init."""
+    fraction, feature-store hit rate (requests are store-backed under a
+    64 MiB device budget; hit rate asserted > 0) — so future PRs can
+    diff serving perf against a baseline. Runs in a subprocess so the
+    device-count flag precedes jax init."""
     root = Path(__file__).resolve().parent.parent
     env = _forced_host_env(root)
     cmd = [sys.executable, "-m", "repro.launch.gcn_serve",
            "--mesh", "2x2", "--graphs", "3", "--requests", "24",
-           "--batch", "4", "--json", json_path]
+           "--batch", "4", "--feature-budget", "64",
+           "--json", json_path]
     print(f"# serve: {' '.join(cmd)}", flush=True)
     r = subprocess.run(cmd, env=env, cwd=root)
     print(f"# serve -> {'OK' if r.returncode == 0 else 'FAIL'}", flush=True)
@@ -141,15 +144,18 @@ def run_train_sampled(json_path: str) -> int:
     full-batch plan is never built by training (the driver asserts it),
     and fixed seed sets must hit the batch-plan cache from epoch 2 on
     (asserted > 0: the smoke-level tripwire for subgraph-fingerprint
-    regressions). Records epoch wall, batch-plan cache hit rate and
-    the exchange bytes of one sampled step under ``"train-sampled"``."""
+    regressions). Features flow through the process-wide feature store
+    under a 64 MiB device budget (hit rate asserted > 0.5, gathered
+    bytes asserted below the dense-slice baseline). Records epoch wall,
+    batch-plan cache hit rate, feature-store hit rate/bytes and the
+    exchange bytes of one sampled step under ``"train-sampled"``."""
     root = Path(__file__).resolve().parent.parent
     env = _forced_host_env(root)
     cmd = [sys.executable, "-m", "repro.launch.gcn_train",
            "--mesh", "2x2", "--models", "gcn,gin,sage",
            "--scale", "9", "--epochs", "12", "--sampler",
            "--batch-size", "128", "--fanout", "8,8",
-           "--json", json_path]
+           "--feature-budget", "64", "--json", json_path]
     print(f"# train-sampled: {' '.join(cmd)}", flush=True)
     r = subprocess.run(cmd, env=env, cwd=root)
     print(f"# train-sampled -> {'OK' if r.returncode == 0 else 'FAIL'}",

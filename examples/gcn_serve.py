@@ -34,9 +34,12 @@ def main():
     assert len(reqs) == 9 and all(r.done for r in reqs)
 
     # every request matches its session's single-device oracle
+    # (requests are store-backed — r.feats is None — so the oracle
+    # input is the session's registered features, gathered through the
+    # feature store's device cache)
     for r in reqs:
         eng = svc.sessions[r.session]
-        ref = eng.reference(r.feats)
+        ref = eng.reference(svc.session_features(r.session).gather_all())
         err = np.max(np.abs(r.out - ref)) / (np.max(np.abs(ref)) + 1e-9)
         assert err < 1e-4, (r.session, err)
     st = svc.stats()

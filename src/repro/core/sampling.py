@@ -117,6 +117,15 @@ class SampledBatch:
             raise ValueError("global id not in the sampled node set")
         return pos
 
+    def feature_blocks(self, block_vertices: int) -> np.ndarray:
+        """Sorted unique feature-store block ids this batch touches
+        (block ``b`` covers global vertices ``[b*bv, (b+1)*bv)``). The
+        gather working set of a batch, in the feature store's unit of
+        admission — what determines its device-cache footprint."""
+        if block_vertices <= 0:
+            raise ValueError("block_vertices must be positive")
+        return np.unique(self.nodes // int(block_vertices))
+
     def fingerprint(self) -> str:
         """Content identity of the batch: parent size + node set + seed
         set. Two batches with equal fingerprints induce the same

@@ -5,7 +5,10 @@
 ``repro.gcn.cache`` owns every process-wide cache (plans, ELL layouts,
 prepared graphs, compiled layer steps) with byte-bounded LRU eviction;
 ``GCNService`` schedules batched multi-graph inference over shared
-sessions with async double-buffered plan upload; ``GCNTrainer``
+sessions with async double-buffered plan upload;
+``repro.gcn.featurestore`` is the storage tier — a process-wide
+``FeatureStore`` with a byte-budgeted, degree-ordered device cache
+that every consumer gathers vertex features through; ``GCNTrainer``
 (``repro.gcn.train``) trains full-batch node classification THROUGH the
 same exchange (its VJP is a reversed relay replay) and hands trained
 params to serving via ``GCNService.adopt``. ``register_model`` plugs
@@ -25,6 +28,11 @@ from repro.gcn.engine import (
     plan_cache_stats,
     resolve_agg_impl,
 )
+from repro.gcn.featurestore import (
+    FeatureHandle,
+    FeatureStore,
+    default_store,
+)
 from repro.gcn.registry import (
     ModelSpec,
     get_model,
@@ -43,6 +51,8 @@ from repro.gcn.train import (
 
 __all__ = [
     "BatchSession",
+    "FeatureHandle",
+    "FeatureStore",
     "FitReport",
     "GCNEngine",
     "GCNService",
@@ -53,6 +63,7 @@ __all__ = [
     "ServeRequest",
     "cache_stats",
     "clear_plan_cache",
+    "default_store",
     "get_model",
     "graph_fingerprint",
     "masked_cross_entropy",

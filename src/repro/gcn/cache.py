@@ -11,7 +11,8 @@ This is the middle layer of the session/cache/service split:
     uploads;
   * ``repro.gcn.service`` schedules requests across sessions on top.
 
-Five cache layers, all keyed off :class:`PlanKey`:
+Six cache layers, all keyed off :class:`PlanKey` (the feature layer off
+its graph-fingerprint component):
 
   ``plan``   ``PlanKey.plan_identity()`` -> ``CommPlan``. Byte-bounded
              LRU: the host-side relay schedules of many admitted graphs
@@ -37,11 +38,21 @@ Five cache layers, all keyed off :class:`PlanKey`:
              ``plan`` — sampled training exists to run under a plan
              budget the full-batch plan would not fit, so batch plans
              must never compete with full plans for one budget.
+  ``features``  ``(graph fingerprint, vertex block)`` -> device-resident
+             vertex-feature blocks (:mod:`repro.gcn.featurestore`): a
+             degree-ordered pinned hot tier plus an LRU cold tier over
+             one byte budget (``set_cache_budget(feature_bytes=...)``),
+             backed by a host column store. Owned by the process-wide
+             :func:`repro.gcn.featurestore.default_store`; this module
+             budgets/clears/reports it so the six layers stay one
+             coherent surface.
 
 Coherence contract: the three plan-derived layers can never outlive the plan
 they encode. Evicting or clearing a plan drops every ELL layout and
-compiled step built from it; :func:`invalidate_model` and
-:func:`clear_all` sweep all four layers in one call (this is the home of
+compiled step built from it — and releases the graph's device-resident
+feature blocks (the feature layer's host column store survives, so the
+graph re-warms through its cold tier); :func:`invalidate_model` and
+:func:`clear_all` sweep all layers in one call (this is the home of
 what used to be three separate, partially-coherent clears inside
 ``engine.py``).
 
@@ -266,6 +277,14 @@ def register_session(key: PlanKey, session) -> None:
                              weakref.WeakSet()).add(session)
 
 
+def _feature_layer():
+    """The process-wide feature store (lazy import: featurestore
+    imports this module at its top level)."""
+    from repro.gcn import featurestore
+
+    return featurestore.default_store()
+
+
 def _on_plan_evict(key: PlanKey, _plan):
     # coherence: a plan's derived encodings and compiled executors can
     # never outlive it — else a re-admitted graph could pair a FRESH
@@ -274,6 +293,9 @@ def _on_plan_evict(key: PlanKey, _plan):
     _ELL.drop(lambda k: k.plan_identity() == key)
     deps = _STEP_DEPS.pop(key, set())
     _STEPS.drop(lambda k: k in deps)
+    # the evicted graph stops holding device feature bytes too; its
+    # host column store survives and re-warms through the cold tier
+    _feature_layer().release_device(key.graph_fp)
     for session in list(_SESSIONS.pop(key, ())):
         session._release_plan_memos()
 
@@ -314,9 +336,13 @@ def set_cache_budget(*, plan_bytes: int | None = ...,
                      ell_bytes: int | None = ...,
                      prep_bytes: int | None = ...,
                      step_entries: int | None = ...,
-                     batch_bytes: int | None = ...) -> None:
+                     batch_bytes: int | None = ...,
+                     feature_bytes: int | None = ...) -> None:
     """Reconfigure the byte budgets (``None`` = unbounded; omitted
-    fields keep their current value). Shrinks immediately."""
+    fields keep their current value). Shrinks immediately —
+    ``feature_bytes`` unpins/evicts device feature blocks down to the
+    new budget (see :meth:`repro.gcn.featurestore.FeatureStore.
+    set_budget`)."""
     with _LOCK:
         if plan_bytes is not ...:
             _PLANS.budget_bytes = plan_bytes
@@ -328,6 +354,8 @@ def set_cache_budget(*, plan_bytes: int | None = ...,
             _STEPS.max_entries = step_entries
         if batch_bytes is not ...:
             _BATCH.budget_bytes = batch_bytes
+        if feature_bytes is not ...:
+            _feature_layer().set_budget(feature_bytes)
         for store in (_PLANS, _ELL, _PREP, _STEPS, _BATCH):
             store._shrink()
 
@@ -426,12 +454,15 @@ def batch_cached(key) -> bool:
 
 def clear_all() -> None:
     """Drop every layer (plans, ELL layouts, prepared graphs, compiled
-    steps) and reset all counters — the one coherent clear. Live
-    sessions are released too (same hook as budget eviction), so the
-    memory actually returns; they transparently rebuild on next use."""
+    steps, feature registrations) and reset all counters — the one
+    coherent clear. Live sessions are released too (same hook as budget
+    eviction), so the memory actually returns; they transparently
+    rebuild on next use. Outstanding feature handles go stale
+    (re-register after clearing)."""
     with _LOCK:
         for store in (_PLANS, _ELL, _PREP, _STEPS, _BATCH):
             store.clear()
+        _feature_layer().clear()
         _STEP_DEPS.clear()
         for sessions in list(_SESSIONS.values()):
             for session in list(sessions):
@@ -458,11 +489,13 @@ def invalidate_model(name: str) -> None:
 
 def cache_stats() -> dict:
     """Per-layer ``{entries, bytes, budget_bytes, hits, misses,
-    evictions}`` plus the legacy flat counters (``hits``/``misses``
-    track the plan layer, as they always have)."""
+    evictions}`` — the ``features`` layer adds its row/byte telemetry
+    and per-graph admission ranks — plus the legacy flat counters
+    (``hits``/``misses`` track the plan layer, as they always have)."""
     with _LOCK:
         out = {s.name: s.stats()
                for s in (_PLANS, _ELL, _PREP, _STEPS, _BATCH)}
+        out["features"] = _feature_layer().layer_stats()
         out.update(hits=_PLANS.hits, misses=_PLANS.misses,
                    entries=len(_PLANS._d), ell_entries=len(_ELL._d))
         return out

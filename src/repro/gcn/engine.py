@@ -500,13 +500,36 @@ class GCNEngine:
         """(V, F) global features -> (*dims, Vp, F) node-major layout."""
         return mp.shard_features(self.plan, np.asarray(feats_global))
 
+    def _resolve_feature_source(self, feats):
+        """A :class:`~repro.gcn.featurestore.FeatureHandle` resolves to
+        its full ``(V, F)`` table through the store (device-resident hot
+        blocks hit; absent rows gather from the host column store —
+        full-graph execution is full-V by nature, the SAMPLED path
+        gathers per batch instead); anything else passes through."""
+        from repro.gcn import featurestore
+
+        if isinstance(feats, featurestore.FeatureHandle):
+            if feats.num_vertices != self.graph.num_vertices:
+                raise ValueError(
+                    f"feature handle covers V={feats.num_vertices}, "
+                    f"engine graph has V={self.graph.num_vertices}")
+            if feats.graph_fp != self.graph_fp:
+                raise ValueError(
+                    "feature handle is registered for a different graph "
+                    f"({feats.graph_fp[:12]} != {self.graph_fp[:12]})")
+            return feats.gather_all()
+        return feats
+
     def _shard_input(self, feats) -> tuple:
         """Validate + normalize a feature input: a global ``(V, F)``
         host array is sharded onto the mesh, a pre-sharded ``(*dims,
-        Vp, F)`` device array passes through. Returns ``(x,
-        is_global)`` — the ONE dispatch ``forward``, ``loss_and_grad``
-        and the trainer all share, so the input contract can never
-        diverge between inference and training."""
+        Vp, F)`` device array passes through, and a
+        :class:`~repro.gcn.featurestore.FeatureHandle` is gathered
+        through the store first. Returns ``(x, is_global)`` — the ONE
+        dispatch ``forward``, ``loss_and_grad`` and the trainer all
+        share, so the input contract can never diverge between
+        inference and training."""
+        feats = self._resolve_feature_source(feats)
         nd = len(self.dims)
         feats_nd = np.ndim(feats)
         if feats_nd == 2:
@@ -529,9 +552,12 @@ class GCNEngine:
     def forward(self, feats, params=None, *, agg_impl: str | None = None):
         """Run the full network through the compiled exchange.
 
-        ``feats`` is either a global ``(V, F)`` host array (returns a
-        global ``(V, F_out)`` numpy array) or a pre-sharded
-        ``(*dims, Vp, F)`` device array (returns the sharded result).
+        ``feats`` is a global ``(V, F)`` host array (returns a global
+        ``(V, F_out)`` numpy array), a pre-sharded ``(*dims, Vp, F)``
+        device array (returns the sharded result), or a
+        :class:`~repro.gcn.featurestore.FeatureHandle` (the rows are
+        served through the store's device-resident cache; numerically
+        identical to passing the registered array).
         ``agg_impl`` overrides the engine's aggregation backend for this
         call ("jnp" | "pallas" | "auto"); switching never replans — only
         the Compute step's encoding changes.
@@ -551,8 +577,10 @@ class GCNEngine:
         per layer.
 
         ``feats_batch`` is ``(B, V, F)`` global host features (B
-        independent requests over the same graph and params); returns
-        ``(B, V, F_out)``. The distributed exchange is linear and
+        independent requests over the same graph and params) or a
+        :class:`~repro.gcn.featurestore.FeatureHandle` (one request
+        over the store-registered features, gathered through the
+        device-resident cache); returns ``(B, V, F_out)``. The distributed exchange is linear and
         independent per feature column, so the batch folds into the
         feature axis — all B requests share each round's ppermute relay
         (one launch moving B x the payload, the bandwidth-friendly
@@ -573,7 +601,11 @@ class GCNEngine:
         """
         impl = self._impl(agg_impl)
         params = self._resolve_params(params)
-        fb = np.asarray(feats_batch)
+        resolved = self._resolve_feature_source(feats_batch)
+        if resolved is not feats_batch:
+            # a store handle is one request over the registered features
+            resolved = resolved[None]
+        fb = np.asarray(resolved)
         if fb.ndim != 3 or fb.shape[1] != self.graph.num_vertices:
             raise ValueError(
                 f"feats_batch must be (B, V={self.graph.num_vertices}, F); "
@@ -707,7 +739,17 @@ class GCNEngine:
           implementation materializes the gathered message array via XLA
           before the pallas_call, adding roughly one extra message-
           stream write+read until the gather is fused into the kernel
-          (tracked in ROADMAP.md).
+          (tracked in ROADMAP.md);
+        * ``feature_byte_reduction`` — MEASURED feature-byte savings of
+          the storage tier (:mod:`repro.gcn.featurestore`): ``1 -
+          feature_bytes_gathered / feature_bytes_dense`` for this
+          graph's access history, where ``gathered`` counts what was
+          actually read from the host tier and ``dense`` is the
+          dense-slice baseline (every accessed row read from host every
+          time — the pre-store code path). The storage-side companion
+          of ``agg_traffic_reduction`` under the paper's 73 %
+          off-chip-access-reduction claim; all zeros until features are
+          registered with the process-wide store.
         """
         plan = self.plan
         if feat_dim is None:
@@ -750,6 +792,17 @@ class GCNEngine:
                 self._bucket_hits / self._bucket_calls
                 if self._bucket_calls else 0.0),
             batch_buckets=sorted({b for (_, b, _) in self._batch_buckets}),
+        )
+        from repro.gcn import featurestore
+
+        fs = featurestore.default_store().graph_stats(self.graph_fp)
+        out.update(
+            feature_hit_rate=fs["hit_rate"],
+            feature_bytes_gathered=fs["gathered_bytes"],
+            feature_bytes_dense=fs["dense_bytes"],
+            feature_byte_reduction=(
+                1.0 - fs["gathered_bytes"] / fs["dense_bytes"]
+                if fs["dense_bytes"] else 0.0),
         )
         return out
 

@@ -1,0 +1,456 @@
+"""Process-wide feature store: the storage tier under the GCN stack.
+
+The paper's core observation (§III) is that large-graph GCN execution is
+dominated by redundant movement of the same power-law-hot vertex
+features — its multicast mechanism cuts 73 % of off-chip accesses by
+exploiting exactly that reuse. This module is the repro's storage-side
+analog: vertex features live behind a byte-budgeted, device-resident
+hot-vertex cache instead of being handed around as dense ``(V, F)``
+host arrays and re-sliced per batch.
+
+Two device tiers over one host-backed column store:
+
+  * **hot tier** — degree-ordered admission: at :meth:`FeatureStore.
+    register` the vertex blocks (``block_vertices`` rows each) are
+    ranked by total in-degree and the hottest blocks are *pinned*
+    on device, in rank order, up to ``hot_fraction`` of the byte
+    budget. Power-law graphs concentrate most feature reads in the
+    top-ranked blocks, so the pins alone absorb the bulk of traffic
+    (the paper's hub-reuse observation, applied to storage).
+  * **cold tier** — a byte-bounded LRU (:class:`repro.gcn.cache.
+    _LruStore`, the same machinery as the plan/ELL/prep/batch layers)
+    over the remaining budget: a missed block is admitted on first
+    touch and evicted least-recently-used.
+  * **column store** — the host tier: features are held as per-block
+    row chunks, so a miss gathers the touched blocks (or just the
+    touched rows, when a block cannot fit the budget) instead of
+    fancy-indexing one dense global array.
+
+Keys are ``(graph fingerprint, vertex block)`` — two graphs' blocks can
+never collide, and evicting a graph's *plan* releases its cached device
+blocks too (the cache layer's eviction cascade calls
+:meth:`FeatureStore.release_device`; the host column store survives, so
+the graph simply re-warms through the cold tier).
+
+The module-level default store is the process-wide instance the cache
+layer budgets (``set_cache_budget(feature_bytes=...)``), reports
+(``cache_stats()["features"]``) and clears (``clear_plan_cache()``);
+standalone :class:`FeatureStore` instances are self-contained (own lock,
+own budget) for tests and tooling.
+
+Telemetry is row-honest: ``hit_rows`` / ``miss_rows`` count served rows
+by tier, ``gathered_bytes`` counts exactly what was read from the host
+tier (full blocks on admission, touched rows when admission is
+impossible), and ``dense_bytes`` is the dense-slice baseline — what the
+pre-store code path would have read from host for the same access
+sequence. ``1 - gathered/dense`` is the measured feature-byte
+reduction ``GCNEngine.stats`` reports next to ``agg_traffic_reduction``.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.gcn import cache
+
+__all__ = ["FeatureHandle", "FeatureStore", "default_store"]
+
+
+@dataclass(frozen=True, eq=False)
+class FeatureHandle:
+    """A registered graph's feature source — what ``forward`` /
+    ``forward_batched`` / ``fit_sampled`` accept in place of a dense
+    ``(V, F)`` array. Thin and immutable: all state lives in the
+    store."""
+
+    store: "FeatureStore"
+    graph_fp: str
+    num_vertices: int
+    feat_dim: int
+    block_vertices: int
+
+    def gather(self, nodes) -> np.ndarray:
+        """Rows for ``nodes`` (global ids) -> ``(len(nodes), F)`` f32,
+        served from device-resident blocks where possible."""
+        return self.store.gather(self.graph_fp, nodes)
+
+    def gather_all(self) -> np.ndarray:
+        """The full ``(V, F)`` table (full-graph inference/eval path —
+        the sampled training path must never need this)."""
+        return self.store.gather_all(self.graph_fp)
+
+    def stats(self) -> dict:
+        return self.store.graph_stats(self.graph_fp)
+
+
+@dataclass
+class _GraphFeatures:
+    """One registration: host column store + degree ranking + pins."""
+
+    graph_fp: str
+    feat_fp: str  # content hash of the registered features (reuse check)
+    num_vertices: int
+    feat_dim: int
+    block_vertices: int
+    blocks: list  # host column store: per-block (<=bv, F) f32 chunks
+    rank: np.ndarray  # block ids, hottest (highest in-degree mass) first
+    rank_of: np.ndarray  # block id -> admission rank
+    pinned: dict = field(default_factory=dict)  # block id -> device array
+    # row-honest counters (per graph, so engine.stats can report them)
+    hits: int = 0  # block accesses served device-resident
+    misses: int = 0  # block accesses that touched the host tier
+    hit_rows: int = 0
+    miss_rows: int = 0
+    gathered_bytes: int = 0  # bytes actually read from the host tier
+    dense_bytes: int = 0  # dense-slice baseline for the same accesses
+    full_gathers: int = 0  # gather_all calls (sampled training: zero)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def rowbytes(self) -> int:
+        return self.feat_dim * 4  # float32
+
+
+class FeatureStore:
+    """Byte-budgeted vertex-feature cache: pinned hot tier + LRU cold
+    tier over a host-backed column store. See the module docstring for
+    the design; :func:`default_store` for the process-wide instance."""
+
+    def __init__(self, *, budget_bytes: int | None = 64 << 20,
+                 block_vertices: int = 64, hot_fraction: float = 0.5,
+                 lock=None):
+        self.lock = lock if lock is not None else threading.RLock()
+        self.budget_bytes = budget_bytes
+        self.block_vertices = int(block_vertices)
+        self.hot_fraction = float(hot_fraction)
+        self._graphs: dict[str, _GraphFeatures] = {}
+        # pin log in admission order (newest last): budget shrinks unpin
+        # LIFO, so the hottest earliest-admitted blocks survive longest
+        self._pin_log: list[tuple[str, int, int]] = []
+        self._hot_bytes = 0
+        self._cold = cache._LruStore("features-cold", self.lock,
+                                     budget_bytes=None)
+        self._set_cold_budget()
+
+    # ---------------- registration ----------------
+
+    def register(self, graph: Graph, feats, *, graph_fp: str | None = None,
+                 block_vertices: int | None = None) -> FeatureHandle:
+        """Register ``graph``'s vertex features; returns the handle the
+        engine/trainer/service consume.
+
+        The features are split into ``block_vertices``-row host chunks
+        (the column store) and the blocks are ranked by total in-degree;
+        the hottest blocks are pinned on device immediately, in rank
+        order, until ``hot_fraction`` of the byte budget is spent.
+        Re-registering identical content is a no-op returning an equal
+        handle; changed content (or block shape) drops the old device
+        blocks and replaces the column store."""
+        feats = np.ascontiguousarray(np.asarray(feats, np.float32))
+        if feats.ndim != 2 or feats.shape[0] != graph.num_vertices:
+            raise ValueError(
+                f"feats must be (V={graph.num_vertices}, F); "
+                f"got {feats.shape}")
+        fp = graph_fp if graph_fp is not None \
+            else cache.graph_fingerprint(graph)
+        bv = int(block_vertices) if block_vertices else self.block_vertices
+        feat_fp = hashlib.sha1(feats.tobytes()).hexdigest()
+        with self.lock:
+            g = self._graphs.get(fp)
+            if (g is not None and g.feat_fp == feat_fp
+                    and g.block_vertices == bv):
+                return self._handle(g)  # identical content: keep the warm tiers
+            if g is not None:
+                self._release_device_locked(fp)
+            V, F = feats.shape
+            blocks = [feats[lo:lo + bv] for lo in range(0, V, bv)]
+            mass = np.add.reduceat(
+                graph.in_degrees().astype(np.int64), np.arange(0, V, bv))
+            rank = np.argsort(-mass, kind="stable").astype(np.int64)
+            rank_of = np.empty_like(rank)
+            rank_of[rank] = np.arange(rank.size)
+            g = _GraphFeatures(fp, feat_fp, V, F, bv, blocks, rank, rank_of)
+            self._graphs[fp] = g
+            self._pin_hot(g)
+            return self._handle(g)
+
+    def _handle(self, g: _GraphFeatures) -> FeatureHandle:
+        return FeatureHandle(self, g.graph_fp, g.num_vertices, g.feat_dim,
+                             g.block_vertices)
+
+    def handle_for(self, graph_fp: str) -> FeatureHandle | None:
+        """The handle for an already-registered graph, else None."""
+        with self.lock:
+            g = self._graphs.get(graph_fp)
+            return self._handle(g) if g is not None else None
+
+    def _hot_cap(self) -> int | None:
+        if self.budget_bytes is None:
+            return None  # unbounded: pin everything
+        return int(self.budget_bytes * self.hot_fraction)
+
+    def _pin_hot(self, g: _GraphFeatures) -> None:
+        """Degree-ordered admission: pin blocks hottest-first while the
+        hot tier's share of the budget holds them."""
+        cap = self._hot_cap()
+        for blk in g.rank:
+            blk = int(blk)
+            nb = g.blocks[blk].nbytes
+            if cap is not None and self._hot_bytes + nb > cap:
+                break  # rank order: everything colder is at most as hot
+            g.pinned[blk] = jnp.asarray(g.blocks[blk])
+            self._pin_log.append((g.graph_fp, blk, nb))
+            self._hot_bytes += nb
+        self._set_cold_budget()
+        # new pins squeeze the cold tier: evict immediately so the
+        # device-bytes invariant holds across registrations too
+        self._cold._shrink()
+        if (self._cold.budget_bytes is not None
+                and self._cold.total_bytes > self._cold.budget_bytes):
+            self._cold.drop(lambda k: True)
+
+    # ---------------- budget ----------------
+
+    def _set_cold_budget(self) -> None:
+        self._cold.budget_bytes = (
+            None if self.budget_bytes is None
+            else max(self.budget_bytes - self._hot_bytes, 0))
+
+    def set_budget(self, budget_bytes: int | None) -> None:
+        """Reconfigure the device byte budget (None = unbounded) and
+        shrink immediately: pins are released newest-first until the hot
+        tier fits, then the cold LRU evicts down to the remainder. The
+        invariant ``device_bytes <= budget`` holds on return."""
+        with self.lock:
+            self.budget_bytes = budget_bytes
+            if budget_bytes is not None:
+                while self._pin_log and self._hot_bytes > budget_bytes:
+                    fp, blk, nb = self._pin_log.pop()
+                    g = self._graphs.get(fp)
+                    if g is not None:
+                        g.pinned.pop(blk, None)
+                    self._hot_bytes -= nb
+            self._set_cold_budget()
+            self._cold._shrink()
+            # _shrink keeps >=1 entry even over budget (right for plans,
+            # wrong here): a stranded block must go for the invariant
+            if (self._cold.budget_bytes is not None
+                    and self._cold.total_bytes > self._cold.budget_bytes):
+                self._cold.drop(lambda k: True)
+
+    @property
+    def device_bytes(self) -> int:
+        """Total device-resident feature bytes (hot pins + cold LRU) —
+        never exceeds ``budget_bytes``."""
+        with self.lock:
+            return self._hot_bytes + self._cold.total_bytes
+
+    # ---------------- the gather path ----------------
+
+    def gather(self, graph_fp: str, nodes) -> np.ndarray:
+        """Assemble rows for ``nodes`` (global vertex ids): pinned and
+        cold-resident blocks serve as hits; absent blocks gather from
+        the host column store (admitting the block to the cold tier
+        when it fits the remaining budget)."""
+        nodes = np.asarray(nodes, np.int64)
+        with self.lock:
+            g = self._graphs.get(graph_fp)
+            if g is None:
+                raise KeyError(f"graph {graph_fp!r} is not registered")
+            if nodes.size == 0:
+                return np.empty((0, g.feat_dim), np.float32)
+            if nodes.min() < 0 or nodes.max() >= g.num_vertices:
+                raise ValueError(
+                    f"node ids out of range [0, {g.num_vertices})")
+            out = np.empty((nodes.size, g.feat_dim), np.float32)
+            blk_of = nodes // g.block_vertices
+            for blk in np.unique(blk_of):
+                blk = int(blk)
+                sel = blk_of == blk
+                local = nodes[sel] - blk * g.block_vertices
+                rows = int(sel.sum())
+                g.dense_bytes += rows * g.rowbytes
+                dev = self._resident_block(g, blk)
+                if dev is not None:
+                    g.hits += 1
+                    g.hit_rows += rows
+                    out[sel] = np.asarray(dev)[local]
+                    continue
+                g.misses += 1
+                g.miss_rows += rows
+                host = g.blocks[blk]
+                out[sel] = host[local]
+                self._admit_cold(g, blk, host, touched_rows=rows)
+            return out
+
+    def gather_all(self, graph_fp: str) -> np.ndarray:
+        """The full ``(V, F)`` table (counts every block access) — the
+        full-graph inference/eval path. Sampled training never calls
+        this; ``stats()['full_gathers']`` pins that."""
+        with self.lock:
+            g = self._graphs.get(graph_fp)
+            if g is None:
+                raise KeyError(f"graph {graph_fp!r} is not registered")
+            g.full_gathers += 1
+            return self.gather(graph_fp, np.arange(g.num_vertices))
+
+    def _resident_block(self, g: _GraphFeatures, blk: int):
+        dev = g.pinned.get(blk)
+        if dev is not None:
+            return dev
+        key = (g.graph_fp, blk)
+        if self._cold.peek(key):
+            # present: this get can only hit (lock held, no eviction race)
+            return self._cold.get(key, lambda: None)
+        return None
+
+    def _admit_cold(self, g: _GraphFeatures, blk: int, host: np.ndarray,
+                    *, touched_rows: int) -> None:
+        """Miss path: admit the block to the cold LRU when it can fit
+        (reading the whole block from host), else serve the touched
+        rows straight from host. ``gathered_bytes`` counts exactly what
+        the host tier was asked for."""
+        nb = host.nbytes
+        cb = self._cold.budget_bytes
+        if cb is None or nb <= cb:
+            self._cold.get((g.graph_fp, blk), lambda: jnp.asarray(host),
+                           nbytes=lambda _: nb)
+            g.gathered_bytes += nb
+        else:
+            g.gathered_bytes += touched_rows * g.rowbytes
+
+    # ---------------- release / clearing ----------------
+
+    def _release_device_locked(self, graph_fp: str) -> int:
+        g = self._graphs.get(graph_fp)
+        dropped = 0
+        if g is not None and g.pinned:
+            for blk in list(g.pinned):
+                g.pinned.pop(blk)
+                dropped += 1
+            kept = []
+            for fp, blk, nb in self._pin_log:
+                if fp == graph_fp:
+                    self._hot_bytes -= nb
+                else:
+                    kept.append((fp, blk, nb))
+            self._pin_log = kept
+        dropped += self._cold.drop(lambda k: k[0] == graph_fp)
+        self._set_cold_budget()
+        return dropped
+
+    def release_device(self, graph_fp: str) -> int:
+        """Drop the graph's device-resident blocks (pins + cold entries)
+        but KEEP its host column store — the plan-eviction cascade: an
+        evicted graph stops holding device bytes, yet its features stay
+        gatherable and re-warm through the cold tier on next touch.
+        Returns the number of blocks dropped."""
+        with self.lock:
+            return self._release_device_locked(graph_fp)
+
+    def drop(self, graph_fp: str) -> None:
+        """Forget a registration entirely (device blocks AND the host
+        column store); outstanding handles go stale."""
+        with self.lock:
+            self._release_device_locked(graph_fp)
+            self._graphs.pop(graph_fp, None)
+
+    def clear(self) -> None:
+        """Drop every registration, device block and counter — the
+        store's slice of ``repro.gcn.cache.clear_all``."""
+        with self.lock:
+            self._graphs.clear()
+            self._pin_log.clear()
+            self._hot_bytes = 0
+            self._cold.clear()
+            self._set_cold_budget()
+
+    # ---------------- telemetry ----------------
+
+    def graph_stats(self, graph_fp: str) -> dict:
+        """Row-honest counters for ONE graph (zeros when unregistered):
+        what ``GCNEngine.stats`` folds in as the measured feature-byte
+        reduction."""
+        with self.lock:
+            g = self._graphs.get(graph_fp)
+            if g is None:
+                return {"registered": False, "blocks": 0, "pinned": 0,
+                        "hits": 0, "misses": 0, "hit_rows": 0,
+                        "miss_rows": 0, "gathered_bytes": 0,
+                        "dense_bytes": 0, "hit_rate": 0.0,
+                        "full_gathers": 0, "pinned_ranks": []}
+            rows = g.hit_rows + g.miss_rows
+            return {
+                "registered": True,
+                "blocks": g.num_blocks,
+                "pinned": len(g.pinned),
+                "hits": g.hits, "misses": g.misses,
+                "hit_rows": g.hit_rows, "miss_rows": g.miss_rows,
+                "gathered_bytes": g.gathered_bytes,
+                "dense_bytes": g.dense_bytes,
+                "hit_rate": g.hit_rows / rows if rows else 0.0,
+                "full_gathers": g.full_gathers,
+                # admission-rank telemetry: the ranks of the pinned
+                # blocks (degree-ordered admission => a prefix 0..k-1)
+                "pinned_ranks": sorted(
+                    int(g.rank_of[b]) for b in g.pinned),
+            }
+
+    def layer_stats(self) -> dict:
+        """The ``features`` layer of ``cache_stats()``: the common
+        per-layer schema (entries/bytes/budget/hits/misses/evictions)
+        plus the store's row/byte telemetry and per-graph admission
+        ranks."""
+        with self.lock:
+            gs = list(self._graphs.values())
+            hit_rows = sum(g.hit_rows for g in gs)
+            miss_rows = sum(g.miss_rows for g in gs)
+            pinned_entries = sum(len(g.pinned) for g in gs)
+            return {
+                "entries": pinned_entries + len(self._cold._d),
+                "bytes": self._hot_bytes + self._cold.total_bytes,
+                "budget_bytes": self.budget_bytes,
+                "hits": sum(g.hits for g in gs),
+                "misses": sum(g.misses for g in gs),
+                "evictions": self._cold.evictions,
+                "graphs": len(gs),
+                "pinned_entries": pinned_entries,
+                "pinned_bytes": self._hot_bytes,
+                "hit_rows": hit_rows,
+                "miss_rows": miss_rows,
+                "hit_rate": (hit_rows / (hit_rows + miss_rows)
+                             if hit_rows + miss_rows else 0.0),
+                "gathered_bytes": sum(g.gathered_bytes for g in gs),
+                "dense_bytes": sum(g.dense_bytes for g in gs),
+                "admission": {g.graph_fp[:12]: {
+                    "blocks": g.num_blocks,
+                    "pinned_ranks": sorted(
+                        int(g.rank_of[b]) for b in g.pinned),
+                } for g in gs},
+            }
+
+
+# ---------------------------------------------------------------------------
+# The process-wide instance (what repro.gcn.cache budgets/clears/reports)
+# ---------------------------------------------------------------------------
+
+# shares the cache module's lock so budget changes, plan-eviction
+# cascades and stats snapshots stay mutually coherent with the other
+# five layers
+_DEFAULT = FeatureStore(lock=cache._LOCK)
+
+
+def default_store() -> FeatureStore:
+    """The process-wide store: ``set_cache_budget(feature_bytes=...)``
+    budgets it, ``cache_stats()['features']`` reports it,
+    ``clear_plan_cache()`` clears it, and plan eviction releases its
+    device blocks per graph."""
+    return _DEFAULT

@@ -60,7 +60,10 @@ class ServeRequest:
 
     rid: int
     session: str
-    feats: np.ndarray  # (V, F) global host features
+    # (V, F) global host features, or None for a store-backed request
+    # (served from the session's registered features through the
+    # process-wide feature store's device-resident cache)
+    feats: np.ndarray | None
     out: np.ndarray | None = None  # (V, F_out) once done
     done: bool = False
     # timing (perf_counter seconds; t_done - t_submit = request latency)
@@ -132,6 +135,9 @@ class GCNService:
         if plan_budget_bytes is not None:
             cache.set_cache_budget(plan_bytes=int(plan_budget_bytes))
         self.sessions: dict[str, GCNEngine] = {}
+        # per-session feature-store handle (None = no registered
+        # features; submit() then requires a per-request array)
+        self._feat_handles: dict[str, object] = {}
         self.queue: list[ServeRequest] = []
         self._next_rid = 0
         self._prefetch: _Prefetch | None = None
@@ -145,13 +151,20 @@ class GCNService:
 
     def admit(self, name: str, cfg: GCNConfig, graph: Graph, *,
               layer_dims: Sequence[int] | None = None, params=None,
-              seed: int = 0) -> GCNEngine:
+              seed: int = 0, features=None) -> GCNEngine:
         """Register graph ``graph`` under ``name`` as a servable session
         on the service's mesh. Either pass trained ``params`` or
         ``layer_dims`` (``[feat_in, hidden..., out]``) to initialize
         fresh ones from ``seed``. Admission is host-side bookkeeping
         only — the plan is built (or found in the shared cache) on first
-        execution or prefetch."""
+        execution or prefetch.
+
+        ``features`` (a global ``(V, F)`` array or an existing
+        :class:`~repro.gcn.featurestore.FeatureHandle`) registers the
+        graph's vertex features with the process-wide feature store, so
+        ``submit(name)`` (no per-request array) serves them through the
+        device-resident hot-vertex cache — repeated requests against
+        the same hot vertices stop re-reading host memory."""
         if name in self.sessions:
             raise ValueError(f"session {name!r} already admitted")
         eng = GCNEngine.build(cfg, graph, self.dims,
@@ -162,10 +175,36 @@ class GCNService:
             eng.init_params(jax.random.PRNGKey(seed), list(layer_dims))
         self.sessions[name] = eng
         self._bucket_base[name] = (eng._bucket_calls, eng._bucket_hits)
+        self._attach_features(name, eng, features)
         return eng
 
+    def _attach_features(self, name: str, eng: GCNEngine,
+                         features) -> None:
+        """Resolve a session's store-backed feature source: an explicit
+        array registers (content-hashed — identical re-registration
+        keeps the warm tiers), a handle attaches as-is, and ``None``
+        adopts whatever the process-wide store already holds for the
+        graph (the train->serve handoff: the trainer registered them)."""
+        from repro.gcn import featurestore
+
+        store = featurestore.default_store()
+        if features is None:
+            self._feat_handles[name] = store.handle_for(eng.graph_fp)
+        elif isinstance(features, featurestore.FeatureHandle):
+            self._feat_handles[name] = features
+        else:
+            self._feat_handles[name] = store.register(
+                eng.graph, features, graph_fp=eng.graph_fp)
+
+    def session_features(self, name: str):
+        """The session's store-registered
+        :class:`~repro.gcn.featurestore.FeatureHandle` (None if it has
+        none) — what a store-backed ``submit(name)`` serves; gather
+        through it to reproduce those requests' inputs exactly."""
+        return self._feat_handles.get(name)
+
     def adopt(self, name: str, engine: GCNEngine, *,
-              params=None) -> GCNEngine:
+              params=None, features=None) -> GCNEngine:
         """Admit an EXISTING session object — the train->serve handoff.
 
         A :class:`~repro.gcn.train.GCNTrainer` leaves its trained params
@@ -175,7 +214,11 @@ class GCNService:
         ``repro.gcn.cache``) carry over as-is, so serving starts without
         replanning or re-uploading. The engine must live on this
         service's mesh dims; pass ``params=`` to override what it
-        carries."""
+        carries. Feature handoff rides along: features the trainer
+        registered with the process-wide store (``fit_sampled`` does so
+        automatically) attach to the session, so store-backed requests
+        serve them warm; pass ``features=`` to register/override
+        explicitly."""
         if name in self.sessions:
             raise ValueError(f"session {name!r} already admitted")
         if engine.dims != self.dims:
@@ -190,6 +233,7 @@ class GCNService:
         self.sessions[name] = engine
         self._bucket_base[name] = (engine._bucket_calls,
                                    engine._bucket_hits)
+        self._attach_features(name, engine, features)
         return engine
 
     def evict(self, name: str) -> None:
@@ -198,6 +242,7 @@ class GCNService:
         unconditionally). The shared caches keep its plan until byte
         pressure evicts it."""
         eng = self.sessions.pop(name, None)
+        self._feat_handles.pop(name, None)
         if eng is not None:
             # retire the session's bucket counts so stats() history
             # survives eviction instead of vanishing with the session
@@ -208,15 +253,27 @@ class GCNService:
 
     # ---------------- request queue ----------------
 
-    def submit(self, name: str, feats: np.ndarray) -> ServeRequest:
-        """Enqueue one (V, F) feature-inference request; returns the
-        request handle (``.out`` is filled when served)."""
+    def submit(self, name: str,
+               feats: np.ndarray | None = None) -> ServeRequest:
+        """Enqueue one feature-inference request; returns the request
+        handle (``.out`` is filled when served). ``feats`` is a (V, F)
+        per-request array, or ``None`` to serve the session's
+        store-registered features (admitted with ``features=``) through
+        the feature store's device-resident cache — the recurring
+        hot-vertex workload the storage tier exists for."""
         eng = self.sessions[name]  # KeyError = not admitted, on purpose
-        feats = np.asarray(feats)
-        if feats.ndim != 2 or feats.shape[0] != eng.graph.num_vertices:
-            raise ValueError(
-                f"request for {name!r} must be (V={eng.graph.num_vertices}"
-                f", F); got {feats.shape}")
+        if feats is None:
+            if self._feat_handles.get(name) is None:
+                raise ValueError(
+                    f"session {name!r} has no store-registered features; "
+                    "admit with features= or pass a per-request array")
+        else:
+            feats = np.asarray(feats)
+            if (feats.ndim != 2
+                    or feats.shape[0] != eng.graph.num_vertices):
+                raise ValueError(
+                    f"request for {name!r} must be "
+                    f"(V={eng.graph.num_vertices}, F); got {feats.shape}")
         req = ServeRequest(self._next_rid, name, feats,
                            t_submit=time.perf_counter())
         self._next_rid += 1
@@ -226,13 +283,17 @@ class GCNService:
     def _pop_batch(self) -> list[ServeRequest]:
         """Head-of-line batch: the oldest request plus up to
         ``max_batch - 1`` later requests that are compatible with it
-        (same session, same feature shape). Order is preserved for the
-        rest of the queue."""
+        (same session, same feature shape; store-backed requests batch
+        with store-backed requests — they share one gather). Order is
+        preserved for the rest of the queue."""
+        def shape(r):
+            return None if r.feats is None else r.feats.shape
+
         head = self.queue[0]
         batch, rest = [head], []
         for r in self.queue[1:]:
             if (len(batch) < self.max_batch and r.session == head.session
-                    and r.feats.shape == head.feats.shape):
+                    and shape(r) == shape(head)):
                 batch.append(r)
             else:
                 rest.append(r)
@@ -343,7 +404,13 @@ class GCNService:
             self._count_upload(self._upload(eng), was_async=False)
         batch = self._pop_batch()
         self._start_prefetch(exclude=name)
-        feats = np.stack([r.feats for r in batch])
+        if batch[0].feats is None:
+            # store-backed: one gather serves the whole batch; repeat
+            # steps against the same session hit device-resident blocks
+            xb = self._feat_handles[name].gather_all()
+            feats = np.stack([xb] * len(batch))
+        else:
+            feats = np.stack([r.feats for r in batch])
         t0 = time.perf_counter()
         try:
             out = eng.forward_batched(feats)

@@ -252,6 +252,13 @@ class SampledFitReport(FitReport):
     batch_plan_misses: int = 0
     vertex_buckets: list = field(default_factory=list)
     train_step_compiles: int = 0
+    # feature-store telemetry for THIS run (per-graph counter deltas):
+    # rows served device-resident vs gathered from the host column
+    # store, and the dense-slice baseline the pre-store path would
+    # have read (the bench asserts gathered < dense)
+    feature_hit_rate: float = 0.0
+    feature_bytes_gathered: int = 0
+    feature_bytes_dense: int = 0
 
     @property
     def batch_plan_hit_rate(self) -> float:
@@ -359,8 +366,10 @@ class GCNTrainer:
         :class:`FitReport` and stores the trained params on the engine
         (``engine.params``), ready for ``GCNService.adopt``.
 
-        ``feats`` is a global ``(V, F)`` host array or a pre-sharded
-        ``(*dims, Vp, F)`` device array. Params come from (in order)
+        ``feats`` is a global ``(V, F)`` host array, a pre-sharded
+        ``(*dims, Vp, F)`` device array, or a
+        :class:`~repro.gcn.featurestore.FeatureHandle` (rows served
+        through the process-wide store). Params come from (in order)
         ``params=``, the engine's stored params, or a fresh
         ``engine.init_params(PRNGKey(seed), layer_dims)``. Optimizer
         state persists across ``fit`` calls (warm restarts) unless
@@ -483,16 +492,46 @@ class GCNTrainer:
 
         return cache.get_batch(key, build, nbytes=nbytes)
 
-    def _batch_inputs(self, bs: BatchSession, feats: np.ndarray):
+    def _feature_handle(self, feats):
+        """Resolve the sampled path's feature source to a store handle:
+        a :class:`~repro.gcn.featurestore.FeatureHandle` passes through
+        (validated against this trainer's graph); a dense ``(V, F)``
+        host array is registered with the process-wide store once
+        (content-hashed — re-fitting the same features re-uses the warm
+        tiers). Either way the training loop gathers per-batch rows
+        through the store and never fancy-indexes a full-``V`` array."""
+        from repro.gcn import featurestore
+
+        eng = self.engine
+        V = eng.graph.num_vertices
+        if isinstance(feats, featurestore.FeatureHandle):
+            if feats.graph_fp != eng.graph_fp:
+                raise ValueError(
+                    "feature handle belongs to a different graph "
+                    f"({feats.graph_fp[:12]} != {eng.graph_fp[:12]})")
+            return feats
+        feats = np.asarray(feats, np.float32)
+        if feats.ndim != 2 or feats.shape[0] != V:
+            raise ValueError(
+                f"fit_sampled needs global (V={V}, F) host features or "
+                f"a FeatureHandle; got {feats.shape}")
+        return featurestore.default_store().register(
+            eng.graph, feats, graph_fp=eng.graph_fp)
+
+    def _batch_inputs(self, bs: BatchSession, handle):
         """Parent-global features/labels/mask -> the batch session's
-        sharded device layout. The loss mask covers the SEED vertices
-        only (carrying the parent mask's weights); padding vertices and
-        non-seed neighbors contribute activations, never loss terms."""
+        sharded device layout. Features come through the store's gather
+        (device-resident hot blocks hit; absent rows come off the host
+        column store) — the sampled path touches only the batch's
+        seed-closure rows, never a full-``V`` feature array. The loss
+        mask covers the SEED vertices only (carrying the parent mask's
+        weights); padding vertices and non-seed neighbors contribute
+        activations, never loss terms."""
         sub = bs.engine
         vpad = sub.graph.num_vertices
         S = bs.nodes.size
-        xb = np.zeros((vpad, feats.shape[1]), np.float32)
-        xb[:S] = feats[bs.nodes]
+        xb = np.zeros((vpad, handle.feat_dim), np.float32)
+        xb[:S] = handle.gather(bs.nodes)
         lb = np.zeros(vpad, np.int32)
         lb[:S] = self.labels[bs.nodes]
         mk = np.zeros(vpad, np.float32)
@@ -528,18 +567,23 @@ class GCNTrainer:
         which makes every epoch after the first a pure batch-plan cache
         hit; the report carries the hit/miss counts the bench asserts
         on. Determinism matches :meth:`fit`: same inputs, same seeds,
-        bit-identical parameters."""
+        bit-identical parameters.
+
+        ``feats`` is a global ``(V, F)`` host array (registered with
+        the process-wide feature store on entry) or a
+        :class:`~repro.gcn.featurestore.FeatureHandle`; either way each
+        batch's rows are gathered through the store's device-resident
+        cache — the training loop never materializes a full-``V``
+        feature array, and the report carries the measured
+        ``feature_hit_rate`` / ``feature_bytes_gathered`` against the
+        dense-slice baseline."""
         eng = self.engine
         if eng.bidir:
             raise ValueError(
                 "fit_sampled supports unidirectional plans only")
         impl = eng._impl(agg_impl) if agg_impl is not None else self.impl
         V = eng.graph.num_vertices
-        feats = np.asarray(feats, np.float32)
-        if feats.ndim != 2 or feats.shape[0] != V:
-            raise ValueError(
-                f"fit_sampled needs global (V={V}, F) host features; "
-                f"got {feats.shape}")
+        handle = self._feature_handle(feats)
         if params is None and eng.params is None:
             if layer_dims is None:
                 raise ValueError(
@@ -555,6 +599,7 @@ class GCNTrainer:
         if self.opt_state is None or reset_opt:
             self.opt_state = optlib.init(params)
         c0 = cache.cache_stats()
+        f0 = handle.stats()
         history, epoch_walls = [], []
         compile_s = 0.0
         buckets: set[int] = set()
@@ -572,7 +617,7 @@ class GCNTrainer:
                                                              seeds))
                 step = bs.engine._compiled_train_step(self.opt, impl)
                 pdev = bs.engine.plan_arrays(impl)
-                x, lb_sh, mk_sh = self._batch_inputs(bs, feats)
+                x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
                 params, self.opt_state, metrics = step(
                     pdev, params, self.opt_state, x, lb_sh, mk_sh)
                 w = float(seeds.size)
@@ -597,6 +642,9 @@ class GCNTrainer:
                       f"{dt * 1e3:.1f}ms)")
         eng.params = params
         c1 = cache.cache_stats()
+        f1 = handle.stats()
+        frows = ((f1["hit_rows"] - f0["hit_rows"])
+                 + (f1["miss_rows"] - f0["miss_rows"]))
         return SampledFitReport(
             history=history, epochs=epochs,
             epoch_s=float(np.mean(epoch_walls)) if epoch_walls else compile_s,
@@ -613,7 +661,12 @@ class GCNTrainer:
             batch_plan_hits=c1["batch"]["hits"] - c0["batch"]["hits"],
             batch_plan_misses=c1["batch"]["misses"] - c0["batch"]["misses"],
             vertex_buckets=sorted(buckets),
-            train_step_compiles=c1["step"]["misses"] - c0["step"]["misses"])
+            train_step_compiles=c1["step"]["misses"] - c0["step"]["misses"],
+            feature_hit_rate=(
+                (f1["hit_rows"] - f0["hit_rows"]) / frows if frows else 0.0),
+            feature_bytes_gathered=(
+                f1["gathered_bytes"] - f0["gathered_bytes"]),
+            feature_bytes_dense=f1["dense_bytes"] - f0["dense_bytes"])
 
     def sampled_loss_and_grad(self, feats, seeds, *,
                               fanouts: Sequence[int], seed: int = 0,
@@ -627,18 +680,20 @@ class GCNTrainer:
         eng = self.engine
         impl = eng._impl(agg_impl) if agg_impl is not None else self.impl
         params = eng._resolve_params(params)
-        feats = np.asarray(feats, np.float32)
+        handle = self._feature_handle(feats)
         bs = self._batch_session(
             self._sampled_batch(self._sampler(fanouts, seed), seeds))
         fn = bs.engine._compiled_loss_grad(impl)
-        x, lb_sh, mk_sh = self._batch_inputs(bs, feats)
+        x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
         return fn(bs.engine.plan_arrays(impl), params, x, lb_sh, mk_sh)
 
     def evaluate(self, feats, params=None) -> dict:
         """Loss + accuracy of the CURRENT params over the masked
-        vertices (host-side, via ``engine.forward``)."""
+        vertices (host-side, via ``engine.forward``; ``feats`` may be a
+        dense ``(V, F)`` array or a store handle — full-graph eval
+        gathers the full table either way)."""
         eng = self.engine
-        logits = eng.forward(np.asarray(feats), params)
+        logits = eng.forward(feats, params)
         mask = (np.ones(eng.graph.num_vertices, np.float32)
                 if self.train_mask is None else self.train_mask)
         loss = float(masked_cross_entropy(

@@ -37,7 +37,9 @@ def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
                   async_upload: bool, plan_budget_bytes: int | None,
                   agg_buffer_bytes: int = 8 << 10):
     """Admit ``num_graphs`` mixed RMAT sessions (scale and model cycle)
-    onto one service; returns ``(service, {name: graph})``."""
+    onto one service, each with store-registered vertex features (the
+    recurring-workload setup: requests can then be store-backed);
+    returns ``(service, {name: graph})``."""
     from repro.config import get_gcn_config
     from repro.core.rmat import rmat
     from repro.gcn import GCNService
@@ -54,7 +56,11 @@ def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
         cfg = dataclasses.replace(
             get_gcn_config(f"gcn-{model}-rd", "smoke"),
             agg_buffer_bytes=agg_buffer_bytes)
-        svc.admit(name, cfg, g, layer_dims=[feat_in, *layer_dims], seed=i)
+        feats = (np.random.default_rng(200 + i)
+                 .normal(size=(g.num_vertices, feat_in))
+                 .astype(np.float32))
+        svc.admit(name, cfg, g, layer_dims=[feat_in, *layer_dims],
+                  seed=i, features=feats)
         graphs[name] = g
     return svc, graphs
 
@@ -62,13 +68,13 @@ def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
 def drive(svc, graphs, *, num_requests: int, feat_in: int, seed: int = 0):
     """Interleave requests across sessions (worst case for plan
     residency: consecutive batches almost always switch graphs) and
-    serve the whole queue."""
-    rng = np.random.default_rng(seed)
+    serve the whole queue. Requests are store-backed (the session's
+    registered features), so repeated requests for one graph hit the
+    feature store's device-resident blocks — the recurring hot-vertex
+    workload the storage tier is for."""
     names = list(graphs)
     for k in range(num_requests):
-        name = names[k % len(names)]
-        feats = rng.normal(size=(graphs[name].num_vertices, feat_in))
-        svc.submit(name, feats.astype(np.float32))
+        svc.submit(names[k % len(names)])
     t0 = time.perf_counter()
     done = svc.run()
     wall = time.perf_counter() - t0
@@ -95,12 +101,18 @@ def main(argv=None) -> int:
                     help="disable async upload (reference behavior)")
     ap.add_argument("--plan-budget-mb", type=int, default=None,
                     help="byte budget for the shared plan cache")
+    ap.add_argument("--feature-budget", type=int, default=64,
+                    help="device byte budget for the feature store "
+                         "(MiB; 0 = serve everything from host)")
     ap.add_argument("--json", default="",
                     help="write the perf record here (BENCH_gcn.json)")
     args = ap.parse_args(argv)
 
     import jax
 
+    from repro.gcn import set_cache_budget
+
+    set_cache_budget(feature_bytes=args.feature_budget << 20)
     mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
     layer_dims = [int(x) for x in args.layers.split(",")]
     svc, graphs = build_service(
@@ -125,6 +137,14 @@ def main(argv=None) -> int:
     print(f"plan upload: {st['uploads']} uploads, {st['upload_s']:.2f}s, "
           f"overlap {st['upload_overlap_fraction']:.0%} "
           f"({'async' if st['async_upload'] else 'sync'})")
+    fstats = st["cache"]["features"]
+    print(f"feature store: hit rate {fstats['hit_rate']:.0%}, "
+          f"{fstats['gathered_bytes'] / 2**20:.2f} MiB gathered vs "
+          f"{fstats['dense_bytes'] / 2**20:.2f} MiB dense baseline "
+          f"({fstats['pinned_entries']} pinned blocks)")
+    # the recurring workload MUST hit the device tiers; a zero hit rate
+    # means the storage tier stopped serving (regression)
+    assert fstats["hit_rate"] > 0, "feature store served no hits"
 
     if args.json:
         rec = {
@@ -145,6 +165,9 @@ def main(argv=None) -> int:
             "agg_backend": agg_backend,
             "jax_backend": jax.default_backend(),
             "link_bytes": link_bytes,
+            "feature_hit_rate": round(fstats["hit_rate"], 4),
+            "feature_bytes_gathered": int(fstats["gathered_bytes"]),
+            "feature_bytes_dense": int(fstats["dense_bytes"]),
             "cache": {layer: {k: v for k, v in s.items()}
                       for layer, s in st["cache"].items()
                       if isinstance(s, dict)},

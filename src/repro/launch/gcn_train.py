@@ -136,6 +136,9 @@ def main(argv=None) -> int:
     ap.add_argument("--reshuffle", action="store_true",
                     help="re-shuffle seed sets every epoch (defeats the "
                          "batch-plan cache; default keeps them fixed)")
+    ap.add_argument("--feature-budget", type=int, default=64,
+                    help="device byte budget for the feature store "
+                         "(MiB; 0 = gather everything from host)")
     args = ap.parse_args(argv)
 
     import jax
@@ -144,6 +147,9 @@ def main(argv=None) -> int:
     from repro.gcn import GCNService
     from repro.launch.bench_record import write_record
 
+    from repro.gcn import set_cache_budget
+
+    set_cache_budget(feature_bytes=args.feature_budget << 20)
     mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
     if len(mesh_dims) < 2:
         raise SystemExit("--mesh must have >= 2 dims (e.g. 2x2)")
@@ -199,16 +205,31 @@ def main(argv=None) -> int:
                 batch_plan_hit_rate=round(rep.batch_plan_hit_rate, 4),
                 vertex_buckets=rep.vertex_buckets,
                 train_step_compiles=rep.train_step_compiles,
+                feature_hit_rate=round(rep.feature_hit_rate, 4),
+                feature_bytes_gathered=rep.feature_bytes_gathered,
+                feature_bytes_dense=rep.feature_bytes_dense,
             )
             print(f"  sampled: {rep.batches_per_epoch} batches/epoch, "
                   f"buckets {rep.vertex_buckets}, batch-plan hit rate "
                   f"{rep.batch_plan_hit_rate:.2f}, "
                   f"{rep.train_step_compiles} step compiles")
+            print(f"  features: hit rate {rep.feature_hit_rate:.2f}, "
+                  f"{rep.feature_bytes_gathered / 2**10:.1f} KiB gathered "
+                  f"vs {rep.feature_bytes_dense / 2**10:.1f} KiB dense "
+                  f"baseline")
             if args.epochs >= 2 and not args.reshuffle:
                 # regression tripwire for subgraph fingerprinting:
                 # fixed seed sets must hit from epoch 2 on
                 assert rep.batch_plan_hit_rate > 0, \
                     "recurring seed sets must hit the batch-plan cache"
+                # the storage-tier tripwire: recurring batches must be
+                # served from device-resident blocks, reading strictly
+                # less from host than the dense-slice path would
+                assert rep.feature_hit_rate > 0.5, \
+                    "recurring batches must hit the feature store"
+                assert rep.feature_bytes_gathered < \
+                    rep.feature_bytes_dense, \
+                    "store must read less than the dense-slice baseline"
         # the train->serve handoff: the trained session serves as-is
         svc.adopt(model, eng)
         out = svc.infer(model, feats)

@@ -16,7 +16,10 @@ to each re-implement them):
                        trainer-shaped tests;
   * ``fresh_caches`` — cleared process-wide GCN caches with ALL budgets
                        saved/restored, so budget games never leak
-                       across tests.
+                       across tests;
+  * ``feature_store``— seeded features registered in the process-wide
+                       feature store under a chosen byte budget
+                       (composes ``fresh_caches`` for restore).
 """
 import os
 import sys
@@ -98,16 +101,37 @@ def gcn_setup(gcn_cfg, erdos_graph):
 
 @pytest.fixture
 def fresh_caches():
-    """Cleared GCN caches + all five budgets saved/restored, so the
+    """Cleared GCN caches + all six budgets saved/restored, so the
     budget games below never leak into other tests."""
-    from repro.gcn import cache
+    from repro.gcn import cache, featurestore
 
     cache.clear_all()
     saved = (cache._PLANS.budget_bytes, cache._ELL.budget_bytes,
              cache._PREP.budget_bytes, cache._STEPS.max_entries,
-             cache._BATCH.budget_bytes)
+             cache._BATCH.budget_bytes,
+             featurestore.default_store().budget_bytes)
     yield cache
     cache.set_cache_budget(plan_bytes=saved[0], ell_bytes=saved[1],
                            prep_bytes=saved[2], step_entries=saved[3],
-                           batch_bytes=saved[4])
+                           batch_bytes=saved[4], feature_bytes=saved[5])
     cache.clear_all()
+
+
+@pytest.fixture
+def feature_store(fresh_caches, erdos_graph):
+    """Factory: seeded features registered in the process-wide feature
+    store under a fresh budget. Returns ``(store, graph, feats,
+    handle)``; budgets are restored by ``fresh_caches``."""
+    from repro.gcn import cache, featurestore
+
+    def make(V=256, E=2048, F=8, seed=7, *, budget=64 << 20,
+             block_vertices=32):
+        store = featurestore.default_store()
+        cache.set_cache_budget(feature_bytes=budget)
+        g = erdos_graph(V, E, seed=seed)
+        feats = (np.random.default_rng(seed)
+                 .normal(size=(V, F)).astype(np.float32))
+        handle = store.register(g, feats, block_vertices=block_vertices)
+        return store, g, feats, handle
+
+    return make

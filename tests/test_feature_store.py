@@ -1,0 +1,349 @@
+"""The feature store (``repro.gcn.featurestore``): the storage tier's
+correctness pins.
+
+  * gather parity — rows served through the store (any mix of pinned /
+    cold-resident / host tiers) are bit-identical to the dense slice;
+  * forward / forward_batched / full ``fit_sampled`` trajectories are
+    bit-exact whether features arrive as a dense array or a store
+    handle, on BOTH aggregation backends — and independent of the byte
+    budget (a zero-budget store serves everything from host, same
+    bits);
+  * the device byte budget is never exceeded under random access
+    sequences and random budgets (property test via the hypothesis
+    shim), including across budget shrinks;
+  * degree-ordered admission: the pinned blocks are exactly the top-k
+    in-degree-mass blocks (a rank prefix);
+  * cross-graph isolation: registrations are keyed by graph
+    fingerprint — same-shaped graphs never serve each other's rows,
+    and releasing one graph's device blocks leaves the other warm;
+  * the sampled-training regression pin: ``fit_sampled`` through the
+    store never materializes a full ``(V, F)`` gather
+    (``full_gathers == 0``) and reads strictly less than the dense
+    baseline per batch.
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+V, E, F, C = 256, 2048, 8, 4
+
+
+def _feats(V=V, F=F, seed=7):
+    return (np.random.default_rng(seed)
+            .normal(size=(V, F)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# gather parity across tiers
+# ---------------------------------------------------------------------------
+
+
+def test_gather_is_bit_exact_across_all_tiers(feature_store):
+    """Rows assembled from pinned, cold-admitted and host-served blocks
+    all equal the dense slice bit-for-bit."""
+    store, g, feats, handle = feature_store(budget=64 << 20,
+                                            block_vertices=32)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        nodes = rng.integers(0, V, size=rng.integers(1, 200))
+        np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+    np.testing.assert_array_equal(handle.gather_all(), feats)
+
+    # starve the device tiers entirely: everything comes from host,
+    # bits unchanged
+    store.set_budget(0)
+    assert store.device_bytes == 0
+    nodes = rng.integers(0, V, size=300)
+    np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+    assert store.device_bytes == 0  # nothing admitted under budget 0
+
+
+def test_gather_validates_inputs(feature_store):
+    store, g, feats, handle = feature_store()
+    with pytest.raises(ValueError):
+        handle.gather([V])  # out of range
+    with pytest.raises(ValueError):
+        handle.gather([-1])
+    with pytest.raises(KeyError):
+        store.gather("not-a-registered-fp", [0])
+    assert handle.gather([]).shape == (0, F)
+
+
+def test_reregistering_identical_content_keeps_warm_tiers(feature_store):
+    """Same bytes, same blocking -> no-op (pins survive); changed
+    content drops the stale device blocks and replaces the store."""
+    store, g, feats, handle = feature_store(block_vertices=32)
+    pinned_before = handle.stats()["pinned"]
+    assert pinned_before > 0
+    h2 = store.register(g, feats.copy(), block_vertices=32)
+    assert h2.stats()["pinned"] == pinned_before  # no re-pin churn
+
+    changed = feats + 1.0
+    h3 = store.register(g, changed, block_vertices=32)
+    nodes = np.arange(0, V, 3)
+    np.testing.assert_array_equal(h3.gather(nodes), changed[nodes])
+
+
+# ---------------------------------------------------------------------------
+# consumer parity: forward / forward_batched / fit_sampled, both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_forward_parity_dense_vs_handle_both_backends(
+        fresh_caches, gcn_setup, impl):
+    """``forward``/``forward_batched`` fed a store handle produce the
+    same bits as the dense array, on both aggregation backends."""
+    from repro.gcn import default_store
+
+    eng, feats, labels, mask = gcn_setup()
+    handle = default_store().register(eng.graph, feats,
+                                      graph_fp=eng.graph_fp)
+    y_dense = np.asarray(eng.forward(feats, agg_impl=impl))
+    y_handle = np.asarray(eng.forward(handle, agg_impl=impl))
+    np.testing.assert_array_equal(y_dense, y_handle)
+
+    yb = np.asarray(eng.forward_batched(handle, agg_impl=impl))
+    assert yb.shape[0] == 1  # a handle is one request
+    np.testing.assert_array_equal(yb[0], y_dense)
+
+
+def test_forward_rejects_mismatched_handle(fresh_caches, gcn_setup,
+                                           erdos_graph):
+    """A handle registered for a DIFFERENT graph is refused, not
+    silently gathered."""
+    from repro.gcn import cache, default_store
+
+    eng, feats, labels, mask = gcn_setup()
+    other = erdos_graph(V, E, seed=99)
+    h = default_store().register(other, _feats(seed=99),
+                                 graph_fp=cache.graph_fingerprint(other))
+    with pytest.raises(ValueError):
+        eng.forward(h)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_fit_sampled_trajectory_invariant_to_budget(
+        fresh_caches, gcn_setup, impl):
+    """The WHOLE sampled-training trajectory (per-epoch losses and
+    final params) is bit-identical under a generous budget (everything
+    pinned) and a zero budget (every row from host) — the store is a
+    cache, never a semantic. Both aggregation backends."""
+    import jax
+
+    from repro.gcn import GCNTrainer, cache
+
+    reports = []
+    for budget in (64 << 20, 0):
+        fresh_caches.clear_all()
+        cache.set_cache_budget(feature_bytes=budget)
+        eng, feats, labels, mask = gcn_setup(agg_impl=impl)
+        tr = GCNTrainer(eng, labels, mask)
+        reports.append(tr.fit_sampled(feats, epochs=3, batch_size=64,
+                                      fanouts=(4, 4)))
+    ra, rb = reports
+    assert [h["loss"] for h in ra.history] == \
+        [h["loss"] for h in rb.history]
+    for a, b in zip(jax.tree.leaves(ra.params),
+                    jax.tree.leaves(rb.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # generous budget serves device-resident; zero budget cannot
+    assert ra.feature_hit_rate > 0.9
+    assert rb.feature_hit_rate == 0.0
+    assert rb.feature_bytes_gathered > 0
+
+
+# ---------------------------------------------------------------------------
+# the sampled-training regression pin (the dense-slice miss)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_sampled_never_gathers_full_graph(fresh_caches, gcn_setup):
+    """The regression this PR fixes: ``_batch_inputs`` used to slice a
+    dense (V, F) host array per batch. Through the store, sampled
+    training must never materialize a full-graph gather
+    (``full_gathers == 0``) and each batch reads only its sampled
+    rows — strictly less than V per batch."""
+    from repro.gcn import GCNTrainer, default_store
+
+    eng, feats, labels, mask = gcn_setup()
+    tr = GCNTrainer(eng, labels, mask)
+    rep = tr.fit_sampled(feats, epochs=2, batch_size=64, fanouts=(4, 4))
+
+    h = default_store().handle_for(eng.graph_fp)
+    assert h is not None  # dense input was routed through the store
+    s = h.stats()
+    assert s["full_gathers"] == 0
+    # row-honest: every batch touched < V rows, so the dense baseline
+    # for the run is strictly below epochs * batches * V rows
+    batches = rep.epochs * rep.batches_per_epoch
+    assert batches > 0
+    assert 0 < s["dense_bytes"] < batches * V * F * 4
+
+
+def test_sampled_batch_feature_blocks_helper(fresh_caches, gcn_setup):
+    """``SampledBatch.feature_blocks`` names exactly the store blocks a
+    batch's gather touches."""
+    from repro.core.sampling import NeighborSampler
+
+    eng, feats, labels, mask = gcn_setup()
+    s = NeighborSampler(eng.graph, (4, 4), seed=0)
+    batch = s.sample(np.arange(0, V, 5))
+    bv = 32
+    blocks = batch.feature_blocks(bv)
+    np.testing.assert_array_equal(blocks, np.unique(batch.nodes // bv))
+    with pytest.raises(ValueError):
+        batch.feature_blocks(0)
+
+
+# ---------------------------------------------------------------------------
+# budget safety (property test)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(budget_blocks=st.integers(0, 12), bv=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 5))
+def test_device_bytes_never_exceed_budget(budget_blocks, bv, seed):
+    """Standalone store, random budget (in units of blocks), random
+    access sequence: ``device_bytes <= budget_bytes`` after every
+    gather, and after a mid-sequence budget shrink."""
+    from repro.core.graph import erdos
+    from repro.gcn.featurestore import FeatureStore
+
+    g = erdos(V, E, seed=seed)
+    block_bytes = bv * F * 4
+    budget = budget_blocks * block_bytes
+    store = FeatureStore(budget_bytes=budget, block_vertices=bv)
+    feats = _feats(seed=seed)
+    handle = store.register(g, feats)
+    assert store.device_bytes <= budget
+
+    rng = np.random.default_rng(seed)
+    for i in range(8):
+        nodes = rng.integers(0, V, size=rng.integers(1, 128))
+        np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+        assert store.device_bytes <= budget
+    # shrink mid-flight: invariant holds immediately, bits unchanged
+    store.set_budget(budget // 2)
+    assert store.device_bytes <= budget // 2
+    nodes = rng.integers(0, V, size=64)
+    np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+    assert store.device_bytes <= budget // 2
+
+
+def test_block_larger_than_budget_serves_rows_from_host():
+    """A block that can never fit is served row-by-row (touched rows
+    only) without being admitted — the invariant survives pathological
+    budgets."""
+    from repro.core.graph import erdos
+    from repro.gcn.featurestore import FeatureStore
+
+    g = erdos(V, E, seed=0)
+    store = FeatureStore(budget_bytes=8, block_vertices=64)  # < one row
+    feats = _feats()
+    handle = store.register(g, feats)
+    nodes = np.array([0, 1, 200])
+    np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+    assert store.device_bytes == 0
+    s = handle.stats()
+    assert s["pinned"] == 0 and s["hits"] == 0
+    assert s["gathered_bytes"] == 3 * F * 4  # touched rows, not blocks
+
+
+# ---------------------------------------------------------------------------
+# degree-ordered admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_pins_topk_in_degree_blocks(erdos_graph):
+    """The pinned set is exactly the top-k blocks by total in-degree
+    mass (rank prefix 0..k-1), hottest block first to be admitted."""
+    from repro.gcn import cache
+    from repro.gcn.featurestore import FeatureStore
+
+    g = erdos_graph(V, E, seed=3)
+    bv = 32
+    block_bytes = bv * F * 4
+    k = 3
+    # hot_fraction=1.0: the whole budget is pinnable -> exactly k pins
+    store = FeatureStore(budget_bytes=k * block_bytes, block_vertices=bv,
+                         hot_fraction=1.0)
+    handle = store.register(g, _feats(seed=3))
+    s = handle.stats()
+    assert s["pinned"] == k
+    assert s["pinned_ranks"] == list(range(k))  # a rank prefix
+
+    # independently recompute the ranking the store must have used
+    mass = np.add.reduceat(g.in_degrees().astype(np.int64),
+                           np.arange(0, V, bv))
+    expect = set(np.argsort(-mass, kind="stable")[:k].tolist())
+    fp = cache.graph_fingerprint(g)
+    got = set(store._graphs[fp].pinned.keys())
+    assert got == expect
+
+    # telemetry mirrors it process-wide
+    layer = store.layer_stats()
+    assert layer["pinned_entries"] == k
+    assert layer["admission"][fp[:12]]["pinned_ranks"] == list(range(k))
+
+
+def test_pinned_blocks_absorb_hot_traffic(erdos_graph):
+    """Touching only pinned-block vertices is a 100 % device hit with
+    zero host bytes gathered — the paper's hub-reuse claim, storage
+    edition."""
+    from repro.gcn import cache
+    from repro.gcn.featurestore import FeatureStore
+
+    g = erdos_graph(V, E, seed=3)
+    bv = 32
+    store = FeatureStore(budget_bytes=4 * bv * F * 4, block_vertices=bv,
+                         hot_fraction=1.0)
+    feats = _feats(seed=3)
+    handle = store.register(g, feats)
+    fp = cache.graph_fingerprint(g)
+    pinned = sorted(store._graphs[fp].pinned.keys())
+    nodes = np.concatenate([np.arange(b * bv, (b + 1) * bv)
+                            for b in pinned])
+    np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+    s = handle.stats()
+    assert s["hit_rate"] == 1.0
+    assert s["gathered_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-graph isolation
+# ---------------------------------------------------------------------------
+
+
+def test_cross_graph_fingerprint_isolation(feature_store, erdos_graph):
+    """Two same-shaped graphs registered in one store: gathers never
+    cross, per-graph stats stay separate, and releasing one graph's
+    device blocks leaves the other fully warm."""
+    from repro.gcn import cache
+
+    store, g1, f1, h1 = feature_store(seed=7)
+    g2 = erdos_graph(V, E, seed=8)
+    f2 = _feats(seed=8)
+    h2 = store.register(g2, f2, block_vertices=h1.block_vertices)
+    assert h1.graph_fp != h2.graph_fp
+
+    nodes = np.arange(0, V, 2)
+    np.testing.assert_array_equal(h1.gather(nodes), f1[nodes])
+    np.testing.assert_array_equal(h2.gather(nodes), f2[nodes])
+    assert h1.stats()["hits"] > 0 and h2.stats()["hits"] > 0
+
+    # release graph 1's device blocks: graph 2 keeps its pins, graph 1
+    # still serves correct bits (from host, re-warming the cold tier)
+    pinned2 = h2.stats()["pinned"]
+    store.release_device(h1.graph_fp)
+    assert h1.stats()["pinned"] == 0
+    assert h2.stats()["pinned"] == pinned2
+    np.testing.assert_array_equal(h1.gather(nodes), f1[nodes])
+
+    layer = store.layer_stats()
+    assert layer["graphs"] >= 2
+    assert cache.cache_stats()["features"]["graphs"] == layer["graphs"]

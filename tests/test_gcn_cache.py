@@ -92,6 +92,45 @@ def test_plan_eviction_cascades_to_ell_and_steps(fresh_caches, _engine, _graphs)
     assert st["step"]["entries"] == 0, "steps must die with their plan"
 
 
+def test_plan_eviction_releases_feature_blocks(fresh_caches, _engine,
+                                               _graphs):
+    """The feature layer joins the eviction cascade: evicting a graph's
+    plan drops its device-resident feature blocks (pins AND cold
+    entries) — but the host column store survives, so the graph keeps
+    serving correct rows and re-warms through the cold tier."""
+    from repro.gcn import default_store
+
+    cache = fresh_caches
+    cache.set_cache_budget(feature_bytes=64 << 20)
+    ga, gb = _graphs(2, seed0=70)
+    ea = _engine(ga)
+    _ = ea.plan
+    feats = (np.random.default_rng(0)
+             .normal(size=(256, 8)).astype(np.float32))
+    store = default_store()
+    h = store.register(ga, feats, graph_fp=ea.graph_fp,
+                       block_vertices=32)
+    assert h.stats()["pinned"] > 0
+    st = cache.cache_stats()
+    assert st["features"]["bytes"] > 0
+
+    # budget below two plans: B's arrival evicts A, cascading into the
+    # feature layer
+    cache.set_cache_budget(plan_bytes=int(st["plan"]["bytes"] * 1.5))
+    _ = _engine(gb).plan
+    st = cache.cache_stats()
+    assert st["plan"]["evictions"] == 1
+    assert h.stats()["pinned"] == 0, "pins must die with the plan"
+    assert st["features"]["bytes"] == 0, "no device bytes for evicted A"
+
+    # host tier intact: bits still exact, and the next touch re-warms
+    # the cold tier (device bytes grow again, within budget)
+    nodes = np.arange(0, 256, 3)
+    np.testing.assert_array_equal(h.gather(nodes), feats[nodes])
+    assert h.stats()["registered"]
+    assert 0 < store.device_bytes <= store.budget_bytes
+
+
 def test_clear_and_invalidate_sweep_all_layers(fresh_caches, _engine, _graphs):
     """One coherent clear: ``clear_plan_cache()`` and
     ``invalidate_model()`` drop plan, ELL, prepared-graph AND
