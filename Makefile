@@ -29,10 +29,13 @@ train:
 
 # neighbor-sampled mini-batch training smoke bench (per-batch subgraph
 # plans, batch-plan cache hit rate asserted > 0, feature-store hit rate
-# asserted > 0.5 with gathered bytes below the dense baseline); scratch
-# path as above
+# asserted > 0.5 with gathered bytes below the dense baseline, sampling
+# pipeline at PIPELINE_DEPTH with overlap > 0 and pipelined wall <=
+# serial wall asserted); scratch path as above
+PIPELINE_DEPTH ?= 2
 train-sampled:
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-sampled \
+		--pipeline-depth $(PIPELINE_DEPTH) \
 		--json /tmp/BENCH_gcn.json
 
 # machine-readable perf trajectory: refresh ALL suite records in

@@ -137,7 +137,7 @@ def run_train(json_path: str) -> int:
     return r.returncode
 
 
-def run_train_sampled(json_path: str) -> int:
+def run_train_sampled(json_path: str, pipeline_depth: int = 2) -> int:
     """Neighbor-sampled mini-batch training benchmark: bounded-fanout
     subgraph batches over one RMAT graph on a 2x2 torus (8 forced host
     devices), each batch on its own cached+padded relay plan — the
@@ -146,21 +146,48 @@ def run_train_sampled(json_path: str) -> int:
     (asserted > 0: the smoke-level tripwire for subgraph-fingerprint
     regressions). Features flow through the process-wide feature store
     under a 64 MiB device budget (hit rate asserted > 0.5, gathered
-    bytes asserted below the dense-slice baseline). Records epoch wall,
-    batch-plan cache hit rate, feature-store hit rate/bytes and the
-    exchange bytes of one sampled step under ``"train-sampled"``."""
+    bytes asserted below the dense-slice baseline). The sampling
+    pipeline runs at depth 2: the driver fits the first model serially
+    AND pipelined (bit-identical, asserted in-driver) and this gate
+    checks the recorded pair — overlap fraction > 0 and pipelined
+    epoch wall <= serial epoch wall. Records epoch wall, batch-plan
+    cache hit rate, feature-store hit rate/bytes, the pipeline pair
+    and the exchange bytes of one sampled step under
+    ``"train-sampled"``."""
+    import json
+
     root = Path(__file__).resolve().parent.parent
     env = _forced_host_env(root)
     cmd = [sys.executable, "-m", "repro.launch.gcn_train",
            "--mesh", "2x2", "--models", "gcn,gin,sage",
            "--scale", "9", "--epochs", "12", "--sampler",
            "--batch-size", "128", "--fanout", "8,8",
-           "--feature-budget", "64", "--json", json_path]
+           "--feature-budget", "64",
+           "--pipeline-depth", str(pipeline_depth),
+           "--json", json_path]
     print(f"# train-sampled: {' '.join(cmd)}", flush=True)
     r = subprocess.run(cmd, env=env, cwd=root)
     print(f"# train-sampled -> {'OK' if r.returncode == 0 else 'FAIL'}",
           flush=True)
-    return r.returncode
+    if r.returncode:
+        return r.returncode
+    if pipeline_depth <= 0:
+        return 0  # serial run: no pair to gate
+    # the pipeline gate reads the record the driver just wrote: host-
+    # side latency must actually hide behind device execution, and
+    # hiding it must never cost wall time
+    rec = json.loads(Path(json_path).read_text())["train-sampled"]
+    pipe = rec.get("pipeline")
+    assert pipe is not None, "train-sampled record lost its pipeline pair"
+    assert pipe["overlap_fraction"] > 0, \
+        f"no prepare time was hidden: {pipe}"
+    assert pipe["pipelined_wall_s"] <= pipe["serial_wall_s"], \
+        f"pipelining must not slow the epoch wall: {pipe}"
+    print(f"# train-sampled pipeline gate: overlap "
+          f"{pipe['overlap_fraction']:.2f}, wall "
+          f"{pipe['serial_wall_s']:.2f}s -> {pipe['pipelined_wall_s']:.2f}s",
+          flush=True)
+    return 0
 
 
 def main() -> None:
@@ -176,6 +203,10 @@ def main() -> None:
     ap.add_argument("--json", default="BENCH_gcn.json",
                     help="perf-record path for --suite "
                          "serve/train/train-sampled")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="sampling-pipeline look-ahead for --suite "
+                         "train-sampled (0 = serial, skips the "
+                         "overlap gate)")
     args = ap.parse_args()
     if args.suite == "smoke":
         sys.exit(run_smoke())
@@ -184,7 +215,7 @@ def main() -> None:
     elif args.suite == "train":
         sys.exit(run_train(args.json))
     elif args.suite == "train-sampled":
-        sys.exit(run_train_sampled(args.json))
+        sys.exit(run_train_sampled(args.json, args.pipeline_depth))
     elif args.suite:
         sys.exit(f"unknown suite {args.suite!r} (expected 'smoke', "
                  "'serve', 'train' or 'train-sampled')")

@@ -35,6 +35,8 @@ Design contracts (pinned by ``tests/test_sampling.py``):
 from __future__ import annotations
 
 import hashlib
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
@@ -153,6 +155,10 @@ class NeighborSampler:
     ``batch_size`` (deterministic shuffle per ``(seed, epoch)``).
     """
 
+    #: bound on memoized batches per sampler (`sample_memoized`); the
+    #: value objects are shared, so this caps host copies, not plans
+    MEMO_CAPACITY = 512
+
     def __init__(self, graph: Graph, fanouts, *, seed: int = 0):
         self.graph = graph
         self.fanouts = tuple(-1 if f is None else int(f) for f in fanouts)
@@ -161,6 +167,8 @@ class NeighborSampler:
                              f"{self.fanouts}")
         self.seed = int(seed)
         self.indptr, self.src = graph.csr_in()
+        self._memo: OrderedDict[tuple, SampledBatch] = OrderedDict()
+        self._memo_lock = threading.Lock()
 
     # ---------------- one batch ----------------
 
@@ -211,6 +219,35 @@ class NeighborSampler:
                                      name=f"{self.graph.name}#batch")
         return SampledBatch(seeds=seeds, nodes=nodes, layers=tuple(layers),
                             subgraph=sub, parent_vertices=V)
+
+    def sample_memoized(self, seeds, *,
+                        induce_subgraph: bool = False) -> SampledBatch:
+        """:meth:`sample` behind a bounded, thread-safe per-seed-set
+        memo — the sampler-side cache the pipelined trainer's builder
+        threads share (``repro.gcn.pipeline``).
+
+        The sample is a pure function of ``(sampler seed, seed set)``
+        (per-seed-set determinism above), so concurrent misses for the
+        same key may both build but must agree bit-for-bit; the first
+        commit wins and the duplicate is discarded — the same
+        first-commit-wins contract as ``repro.gcn.cache``. Sampling
+        happens OUTSIDE the lock, so a slow sample never serializes
+        other builder threads. LRU-bounded at :attr:`MEMO_CAPACITY`
+        entries."""
+        seeds = np.unique(np.asarray(seeds, np.int64))
+        key = (bool(induce_subgraph), seeds.tobytes())
+        with self._memo_lock:
+            hit = self._memo.get(key)
+            if hit is not None:
+                self._memo.move_to_end(key)
+                return hit
+        batch = self.sample(seeds, induce_subgraph=induce_subgraph)
+        with self._memo_lock:
+            won = self._memo.setdefault(key, batch)
+            self._memo.move_to_end(key)
+            while len(self._memo) > self.MEMO_CAPACITY:
+                self._memo.popitem(last=False)
+        return won
 
     # ---------------- epoch iteration ----------------
 

@@ -11,7 +11,10 @@ sessions with async double-buffered plan upload;
 that every consumer gathers vertex features through; ``GCNTrainer``
 (``repro.gcn.train``) trains full-batch node classification THROUGH the
 same exchange (its VJP is a reversed relay replay) and hands trained
-params to serving via ``GCNService.adopt``. ``register_model`` plugs
+params to serving via ``GCNService.adopt``; ``repro.gcn.pipeline``
+overlaps the sampled trainer's whole host-side batch chain (sample ->
+plan build -> feature gather -> upload) with device execution via a
+bounded, order-preserving worker pool (``SamplePipeline``). ``register_model`` plugs
 new aggregation semantics into the shared execution path. The low-level
 layers underneath are ``repro.core.plan`` (host-side mapping) and
 ``repro.core.message_passing`` (SPMD executor).
@@ -33,6 +36,7 @@ from repro.gcn.featurestore import (
     FeatureStore,
     default_store,
 )
+from repro.gcn.pipeline import SamplePipeline
 from repro.gcn.registry import (
     ModelSpec,
     get_model,
@@ -59,6 +63,7 @@ __all__ = [
     "GCNTrainer",
     "ModelSpec",
     "PlanKey",
+    "SamplePipeline",
     "SampledFitReport",
     "ServeRequest",
     "cache_stats",

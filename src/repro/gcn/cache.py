@@ -150,11 +150,21 @@ class _LruStore:
     ``budget_bytes=None`` means unbounded; ``max_entries`` additionally
     caps the entry count (used by the step cache, whose entries have no
     meaningful byte size). ``on_evict`` lets the owner cascade evictions
-    into dependent layers. All stores share one reentrant ``lock``
-    (cascades and nested builds re-enter it); ``get`` RELEASES it while
-    building, so a service prefetch thread planning graph B never
-    blocks the main thread's lookups for graph A — first build to
-    commit wins, a losing duplicate is discarded.
+    into dependent layers.
+
+    Concurrency contract: all stores share one reentrant ``lock``
+    (cascades and nested builds re-enter it), and every method takes it
+    itself — callers never pre-lock, and builder threads (the service's
+    prefetch thread, the sampled pipeline's worker pool in
+    ``repro.gcn.pipeline``) may call any method concurrently with the
+    main thread. ``get`` RELEASES the lock while building, so a
+    background thread planning graph B never blocks the main thread's
+    lookups for graph A — first build to commit wins, a losing
+    duplicate is discarded (builds must therefore be pure in their
+    key). Eviction cascades (``on_evict``) run fully under the lock,
+    so a concurrent builder can never observe a plan whose derived
+    layers (ELL, steps, device feature blocks, session memos) were not
+    dropped with it.
     """
 
     def __init__(self, name: str, lock, budget_bytes: int | None = None,
@@ -195,7 +205,8 @@ class _LruStore:
 
     def peek(self, key) -> bool:
         """Membership check that neither counts nor refreshes LRU."""
-        return key in self._d
+        with self.lock:
+            return key in self._d
 
     def _shrink(self):
         while ((self.budget_bytes is not None
@@ -211,22 +222,25 @@ class _LruStore:
 
     def drop(self, pred) -> int:
         """Remove (without cascading) every entry whose key matches."""
-        doomed = [k for k in self._d if pred(k)]
-        for k in doomed:
-            del self._d[k]
-            self.total_bytes -= self._bytes.pop(k)
-        return len(doomed)
+        with self.lock:
+            doomed = [k for k in self._d if pred(k)]
+            for k in doomed:
+                del self._d[k]
+                self.total_bytes -= self._bytes.pop(k)
+            return len(doomed)
 
     def clear(self):
-        self._d.clear()
-        self._bytes.clear()
-        self.total_bytes = 0
-        self.hits = self.misses = self.evictions = 0
+        with self.lock:
+            self._d.clear()
+            self._bytes.clear()
+            self.total_bytes = 0
+            self.hits = self.misses = self.evictions = 0
 
     def stats(self) -> dict:
-        return {"entries": len(self._d), "bytes": self.total_bytes,
-                "budget_bytes": self.budget_bytes, "hits": self.hits,
-                "misses": self.misses, "evictions": self.evictions}
+        with self.lock:
+            return {"entries": len(self._d), "bytes": self.total_bytes,
+                    "budget_bytes": self.budget_bytes, "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions}
 
 
 # ---------------------------------------------------------------------------

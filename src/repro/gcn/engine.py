@@ -143,6 +143,9 @@ class GCNEngine:
         self._batch_buckets: set[tuple] = set()
         self._bucket_calls = 0
         self._bucket_hits = 0
+        # sampling-pipeline telemetry of the LAST fit_sampled run on
+        # this engine (set by GCNTrainer; zeros until one runs)
+        self._pipeline_stats: dict | None = None
 
     # ---------------- construction ----------------
 
@@ -792,6 +795,16 @@ class GCNEngine:
                 self._bucket_hits / self._bucket_calls
                 if self._bucket_calls else 0.0),
             batch_buckets=sorted({b for (_, b, _) in self._batch_buckets}),
+        )
+        # sampling-pipeline overlap of the last fit_sampled run on this
+        # engine (repro.gcn.pipeline; zeros when serial / never sampled)
+        ps = self._pipeline_stats or {}
+        out.update(
+            pipeline_depth=ps.get("pipeline_depth", 0),
+            pipeline_overlap_fraction=ps.get(
+                "pipeline_overlap_fraction", 0.0),
+            pipeline_queue_occupancy=ps.get(
+                "pipeline_queue_occupancy", 0.0),
         )
         from repro.gcn import featurestore
 

@@ -122,7 +122,22 @@ class _GraphFeatures:
 class FeatureStore:
     """Byte-budgeted vertex-feature cache: pinned hot tier + LRU cold
     tier over a host-backed column store. See the module docstring for
-    the design; :func:`default_store` for the process-wide instance."""
+    the design; :func:`default_store` for the process-wide instance.
+
+    Concurrency contract: every public method runs fully under
+    ``self.lock`` (for the default store that is ``repro.gcn.cache.
+    _LOCK``, shared with the six cache layers — reentrant, so the
+    plan-eviction cascade may call :meth:`release_device` while holding
+    it). The sampled pipeline's builder threads
+    (``repro.gcn.pipeline``) call :meth:`gather` concurrently with the
+    training thread and with budget shrinks: gathers are atomic
+    (resident-check, host read, cold-tier admission and counter updates
+    happen under one lock hold), so a concurrent eviction or
+    ``set_budget`` shrink can never interleave mid-gather — the
+    device-bytes invariant and the row counters stay coherent. Gather
+    results are plain host arrays, immutable once returned, so a block
+    evicted right after a gather never corrupts the batch that read
+    it."""
 
     def __init__(self, *, budget_bytes: int | None = 64 << 20,
                  block_vertices: int = 64, hot_fraction: float = 0.5,

@@ -1,0 +1,203 @@
+"""Bounded producer/consumer pipeline for the sampled training chain.
+
+The paper's Observation 2 — MultiAccSys GCN execution is bandwidth-bound
+and latency-tolerant — is a license to hide host-side latency behind
+device execution. PR 3 cashed part of it in (the service's async plan
+*uploads* overlap execution); this module extends the overlap across the
+WHOLE per-batch chain of ``GCNTrainer.fit_sampled``: while the device
+executes batch ``t``, a pool of worker threads samples batch ``t+k``,
+builds + ``pad_plan_pow2``-pads its relay plan, pre-gathers its feature
+blocks through the process-wide :class:`~repro.gcn.featurestore.
+FeatureStore`, and uploads the device arrays — the producer/consumer
+split DGL's decoupled distributed samplers and MG-GCN's pipelined
+multi-GPU execution use, in-process.
+
+Correctness contract (pinned by ``tests/test_gcn_pipeline.py``):
+
+  * **deterministic order** — tasks are indexed; :meth:`SamplePipeline.
+    get` delivers results strictly in index order no matter how workers
+    finish, so the pipelined epoch consumes batches in exactly the
+    serial order. Because every prepare step is a pure function of its
+    task (per-seed-set rng, content-addressed caches whose hits/misses
+    change cost but never values), the pipelined trajectory is
+    **bit-identical** to ``pipeline_depth=0`` — the same fixed point
+    the PR-3 async-upload fence established, across the whole chain;
+  * **bounded look-ahead** — at most ``depth`` tasks are claimed beyond
+    the consumer's position (claimed = in-flight building or ready in
+    the reorder buffer), so the pipeline's working set — plan bytes,
+    feature blocks, device uploads — is bounded by ``depth`` batches,
+    not by the epoch;
+  * **fail-fast drain** — a worker exception is captured into the
+    failed task's slot and re-raised on the consuming thread the moment
+    it reaches that index (consumption is in-order, so that is within
+    one step of the failure surfacing). ``close`` — which ``get`` runs
+    before re-raising, and the trainer runs in a ``finally`` — stops
+    claiming, wakes every waiter, joins all workers and clears the
+    buffer: no orphan threads, no half-consumed queue
+    (``threading.enumerate()`` delta is pinned by test).
+
+Telemetry: :meth:`SamplePipeline.stats` reports how much prepare wall
+time was hidden behind the consumer (``overlap_fraction``; the consumer
+reports its blocked time via the ``get`` timer) and the mean reorder-
+buffer occupancy at consume time (``queue_occupancy_mean``) —
+``GCNEngine.stats`` surfaces both after a pipelined fit.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+__all__ = ["SamplePipeline"]
+
+# thread-name prefix, so tests can pin the no-orphan-threads contract
+# without racing unrelated daemon threads
+THREAD_PREFIX = "gcn-pipe"
+
+
+class SamplePipeline:
+    """Run ``prepare(task)`` for an indexed task list on a worker pool,
+    delivering results strictly in task order with at most ``depth``
+    tasks claimed beyond the consumer.
+
+    ``prepare`` must be safe to call from worker threads and pure in
+    its task (same task -> same value): duplicate or discarded work may
+    happen near ``close``, never wrong values. Typical use::
+
+        pipe = SamplePipeline(tasks, prepare, depth=2, workers=2)
+        try:
+            for i in range(len(tasks)):
+                item = pipe.get(i)   # in order; re-raises worker errors
+                ...consume item...
+        finally:
+            pipe.close()
+    """
+
+    def __init__(self, tasks, prepare, *, depth: int = 2,
+                 workers: int = 2, name: str = THREAD_PREFIX):
+        self.tasks = list(tasks)
+        self.prepare = prepare
+        self.depth = max(int(depth), 1)
+        self.workers = max(int(workers), 1)
+        self._cv = threading.Condition()
+        # reorder buffer: index -> (value, error); bounded by depth
+        self._ready: dict[int, tuple] = {}
+        self._next_claim = 0
+        self._next_consume = 0
+        self._closed = False
+        # telemetry (all mutated under the condition's lock)
+        self._prepare_s = 0.0  # sum of per-task prepare wall time
+        self._wait_s = 0.0  # consumer time blocked inside get()
+        self._prepared = 0
+        self._occ_sum = 0
+        self._gets = 0
+        self._threads = [
+            threading.Thread(target=self._work, name=f"{name}-{i}",
+                             daemon=True)
+            for i in range(self.workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ---------------- worker side ----------------
+
+    def _claimable(self) -> bool:
+        # bounded look-ahead: claimed-but-unconsumed (building + ready)
+        # may never exceed depth, so the pipeline's working set is
+        # depth batches, not the epoch
+        return (self._next_claim < len(self.tasks)
+                and self._next_claim - self._next_consume < self.depth)
+
+    def _work(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closed and not self._claimable():
+                    self._cv.wait()
+                if self._closed:
+                    return
+                i = self._next_claim
+                self._next_claim += 1
+            t0 = time.perf_counter()
+            try:
+                val, err = self.prepare(self.tasks[i]), None
+            except BaseException as e:  # re-raised on the consumer
+                val, err = None, e
+            dt = time.perf_counter() - t0
+            with self._cv:
+                self._prepare_s += dt
+                self._prepared += 1
+                if self._closed:
+                    return  # drained: the result is discarded
+                self._ready[i] = (val, err)
+                self._cv.notify_all()
+
+    # ---------------- consumer side ----------------
+
+    def get(self, index: int):
+        """Block until task ``index`` (which must be the next unconsumed
+        index) is prepared; return its value or re-raise the worker's
+        exception after draining the pipeline. The time spent blocked
+        here is the NON-hidden part of prepare latency (see
+        :meth:`stats`)."""
+        with self._cv:
+            if index != self._next_consume:
+                raise ValueError(
+                    f"out-of-order get: index {index}, expected "
+                    f"{self._next_consume}")
+            if self._closed:
+                raise RuntimeError("pipeline is closed")
+            self._occ_sum += len(self._ready)
+            self._gets += 1
+            t0 = time.perf_counter()
+            while index not in self._ready and not self._closed:
+                self._cv.wait()
+            self._wait_s += time.perf_counter() - t0
+            if self._closed:
+                raise RuntimeError("pipeline closed while waiting")
+            val, err = self._ready.pop(index)
+            self._next_consume += 1
+            self._cv.notify_all()  # a claim slot opened
+        if err is not None:
+            self.close()
+            raise err
+        return val
+
+    def close(self) -> None:
+        """Stop claiming, wake every waiter, join all workers, drop the
+        buffer. Idempotent; safe to call from ``finally`` and after a
+        ``get`` re-raised. A worker mid-prepare finishes its current
+        task (its result is discarded) and exits."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        for t in self._threads:
+            if t is not threading.current_thread():
+                t.join()
+        with self._cv:
+            self._ready.clear()
+
+    # ---------------- telemetry ----------------
+
+    def stats(self) -> dict:
+        """Overlap accounting: of ``prepare_s`` total worker seconds,
+        the part the consumer did NOT spend blocked in :meth:`get` was
+        hidden behind consumer execution — ``overlap_fraction`` is that
+        hidden share (0.0 = fully serial, 1.0 = every prepare fully
+        hidden). ``queue_occupancy_mean`` is the mean number of ready
+        (prepared, unconsumed) batches observed at each ``get`` — how
+        far ahead the producers actually ran within the ``depth``
+        bound."""
+        with self._cv:
+            hidden = max(self._prepare_s - self._wait_s, 0.0)
+            return {
+                "depth": self.depth,
+                "workers": self.workers,
+                "tasks": len(self.tasks),
+                "prepared": self._prepared,
+                "prepare_s": self._prepare_s,
+                "wait_s": self._wait_s,
+                "overlap_s": hidden,
+                "overlap_fraction": (
+                    hidden / self._prepare_s if self._prepare_s else 0.0),
+                "queue_occupancy_mean": (
+                    self._occ_sum / self._gets if self._gets else 0.0),
+            }

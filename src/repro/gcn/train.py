@@ -50,8 +50,8 @@ broadcast, inserted by jit/GSPMD when it partitions the
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -65,6 +65,7 @@ from repro.core import sampling
 from repro.core.partition import make_partition
 from repro.core.plan import build_plan, pad_plan_pow2
 from repro.gcn import cache
+from repro.gcn.pipeline import SamplePipeline
 from repro.train import optimizer as optlib
 
 __all__ = ["BatchSession", "FitReport", "GCNTrainer", "SampledFitReport",
@@ -259,6 +260,18 @@ class SampledFitReport(FitReport):
     feature_hit_rate: float = 0.0
     feature_bytes_gathered: int = 0
     feature_bytes_dense: int = 0
+    # sampling-pipeline telemetry (``repro.gcn.pipeline``): zeros for
+    # the serial path. ``batch_fingerprints`` is the consumed batch
+    # order — the bit-identity tests compare it between serial and
+    # pipelined runs
+    pipeline_depth: int = 0
+    pipeline_workers: int = 0
+    pipeline_overlap_fraction: float = 0.0
+    pipeline_overlap_s: float = 0.0
+    pipeline_prepare_s: float = 0.0
+    pipeline_wait_s: float = 0.0
+    pipeline_queue_occupancy: float = 0.0
+    batch_fingerprints: list = field(default_factory=list)
 
     @property
     def batch_plan_hit_rate(self) -> float:
@@ -331,8 +344,8 @@ class GCNTrainer:
         # normalization uses parent degrees — full-fanout batches stay
         # exactly parity with full-batch training)
         self._samplers: dict[tuple, sampling.NeighborSampler] = {}
-        self._batch_memo: "OrderedDict" = OrderedDict()
         self._prep_csr = None
+        self._prep_csr_lock = threading.Lock()
         # full-batch GCN defaults: no warmup (one graph, not a stream),
         # no weight decay (2-layer nets underfit already), flat-ish lr
         self.opt = opt if opt is not None else optlib.AdamWConfig(
@@ -427,11 +440,13 @@ class GCNTrainer:
         """Destination-CSR of the parent PREPARED graph (self loops +
         model edge weights), built once per trainer: batch subgraphs
         are induced from it, so every induced edge carries the weight
-        the parent normalization gave it."""
-        if self._prep_csr is None:
-            g2, w = self.engine.prepared_graph()
-            self._prep_csr = sampling.csr_in_with_values(g2, w)
-        return self._prep_csr
+        the parent normalization gave it. Lock-guarded: pipelined fits
+        call this from builder threads (``repro.gcn.pipeline``)."""
+        with self._prep_csr_lock:
+            if self._prep_csr is None:
+                g2, w = self.engine.prepared_graph()
+                self._prep_csr = sampling.csr_in_with_values(g2, w)
+            return self._prep_csr
 
     def _sampled_batch(self, sampler: sampling.NeighborSampler,
                        seeds) -> sampling.SampledBatch:
@@ -439,17 +454,10 @@ class GCNTrainer:
         sample is per-seed-set deterministic, so with fixed seed sets
         (the default) every epoch would otherwise redo the whole
         host-side neighbor expansion just to recompute an identical
-        cache key. Bounded LRU (reshuffled runs churn keys)."""
-        seeds = np.unique(np.asarray(seeds, np.int64))
-        key = (sampler.fanouts, sampler.seed, seeds.tobytes())
-        memo = self._batch_memo
-        if key in memo:
-            memo.move_to_end(key)
-        else:
-            if len(memo) >= 512:
-                memo.popitem(last=False)
-            memo[key] = sampler.sample(seeds, induce_subgraph=False)
-        return memo[key]
+        cache key. The memo lives on the sampler and is thread-safe
+        (``NeighborSampler.sample_memoized``) — pipelined fits hit it
+        from builder threads."""
+        return sampler.sample_memoized(seeds, induce_subgraph=False)
 
     def _batch_session(self, batch: sampling.SampledBatch) -> BatchSession:
         """The cached per-batch execution context: subgraph fingerprint
@@ -546,8 +554,9 @@ class GCNTrainer:
                     fanouts: Sequence[int] = (8, 8), params=None,
                     layer_dims: Sequence[int] | None = None, seed: int = 0,
                     reshuffle_each_epoch: bool = False, log_every: int = 0,
-                    reset_opt: bool = False,
-                    agg_impl: str | None = None) -> SampledFitReport:
+                    reset_opt: bool = False, agg_impl: str | None = None,
+                    pipeline_depth: int = 0,
+                    pipeline_workers: int = 2) -> SampledFitReport:
         """Neighbor-sampled mini-batch training: each step optimizes the
         masked CE over one seed set of ``batch_size`` labeled vertices,
         computed on that batch's sampled subgraph with its OWN (cached,
@@ -576,7 +585,21 @@ class GCNTrainer:
         cache — the training loop never materializes a full-``V``
         feature array, and the report carries the measured
         ``feature_hit_rate`` / ``feature_bytes_gathered`` against the
-        dense-slice baseline."""
+        dense-slice baseline.
+
+        ``pipeline_depth > 0`` overlaps the whole host-side per-batch
+        chain (sample -> plan build + pow2 pad -> feature gather ->
+        device upload) with device execution: ``pipeline_workers``
+        builder threads prepare up to ``pipeline_depth`` batches ahead
+        while the training thread consumes them strictly in batch order
+        (``repro.gcn.pipeline.SamplePipeline``). Every prepared value
+        is a pure function of its seed set, and the params/opt-state
+        chain never leaves the training thread, so the pipelined
+        trajectory is **bit-identical** to ``pipeline_depth=0`` —
+        losses, params and batch order (pinned by
+        ``tests/test_gcn_pipeline.py``). The report carries the overlap
+        accounting (``pipeline_overlap_fraction`` et al.), also
+        surfaced via ``engine.stats()``."""
         eng = self.engine
         if eng.bidir:
             raise ValueError(
@@ -604,42 +627,87 @@ class GCNTrainer:
         compile_s = 0.0
         buckets: set[int] = set()
         big_bs = None  # largest-bucket session: the byte-accounting rep
-        n_batches = 0
-        for ep in range(epochs):
-            t0 = time.perf_counter()
-            seed_sets = sampler.epoch_batches(
-                train_nodes, batch_size,
-                epoch=ep if reshuffle_each_epoch else 0)
-            n_batches = len(seed_sets)
-            loss_sum = weight = 0.0
-            for seeds in seed_sets:
-                bs = self._batch_session(self._sampled_batch(sampler,
-                                                             seeds))
-                step = bs.engine._compiled_train_step(self.opt, impl)
-                pdev = bs.engine.plan_arrays(impl)
-                x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
-                params, self.opt_state, metrics = step(
-                    pdev, params, self.opt_state, x, lb_sh, mk_sh)
-                w = float(seeds.size)
-                loss_sum += float(metrics["loss"]) * w
-                weight += w
-                buckets.add(bs.num_padded_vertices)
-                if (big_bs is None
-                        or bs.num_padded_vertices
-                        > big_bs.num_padded_vertices):
-                    big_bs = bs
-            dt = time.perf_counter() - t0
-            if ep == 0:
-                compile_s = dt  # first epoch pays plan builds + compiles
-            else:
-                epoch_walls.append(dt)
-            rec = {"epoch": ep, "epoch_s": dt, "batches": n_batches,
-                   "loss": loss_sum / max(weight, 1.0)}
-            history.append(rec)
-            if log_every and (ep % log_every == 0 or ep == epochs - 1):
-                print(f"[gcn-train-sampled] epoch={ep} "
-                      f"loss={rec['loss']:.4f} ({n_batches} batches, "
-                      f"{dt * 1e3:.1f}ms)")
+        fingerprints: list[str] = []
+
+        # epoch seed sets are precomputed for the WHOLE run: they are a
+        # pure function of (sampler seed, epoch), so serial and
+        # pipelined runs see identical task lists — the first link in
+        # the bit-identity chain
+        epoch_seed_sets = [
+            sampler.epoch_batches(train_nodes, batch_size,
+                                  epoch=ep if reshuffle_each_epoch else 0)
+            for ep in range(epochs)]
+        tasks = [seeds for sets in epoch_seed_sets for seeds in sets]
+        n_batches = len(epoch_seed_sets[0]) if epoch_seed_sets else 0
+
+        def prepare(seeds):
+            """The whole host-side per-batch chain — sample, plan build
+            (+ pow2 pad), compiled-step lookup, feature gather, device
+            upload. Pure in ``seeds`` (every cache is content-keyed and
+            first-commit-wins), so it runs identically on the training
+            thread (serial) or a builder thread (pipelined)."""
+            batch = self._sampled_batch(sampler, seeds)
+            bs = self._batch_session(batch)
+            step = bs.engine._compiled_train_step(self.opt, impl)
+            pdev = bs.engine.plan_arrays(impl)
+            x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
+            return bs, batch.fingerprint(), step, pdev, x, lb_sh, mk_sh
+
+        pipe = None
+        if pipeline_depth > 0 and tasks:
+            # pre-warm the one lazily-built shared input of prepare()
+            # on the training thread, then let the builders loose
+            self._prepared_csr()
+            pipe = SamplePipeline(tasks, prepare, depth=pipeline_depth,
+                                  workers=pipeline_workers)
+        ti = 0
+        try:
+            for ep in range(epochs):
+                t0 = time.perf_counter()
+                seed_sets = epoch_seed_sets[ep]
+                loss_sum = weight = 0.0
+                for seeds in seed_sets:
+                    if pipe is not None:
+                        bs, fp, step, pdev, x, lb_sh, mk_sh = pipe.get(ti)
+                    else:
+                        bs, fp, step, pdev, x, lb_sh, mk_sh = prepare(
+                            tasks[ti])
+                    ti += 1
+                    fingerprints.append(fp)
+                    params, self.opt_state, metrics = step(
+                        pdev, params, self.opt_state, x, lb_sh, mk_sh)
+                    w = float(seeds.size)
+                    loss_sum += float(metrics["loss"]) * w
+                    weight += w
+                    buckets.add(bs.num_padded_vertices)
+                    if (big_bs is None
+                            or bs.num_padded_vertices
+                            > big_bs.num_padded_vertices):
+                        big_bs = bs
+                dt = time.perf_counter() - t0
+                if ep == 0:
+                    compile_s = dt  # 1st epoch pays plan builds+compiles
+                else:
+                    epoch_walls.append(dt)
+                rec = {"epoch": ep, "epoch_s": dt,
+                       "batches": len(seed_sets),
+                       "loss": loss_sum / max(weight, 1.0)}
+                history.append(rec)
+                if log_every and (ep % log_every == 0 or ep == epochs - 1):
+                    print(f"[gcn-train-sampled] epoch={ep} "
+                          f"loss={rec['loss']:.4f} ({len(seed_sets)} "
+                          f"batches, {dt * 1e3:.1f}ms)")
+        finally:
+            if pipe is not None:
+                pipe.close()
+        pstats = pipe.stats() if pipe is not None else None
+        eng._pipeline_stats = {
+            "pipeline_depth": pstats["depth"] if pstats else 0,
+            "pipeline_overlap_fraction": (
+                pstats["overlap_fraction"] if pstats else 0.0),
+            "pipeline_queue_occupancy": (
+                pstats["queue_occupancy_mean"] if pstats else 0.0),
+        }
         eng.params = params
         c1 = cache.cache_stats()
         f1 = handle.stats()
@@ -666,7 +734,17 @@ class GCNTrainer:
                 (f1["hit_rows"] - f0["hit_rows"]) / frows if frows else 0.0),
             feature_bytes_gathered=(
                 f1["gathered_bytes"] - f0["gathered_bytes"]),
-            feature_bytes_dense=f1["dense_bytes"] - f0["dense_bytes"])
+            feature_bytes_dense=f1["dense_bytes"] - f0["dense_bytes"],
+            pipeline_depth=pstats["depth"] if pstats else 0,
+            pipeline_workers=pstats["workers"] if pstats else 0,
+            pipeline_overlap_fraction=(
+                pstats["overlap_fraction"] if pstats else 0.0),
+            pipeline_overlap_s=pstats["overlap_s"] if pstats else 0.0,
+            pipeline_prepare_s=pstats["prepare_s"] if pstats else 0.0,
+            pipeline_wait_s=pstats["wait_s"] if pstats else 0.0,
+            pipeline_queue_occupancy=(
+                pstats["queue_occupancy_mean"] if pstats else 0.0),
+            batch_fingerprints=fingerprints)
 
     def sampled_loss_and_grad(self, feats, seeds, *,
                               fanouts: Sequence[int], seed: int = 0,

@@ -20,6 +20,12 @@ each with its own cached+padded relay plan — the full-batch plan is
 never built by training (asserted), and the record lands under the
 ``"train-sampled"`` key with the batch-plan cache hit rate (asserted
 > 0 for fixed seed sets) and the exchange bytes of one sampled step.
+``--pipeline-depth N`` (default 2) overlaps the whole host-side batch
+chain with device execution (``repro.gcn.pipeline``); the first model
+is additionally fit serially on a cold cache so the record carries a
+serial-vs-pipelined epoch-wall pair plus the measured
+``pipeline_overlap_fraction``, and the two loss trajectories are
+asserted bit-identical.
 
 The trained parameters are handed straight to a ``GCNService`` at the
 end (``service.adopt``) and one serving request is verified against the
@@ -139,6 +145,13 @@ def main(argv=None) -> int:
     ap.add_argument("--feature-budget", type=int, default=64,
                     help="device byte budget for the feature store "
                          "(MiB; 0 = gather everything from host)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="sampled-training look-ahead: builder threads "
+                         "prepare up to this many batches ahead of the "
+                         "train step (0 = serial; bit-identical either "
+                         "way)")
+    ap.add_argument("--pipeline-workers", type=int, default=2,
+                    help="builder threads for the sampling pipeline")
     args = ap.parse_args(argv)
 
     import jax
@@ -165,14 +178,36 @@ def main(argv=None) -> int:
     if args.sampler:
         fanouts = tuple(int(f) for f in args.fanout.split(","))
         sampler_kw = dict(batch_size=args.batch_size, fanouts=fanouts,
-                          reshuffle_each_epoch=args.reshuffle)
+                          reshuffle_each_epoch=args.reshuffle,
+                          pipeline_depth=args.pipeline_depth,
+                          pipeline_workers=args.pipeline_workers)
     suite = "train-sampled" if args.sampler else "train"
 
     svc = GCNService(mesh_dims)
     per_model = {}
+    pipeline_rec = None
     t0 = time.perf_counter()
-    for model in args.models.split(","):
+    for mi, model in enumerate(args.models.split(",")):
         model = model.strip()
+        if sampler_kw is not None and args.pipeline_depth > 0 and mi == 0:
+            # the serial-vs-pipelined epoch-wall pair: fit the FIRST
+            # model serially on a cold cache, then clear everything so
+            # the pipelined fit below starts equally cold. Both runs
+            # include epoch 1 (plan builds + compiles) — the window the
+            # pipeline exists to hide
+            from repro.gcn import cache as _gcache
+
+            _gcache.clear_all()
+            _, rep_serial, _ = train_one(
+                model, graph, mesh_dims, feats=feats, labels=labels,
+                mask=mask, hidden=args.hidden, classes=args.classes,
+                epochs=args.epochs, lr=args.lr,
+                agg_impl=args.agg or None,
+                agg_buffer_bytes=8 << 10, log_every=args.log_every,
+                seed=args.seed,
+                sampler={**sampler_kw, "pipeline_depth": 0})
+            serial_wall = sum(h["epoch_s"] for h in rep_serial.history)
+            _gcache.clear_all()
         eng, rep, ev = train_one(
             model, graph, mesh_dims, feats=feats, labels=labels,
             mask=mask, hidden=args.hidden, classes=args.classes,
@@ -208,11 +243,37 @@ def main(argv=None) -> int:
                 feature_hit_rate=round(rep.feature_hit_rate, 4),
                 feature_bytes_gathered=rep.feature_bytes_gathered,
                 feature_bytes_dense=rep.feature_bytes_dense,
+                pipeline_depth=rep.pipeline_depth,
+                pipeline_overlap_fraction=round(
+                    rep.pipeline_overlap_fraction, 4),
             )
             print(f"  sampled: {rep.batches_per_epoch} batches/epoch, "
                   f"buckets {rep.vertex_buckets}, batch-plan hit rate "
                   f"{rep.batch_plan_hit_rate:.2f}, "
                   f"{rep.train_step_compiles} step compiles")
+            if mi == 0 and args.pipeline_depth > 0:
+                # bit-identity tripwire: the pipelined trajectory must
+                # equal the serial reference exactly (the same contract
+                # tests/test_gcn_pipeline.py property-tests in-process)
+                assert [h["loss"] for h in rep.history] == \
+                    [h["loss"] for h in rep_serial.history], \
+                    "pipelined losses diverged from the serial run"
+                pipelined_wall = sum(h["epoch_s"] for h in rep.history)
+                pipeline_rec = {
+                    "model": model,
+                    "depth": args.pipeline_depth,
+                    "workers": args.pipeline_workers,
+                    "serial_wall_s": round(serial_wall, 4),
+                    "pipelined_wall_s": round(pipelined_wall, 4),
+                    "overlap_fraction": round(
+                        rep.pipeline_overlap_fraction, 4),
+                    "queue_occupancy": round(
+                        rep.pipeline_queue_occupancy, 3),
+                }
+                print(f"  pipeline: depth {args.pipeline_depth}, "
+                      f"overlap {rep.pipeline_overlap_fraction:.2f}, "
+                      f"wall {serial_wall:.2f}s serial -> "
+                      f"{pipelined_wall:.2f}s pipelined (bit-identical)")
             print(f"  features: hit rate {rep.feature_hit_rate:.2f}, "
                   f"{rep.feature_bytes_gathered / 2**10:.1f} KiB gathered "
                   f"vs {rep.feature_bytes_dense / 2**10:.1f} KiB dense "
@@ -265,7 +326,11 @@ def main(argv=None) -> int:
             rec["sampler"] = {"batch_size": args.batch_size,
                               "fanouts": [int(f) for f in
                                           args.fanout.split(",")],
-                              "reshuffle_each_epoch": args.reshuffle}
+                              "reshuffle_each_epoch": args.reshuffle,
+                              "pipeline_depth": args.pipeline_depth,
+                              "pipeline_workers": args.pipeline_workers}
+            if pipeline_rec is not None:
+                rec["pipeline"] = pipeline_rec
         write_record(args.json, suite, rec)
         print(f"wrote {args.json} ({suite} suite)")
     return 0

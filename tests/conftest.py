@@ -102,19 +102,30 @@ def gcn_setup(gcn_cfg, erdos_graph):
 @pytest.fixture
 def fresh_caches():
     """Cleared GCN caches + all six budgets saved/restored, so the
-    budget games below never leak into other tests."""
+    budget games below never leak into other tests. The default
+    FeatureStore's HOST column store is cleared explicitly on both
+    sides (``clear_all`` routes through ``FeatureStore.clear``, but
+    hygiene must not hinge on that wiring): two tests registering
+    different features under the same graph fingerprint must never see
+    each other's rows (regression-pinned in test_feature_store.py).
+    The store's shape knobs (``block_vertices``/``hot_fraction``) are
+    saved/restored too."""
     from repro.gcn import cache, featurestore
 
+    store = featurestore.default_store()
     cache.clear_all()
+    store.clear()  # belt and braces: no host columns survive either
     saved = (cache._PLANS.budget_bytes, cache._ELL.budget_bytes,
              cache._PREP.budget_bytes, cache._STEPS.max_entries,
-             cache._BATCH.budget_bytes,
-             featurestore.default_store().budget_bytes)
+             cache._BATCH.budget_bytes, store.budget_bytes,
+             store.block_vertices, store.hot_fraction)
     yield cache
+    store.block_vertices, store.hot_fraction = saved[6], saved[7]
     cache.set_cache_budget(plan_bytes=saved[0], ell_bytes=saved[1],
                            prep_bytes=saved[2], step_entries=saved[3],
                            batch_bytes=saved[4], feature_bytes=saved[5])
     cache.clear_all()
+    store.clear()
 
 
 @pytest.fixture

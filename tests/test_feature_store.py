@@ -347,3 +347,39 @@ def test_cross_graph_fingerprint_isolation(feature_store, erdos_graph):
     layer = store.layer_stats()
     assert layer["graphs"] >= 2
     assert cache.cache_stats()["features"]["graphs"] == layer["graphs"]
+
+
+def test_fresh_caches_clears_host_column_store_between_tests(
+        fresh_caches, erdos_graph):
+    """Regression pin for the test-suite hygiene contract: the
+    ``fresh_caches`` teardown clears the default store's HOST column
+    store, so a later test registering DIFFERENT features under the
+    same graph fingerprint can never be served the earlier test's rows
+    (or inherit its warm pins / counters)."""
+    from repro.gcn import cache, featurestore
+
+    store = featurestore.default_store()
+    g = erdos_graph(V, E, seed=7)
+
+    # "test 1": register features A and warm the tiers
+    fa = _feats(seed=1)
+    ha = store.register(g, fa)
+    ha.gather(np.arange(64))
+    assert ha.stats()["hit_rows"] + ha.stats()["miss_rows"] > 0
+
+    # simulate the fixture boundary (exactly what fresh_caches runs)
+    cache.clear_all()
+    store.clear()
+    assert store.handle_for(ha.graph_fp) is None, \
+        "no registration may survive the fixture boundary"
+    with pytest.raises(KeyError):
+        store.gather(ha.graph_fp, [0])  # stale handles go stale loudly
+
+    # "test 2": same graph fingerprint, different features — must see
+    # ONLY its own rows, with counters starting from zero
+    fb = _feats(seed=2)
+    assert not np.array_equal(fa, fb)
+    hb = store.register(g, fb)
+    np.testing.assert_array_equal(hb.gather(np.arange(V)), fb)
+    s = hb.stats()
+    assert s["dense_bytes"] == V * F * 4  # exactly this test's accesses
