@@ -14,7 +14,13 @@ same exchange (its VJP is a reversed relay replay) and hands trained
 params to serving via ``GCNService.adopt``; ``repro.gcn.pipeline``
 overlaps the sampled trainer's whole host-side batch chain (sample ->
 plan build -> feature gather -> upload) with device execution via a
-bounded, order-preserving worker pool (``SamplePipeline``). ``register_model`` plugs
+bounded, order-preserving worker pool (``SamplePipeline``);
+``repro.gcn.inference`` is the layer-major chunked serving path
+(``forward_layer_major``) for graphs whose full plan exceeds the cache
+budget — computed per layer in bounded 1-hop vertex chunks with
+pipelined chunk preparation, bit-identical to full-graph forward, and
+wired into ``GCNService`` admission (``admission="auto"`` routes
+over-budget graphs to it). ``register_model`` plugs
 new aggregation semantics into the shared execution path. The low-level
 layers underneath are ``repro.core.plan`` (host-side mapping) and
 ``repro.core.message_passing`` (SPMD executor).
@@ -36,6 +42,12 @@ from repro.gcn.featurestore import (
     FeatureStore,
     default_store,
 )
+from repro.gcn.inference import (
+    ChunkSession,
+    estimate_plan_bytes,
+    forward_layer_major,
+    plan_over_budget,
+)
 from repro.gcn.pipeline import SamplePipeline
 from repro.gcn.registry import (
     ModelSpec,
@@ -55,6 +67,7 @@ from repro.gcn.train import (
 
 __all__ = [
     "BatchSession",
+    "ChunkSession",
     "FeatureHandle",
     "FeatureStore",
     "FitReport",
@@ -69,10 +82,13 @@ __all__ = [
     "cache_stats",
     "clear_plan_cache",
     "default_store",
+    "estimate_plan_bytes",
+    "forward_layer_major",
     "get_model",
     "graph_fingerprint",
     "masked_cross_entropy",
     "plan_cache_stats",
+    "plan_over_budget",
     "reference_loss_and_grad",
     "register_model",
     "registered_models",

@@ -31,13 +31,29 @@ its graph-fingerprint component):
              graph, or on different graphs that happen to produce the
              same static schedule, compile once. Count-bounded LRU
              (compiled executables have no portable byte size).
-  ``batch``  subgraph-fingerprinted ``PlanKey`` -> sampled mini-batch
-             session (``repro.gcn.train.fit_sampled``): padded batch
-             plan + local<->global node map + sub-engine. Byte-bounded
-             LRU with its OWN budget, deliberately separate from
-             ``plan`` — sampled training exists to run under a plan
-             budget the full-batch plan would not fit, so batch plans
-             must never compete with full plans for one budget.
+  ``batch``  subgraph-fingerprinted ``PlanKey`` -> padded sub-plan
+             session (plan + local<->global node map + sub-engine).
+             Byte-bounded LRU with its OWN budget, deliberately
+             separate from ``plan`` — the sampled/chunked paths exist
+             to run under a plan budget the full-graph plan would not
+             fit, so sub-plans must never compete with full plans for
+             one budget. TWO producers share this layer, namespaced
+             through the key's ``graph_fp`` slot (the rest of the
+             ``plan_identity()`` is the parent engine's):
+
+               * ``"batch:{parent_fp}:{batch_fp}"`` — sampled
+                 mini-batch sessions (``repro.gcn.train.fit_sampled``),
+                 ``batch_fp`` = the sampled subgraph's content
+                 fingerprint;
+               * ``"chunk:{parent_fp}:{sha1(V, lo, hi, nodes)}"`` —
+                 layer-major inference chunk sessions
+                 (``repro.gcn.inference``), hashed over the chunk
+                 range and its 1-hop node set.
+
+             ``parent_fp`` keeps identical node sets on different
+             graphs apart; the ``batch:``/``chunk:`` prefixes keep the
+             two producers apart (both pinned by the collision
+             regressions in ``tests/test_gcn_inference.py``).
   ``features``  ``(graph fingerprint, vertex block)`` -> device-resident
              vertex-feature blocks (:mod:`repro.gcn.featurestore`): a
              degree-ordered pinned hot tier plus an LRU cold tier over
@@ -448,11 +464,15 @@ def step_cached(plan_key: PlanKey, exec_fp: tuple) -> bool:
 
 
 def get_batch(key, build, nbytes=None):
-    """The sampled mini-batch layer: subgraph-fingerprint key -> batch
-    session (padded per-batch plan + local<->global node map + the
-    sub-engine holding its device arrays). Byte-bounded LRU
-    (``set_cache_budget(batch_bytes=...)``); a recurring seed set is a
-    pure hit — no re-sample, no re-plan, no re-upload."""
+    """The sub-plan layer: subgraph-fingerprinted ``PlanKey`` -> padded
+    sub-plan session (plan + local<->global node map + the sub-engine
+    holding its device arrays). Byte-bounded LRU
+    (``set_cache_budget(batch_bytes=...)``). Two producers share it,
+    kept apart by the key's namespaced ``graph_fp`` slot (module
+    docstring has the full layout): ``"batch:{parent_fp}:{batch_fp}"``
+    sampled-training batches, ``"chunk:{parent_fp}:{sha1}"``
+    layer-major inference chunks. A recurring seed set or chunk range
+    is a pure hit — no re-sample, no re-plan, no re-upload."""
     return _BATCH.get(key, build, nbytes=nbytes)
 
 
@@ -505,7 +525,15 @@ def cache_stats() -> dict:
     """Per-layer ``{entries, bytes, budget_bytes, hits, misses,
     evictions}`` — the ``features`` layer adds its row/byte telemetry
     and per-graph admission ranks — plus the legacy flat counters
-    (``hits``/``misses`` track the plan layer, as they always have)."""
+    (``hits``/``misses`` track the plan layer, as they always have).
+
+    The ``batch`` row aggregates BOTH of that layer's producers —
+    sampled-training batch sessions (``batch:``-prefixed keys) and
+    layer-major inference chunk sessions (``chunk:``-prefixed keys; see
+    the module docstring for the key layout). Per-run splits live on
+    the reports instead: ``SampledFitReport.batch_plan_hits/misses``
+    and ``engine.inference_stats()["chunk_plan_hits"/"chunk_plan_
+    misses"]``."""
     with _LOCK:
         out = {s.name: s.stats()
                for s in (_PLANS, _ELL, _PREP, _STEPS, _BATCH)}

@@ -146,6 +146,13 @@ class GCNEngine:
         # sampling-pipeline telemetry of the LAST fit_sampled run on
         # this engine (set by GCNTrainer; zeros until one runs)
         self._pipeline_stats: dict | None = None
+        # layer-major chunked inference (repro.gcn.inference): pow2
+        # chunk-bucket ledger (a hit = that padded chunk size already
+        # executed on this engine) + the last run's telemetry
+        self._chunk_buckets: set[tuple] = set()
+        self._chunk_calls = 0
+        self._chunk_hits = 0
+        self._inference_stats: dict | None = None
 
     # ---------------- construction ----------------
 
@@ -641,6 +648,29 @@ class GCNEngine:
         # slice the zero-padding requests back off
         return np.moveaxis(out.reshape(V, Bpad, -1), 0, 1)[:B]
 
+    def forward_layer_major(self, feats, params=None, *,
+                            agg_impl: str | None = None,
+                            chunk_size: int = 128,
+                            pipeline_depth: int = 2,
+                            pipeline_workers: int = 2) -> np.ndarray:
+        """Whole-network inference computed layer-major over bounded
+        vertex chunks (:func:`repro.gcn.inference.forward_layer_major`)
+        — bit-identical to :meth:`forward`, but the full-graph plan is
+        never built and the device never holds a full ``(V, F)``
+        feature table: each layer runs for ALL vertices in 1-hop
+        chunks (cached, pow2-padded sub-plans through the ``batch``
+        cache layer) with ``h_l`` materialized on the host between
+        layers. The serving path for graphs whose plan exceeds
+        ``set_cache_budget(plan_bytes=...)``; telemetry (peak feature
+        bytes, prepare/execute overlap, chunk-bucket hit rate) lands in
+        :meth:`stats` / :meth:`inference_stats`."""
+        from repro.gcn import inference
+
+        return inference.forward_layer_major(
+            self, feats, params, agg_impl=agg_impl,
+            chunk_size=chunk_size, pipeline_depth=pipeline_depth,
+            pipeline_workers=pipeline_workers)
+
     # ---------------- training (repro.gcn.train) ----------------
 
     def _compiled_loss_grad(self, agg_impl: str | None = None):
@@ -806,6 +836,7 @@ class GCNEngine:
             pipeline_queue_occupancy=ps.get(
                 "pipeline_queue_occupancy", 0.0),
         )
+        out.update(self.inference_stats())
         from repro.gcn import featurestore
 
         fs = featurestore.default_store().graph_stats(self.graph_fp)
@@ -818,6 +849,32 @@ class GCNEngine:
                 if fs["dense_bytes"] else 0.0),
         )
         return out
+
+    def inference_stats(self) -> dict:
+        """Layer-major inference telemetry of the LAST
+        :meth:`forward_layer_major` call on this engine (zeros before
+        one runs), plus the cumulative chunk-bucket ledger.
+        Deliberately **plan-free**: :meth:`stats` builds the full plan,
+        which is exactly what an over-budget layer-major session must
+        never do — the service reports through this accessor."""
+        inf = self._inference_stats or {}
+        calls, hits = self._chunk_calls, self._chunk_hits
+        return {
+            "inference_chunks": inf.get("chunks", 0),
+            "inference_chunk_size": inf.get("chunk_size", 0),
+            "inference_pipeline_depth": inf.get("pipeline_depth", 0),
+            # device-resident feature high-water mark of the chunked
+            # schedule vs what one full-graph forward would allocate
+            "peak_feature_bytes": inf.get("peak_feature_bytes", 0),
+            "dense_feature_bytes": inf.get("dense_feature_bytes", 0),
+            # share of chunk-prepare wall time hidden behind execution
+            "inference_overlap_fraction": inf.get("overlap_fraction", 0.0),
+            "chunk_plan_hits": inf.get("chunk_plan_hits", 0),
+            "chunk_plan_misses": inf.get("chunk_plan_misses", 0),
+            "chunk_bucket_calls": calls,
+            "chunk_bucket_hits": hits,
+            "chunk_bucket_hit_rate": hits / calls if calls else 0.0,
+        }
 
     def measured_link_bytes(self, feat_dim: int | None = None,
                             dtype=jnp.float32,

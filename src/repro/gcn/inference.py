@@ -1,0 +1,405 @@
+"""Layer-major chunked inference — serve graphs that don't fit the mesh.
+
+Full-graph :meth:`~repro.gcn.engine.GCNEngine.forward` needs the whole
+relay plan and a full ``(V, F)`` device feature table resident at once,
+so a graph whose plan exceeds ``set_cache_budget(plan_bytes=...)`` (or
+whose features exceed the device) can be *trained* (PR 5's sampled
+mini-batches) but not *served*. This module closes that gap with the
+layer-major schedule DGL's ``GraphSAGE.inference`` and MG-GCN use:
+compute layer ``l`` for ALL vertices in bounded node-chunks, materialize
+``h_l`` on the host, then move to layer ``l+1`` — the device working set
+is bounded by a chunk's 1-hop neighborhood instead of the k-hop closure
+(or the full graph), which is exactly the paper's latency-tolerant,
+bandwidth-bound regime (Observations 1-2).
+
+How a chunk executes (all machinery reused from the sampled trainer):
+
+  * the vertex range ``[lo, hi)`` plus its in-neighbors in the PREPARED
+    graph (self loops + model edge weights) form the chunk's node set —
+    **layer-independent**, so one sub-plan serves every layer;
+  * :func:`~repro.core.sampling.induce_in_edges` keeps every prepared
+    in-edge of the chunk's vertices (their sources are in the node set
+    by construction), the vertex count is padded to a power of two and
+    the plan is :func:`~repro.core.plan.pad_plan_pow2`-padded, so
+    same-bucket chunks share ONE compiled step;
+  * the sub-session is cached in the byte-bounded ``batch`` layer of
+    :mod:`repro.gcn.cache` under a ``"chunk:"``-namespaced key (see
+    that module's key-layout notes), so repeated inference over the
+    same graph never re-plans;
+  * layer inputs are gathered per chunk — ``h_0`` through the
+    process-wide :class:`~repro.gcn.featurestore.FeatureStore` for
+    store-handle inputs (never ``gather_all``; ad-hoc dense arrays
+    row-index directly), ``h_{l-1}`` from the previous layer's
+    materialized host buffer — and chunk outputs scatter back into
+    ``h_l``.
+
+**Exact parity.** Chunk results are bit-identical to full-graph
+``forward``, not merely close: a destination vertex's fp32 aggregation
+order is the plan's per-``(round, node)`` edge emission order, which
+:func:`~repro.core.plan.build_plan` derives from a stable sort keyed on
+source ids — and the induced subgraph's local ids are ascending in the
+global ids, so every destination sums the SAME contributions in the
+SAME order as the full plan. The combine is row-wise. Parity across
+models x backends x chunk sizes is pinned by
+``tests/test_gcn_inference.py``.
+
+**Pipelined chunk preparation.** Chunk ``c+k``'s host-side work
+(sub-plan build + pad, feature gather, device upload) runs on
+:class:`~repro.gcn.pipeline.SamplePipeline` workers while the device
+executes chunk ``c``. One pipeline per LAYER (layer ``l+1``'s prepare
+reads ``h_l``, which must be complete), each consumed strictly in-order
+— results are bit-identical to the serial path by the same purity
+argument as ``fit_sampled``. The overlap won is reported as
+``inference_overlap_fraction``, the device-resident feature high-water
+mark as ``peak_feature_bytes``, both via ``engine.stats()``.
+
+Admission: :func:`plan_over_budget` is the ``admission="auto"`` test
+:class:`~repro.gcn.service.GCNService` uses — a *provable lower bound*
+on the full plan's bytes against the plan-store budget, so over-budget
+graphs route to layer-major WITHOUT ever building the full plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+
+import jax
+import numpy as np
+
+from repro.core import sampling
+from repro.core.partition import make_partition
+from repro.core.plan import build_plan, pad_plan_pow2
+from repro.gcn import cache
+from repro.gcn.pipeline import SamplePipeline
+
+__all__ = ["ChunkSession", "estimate_plan_bytes", "forward_layer_major",
+           "plan_over_budget"]
+
+# bytes per prepared edge the full plan provably carries: the COO
+# aggregation arrays alone hold one (edge_repl int32, edge_slot int32,
+# edge_w float32) triple per edge — relay/deposit structures only add
+# to it, so 12 * |prepared edges| is a LOWER bound on plan bytes
+_BYTES_PER_EDGE_LB = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSession:
+    """One chunk's cached execution context: the vertex range it owns,
+    its 1-hop node set, the positions of the owned vertices inside that
+    set (the scatter map back into ``h_l``), and the sub-engine over
+    the padded induced plan. Layer-independent — cached once per
+    (graph, chunking) in the ``batch`` layer and reused by every
+    layer of every ``forward_layer_major`` call."""
+
+    lo: int
+    hi: int
+    nodes: np.ndarray      # sorted global ids, chunk ∪ in-neighbors
+    out_local: np.ndarray  # nodes[out_local[i]] == lo + i
+    engine: object         # GCNEngine over the padded induced plan
+
+    @property
+    def num_padded_vertices(self) -> int:
+        return self.engine.graph.num_vertices
+
+
+class _PeakMeter:
+    """Device-resident feature-byte high-water mark across pipeline
+    workers and the consumer (chunk inputs charge at upload, outputs at
+    execution; both release once the chunk's rows are on the host)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.live = 0
+        self.peak = 0
+
+    def add(self, n: int) -> None:
+        with self._lock:
+            self.live += int(n)
+            self.peak = max(self.peak, self.live)
+
+    def sub(self, n: int) -> None:
+        with self._lock:
+            self.live -= int(n)
+
+
+# ---------------------------------------------------------------------------
+# Admission estimate
+# ---------------------------------------------------------------------------
+
+
+def estimate_plan_bytes(engine) -> int:
+    """Provable LOWER bound on the engine's full-plan host bytes,
+    computed from the graph alone (no prepare, no plan build): the
+    plan's COO aggregation arrays carry >= one 12-byte
+    ``(edge_repl, edge_slot, edge_w)`` triple per prepared edge, and
+    every registered model's prepare only ADDS edges (self loops) to
+    the input graph's. Being a lower bound makes the ``admission=
+    "auto"`` decision sound: estimate > budget means the real plan
+    *definitely* cannot fit."""
+    g = engine.graph
+    return _BYTES_PER_EDGE_LB * (g.num_edges + g.num_vertices)
+
+
+def plan_over_budget(engine) -> bool:
+    """True when the engine's full plan provably cannot fit the
+    process-wide plan-store budget (and is not already resident — a
+    cached plan serves for free regardless of how the budget moved).
+    This never builds or prepares anything: it is the
+    ``admission="auto"`` test, safe to call on over-budget graphs."""
+    if engine.plan_cached:
+        return False
+    budget = cache._PLANS.budget_bytes
+    if budget is None:
+        return False
+    return estimate_plan_bytes(engine) > budget
+
+
+# ---------------------------------------------------------------------------
+# Chunk construction
+# ---------------------------------------------------------------------------
+
+
+def _prepared_csr(engine):
+    """Destination-CSR of the parent PREPARED graph, memoized on the
+    engine (the chunk analog of ``GCNTrainer._prepared_csr``; the
+    service path has no trainer to hang it on). Assignment is atomic
+    and the build is pure, so a worker race at worst duplicates it."""
+    csr = getattr(engine, "_infer_csr", None)
+    if csr is None:
+        g2, w = engine.prepared_graph()
+        csr = sampling.csr_in_with_values(g2, w)
+        engine._infer_csr = csr
+    return csr
+
+
+def _chunk_nodes(indptr, src, lo: int, hi: int) -> np.ndarray:
+    """The chunk's 1-hop node set: its own vertices plus every prepared
+    in-neighbor (CSR rows ``lo..hi-1`` are contiguous, so one slice).
+    Sorted global ids — ascending local ids therefore map to ascending
+    global ids, the ordering fact the bit-parity argument rests on."""
+    own = np.arange(lo, hi, dtype=np.int64)
+    nbrs = np.asarray(src[indptr[lo]:indptr[hi]], np.int64)
+    return np.union1d(own, nbrs)
+
+
+def _chunk_session(engine, lo: int, hi: int,
+                   nodes: np.ndarray) -> ChunkSession:
+    """Cached chunk context through the byte-bounded ``batch`` layer.
+    The key namespaces the graph-fp slot as ``"chunk:{parent}:{fp}"``
+    — the parent fingerprint keeps coinciding node sets on different
+    graphs apart, the ``chunk:`` prefix keeps chunk sub-plans and the
+    trainer's ``batch:`` sub-plans apart (collision regression in
+    tests/test_gcn_inference.py)."""
+    from repro.gcn.engine import GCNEngine
+
+    h = hashlib.sha1()
+    h.update(np.int64(engine.graph.num_vertices).tobytes())
+    h.update(np.int64(lo).tobytes())
+    h.update(np.int64(hi).tobytes())
+    h.update(np.ascontiguousarray(nodes).tobytes())
+    key = dataclasses.replace(
+        engine.plan_key.plan_identity(),
+        graph_fp=f"chunk:{engine.graph_fp}:{h.hexdigest()}")
+
+    def build():
+        indptr, src, w = _prepared_csr(engine)
+        S = nodes.size
+        vpad = 1 if S <= 1 else 1 << (S - 1).bit_length()
+        sub_g2, sub_w = sampling.induce_in_edges(
+            indptr, src, w, nodes, num_vertices=vpad,
+            name=f"{engine.graph.name}#chunk")
+        part = make_partition(engine.cfg, engine.torus.num_nodes,
+                              num_vertices=vpad)
+        plan = pad_plan_pow2(build_plan(
+            engine.cfg, sub_g2, engine.torus, part, edge_weights=sub_w,
+            bidir=engine.bidir))
+        sub = GCNEngine.from_plan(
+            engine.cfg, plan, engine.dims, graph_fp=key.graph_fp,
+            axis_names=engine.axis_names, name=sub_g2.name)
+        out_local = np.searchsorted(nodes, np.arange(lo, hi)) \
+            .astype(np.int64)
+        return ChunkSession(lo=lo, hi=hi, nodes=nodes,
+                            out_local=out_local, engine=sub)
+
+    def nbytes(cs):
+        return (cache._plan_nbytes(cs.engine.plan)
+                + cs.nodes.nbytes + cs.out_local.nbytes)
+
+    return cache.get_batch(key, build, nbytes=nbytes)
+
+
+class _DenseSource:
+    """Per-chunk row gather over a caller-owned host array — the
+    ``h_0`` source for a dense per-request input. Deliberately NOT
+    routed through the feature store: registering per-request content
+    under the graph's fingerprint would REPLACE the session's
+    registered features (the store is content-keyed per graph), so
+    ad-hoc arrays index directly and only store handles hit the store."""
+
+    def __init__(self, arr: np.ndarray):
+        self.arr = arr
+        self.feat_dim = int(arr.shape[1])
+
+    def gather(self, nodes) -> np.ndarray:
+        return self.arr[nodes]
+
+
+def _h0_source(engine, feats):
+    """Resolve the ``h_0`` source: a
+    :class:`~repro.gcn.featurestore.FeatureHandle` passes through
+    (validated) and layer 0 gathers per chunk through the store's
+    device-resident cache — never ``gather_all`` (``full_gathers``
+    stays 0); a dense ``(V, F)`` host array is row-indexed directly."""
+    from repro.gcn import featurestore
+
+    V = engine.graph.num_vertices
+    if isinstance(feats, featurestore.FeatureHandle):
+        if feats.num_vertices != V:
+            raise ValueError(
+                f"feature handle covers V={feats.num_vertices}, "
+                f"engine graph has V={V}")
+        if feats.graph_fp != engine.graph_fp:
+            raise ValueError(
+                "feature handle is registered for a different graph "
+                f"({feats.graph_fp[:12]} != {engine.graph_fp[:12]})")
+        return feats
+    feats = np.asarray(feats, np.float32)
+    if feats.ndim != 2 or feats.shape[0] != V:
+        raise ValueError(
+            f"forward_layer_major needs global (V={V}, F) host features "
+            f"or a FeatureHandle; got {getattr(feats, 'shape', None)}")
+    return _DenseSource(feats)
+
+
+# ---------------------------------------------------------------------------
+# The layer-major schedule
+# ---------------------------------------------------------------------------
+
+
+def forward_layer_major(engine, feats, params=None, *,
+                        agg_impl: str | None = None,
+                        chunk_size: int = 128,
+                        pipeline_depth: int = 2,
+                        pipeline_workers: int = 2) -> np.ndarray:
+    """Whole-network inference, layer-major over vertex chunks; returns
+    the global ``(V, F_out)`` host array, bit-identical to
+    ``engine.forward(feats, params)`` — without ever building the
+    full-graph plan or holding a full ``(V, F)`` device table.
+
+    ``feats`` is a global ``(V, F)`` host array (row-indexed per
+    chunk) or a :class:`~repro.gcn.featurestore.FeatureHandle`
+    (gathered per chunk through the store's device-resident cache).
+    ``chunk_size`` bounds the
+    vertices a chunk OWNS (its device working set is the chunk's 1-hop
+    node set, padded to a power of two — same-bucket chunks share one
+    compiled step). ``pipeline_depth > 0`` prepares up to that many
+    chunks ahead on ``pipeline_workers`` threads while the device
+    executes (0 = serial; identical results either way).
+
+    Telemetry lands on ``engine.stats()``: ``peak_feature_bytes`` (the
+    device feature high-water mark) vs ``dense_feature_bytes`` (what
+    full-graph forward would allocate), ``inference_overlap_fraction``
+    (prepare time hidden behind execution) and the chunk-bucket hit
+    rate."""
+    if engine.bidir:
+        raise ValueError(
+            "forward_layer_major supports unidirectional plans only "
+            "(pad_plan_pow2 constraint, same as fit_sampled)")
+    impl = engine._impl(agg_impl)
+    params = engine._resolve_params(params)
+    handle = _h0_source(engine, feats)
+    V = engine.graph.num_vertices
+    chunk = max(1, min(int(chunk_size), V))
+    indptr, src, _ = _prepared_csr(engine)
+    ranges = [(lo, min(lo + chunk, V)) for lo in range(0, V, chunk)]
+    node_sets = [_chunk_nodes(indptr, src, lo, hi) for lo, hi in ranges]
+
+    b0 = cache.cache_stats()["batch"]
+    meter = _PeakMeter()
+    pipe_stats: list[dict] = []
+    widths = [handle.feat_dim]
+    h: np.ndarray | None = None  # materialized h_{l-1} (None = h_0)
+
+    for li, layer in enumerate(params):
+        last = li == len(params) - 1
+        h_prev = h
+
+        def prepare(ci, h_prev=h_prev):
+            """One chunk's host-side chain — cached sub-plan lookup (or
+            build + pow2 pad), compiled-step lookup, per-chunk gather,
+            device upload. Pure in ``ci`` for a fixed layer: ``h_prev``
+            is complete and read-only once this layer's pipeline
+            starts, and every cache is content-keyed."""
+            cs = _chunk_session(engine, *ranges[ci], node_sets[ci])
+            sub = cs.engine
+            S = cs.nodes.size
+            F = handle.feat_dim if h_prev is None else h_prev.shape[1]
+            xb = np.zeros((sub.graph.num_vertices, F), np.float32)
+            if h_prev is None:
+                xb[:S] = handle.gather(cs.nodes)
+            else:
+                xb[:S] = h_prev[cs.nodes]
+            step = sub._compiled_layer_step(impl)
+            pdev = sub.plan_arrays(impl)
+            x, _ = sub._shard_input(xb)
+            jax.block_until_ready(x)
+            nb = int(x.nbytes)
+            meter.add(nb)
+            return cs, step, pdev, x, nb
+
+        pipe = None
+        if pipeline_depth > 0 and len(ranges) > 1:
+            pipe = SamplePipeline(list(range(len(ranges))), prepare,
+                                  depth=pipeline_depth,
+                                  workers=pipeline_workers)
+        h_next: np.ndarray | None = None
+        try:
+            for ci in range(len(ranges)):
+                cs, step, pdev, x, nb = (pipe.get(ci) if pipe is not None
+                                         else prepare(ci))
+                bucket = (impl, cs.num_padded_vertices, int(x.shape[-1]))
+                engine._chunk_calls += 1
+                if bucket in engine._chunk_buckets:
+                    engine._chunk_hits += 1
+                else:
+                    engine._chunk_buckets.add(bucket)
+                y = step(pdev, x, layer, last=last)
+                ynb = int(y.nbytes)
+                meter.add(ynb)
+                out = cs.engine.unshard(np.asarray(y))  # (vpad, F_out)
+                meter.sub(nb + ynb)
+                if h_next is None:
+                    h_next = np.empty((V, out.shape[-1]), out.dtype)
+                h_next[cs.lo:cs.hi] = out[cs.out_local]
+        finally:
+            if pipe is not None:
+                pipe.close()
+        if pipe is not None:
+            pipe_stats.append(pipe.stats())
+        h = h_next
+        widths.append(int(h.shape[1]))
+
+    b1 = cache.cache_stats()["batch"]
+    prep_s = sum(p["prepare_s"] for p in pipe_stats)
+    hidden_s = sum(p["overlap_s"] for p in pipe_stats)
+    # what full-graph forward would hold on device at its widest layer
+    # step: the sharded padded input table PLUS that step's output
+    # table (the meter charges chunks the same way; the full plan's
+    # own arrays come on top of this and are not counted for either)
+    dense = (engine.part.vertices_per_node() * engine.torus.num_nodes * 4
+             * max(widths[i] + widths[i + 1] for i in range(len(params))))
+    engine._inference_stats = {
+        "chunks": len(ranges),
+        "chunk_size": chunk,
+        "layers": len(params),
+        "peak_feature_bytes": meter.peak,
+        "dense_feature_bytes": int(dense),
+        "overlap_fraction": hidden_s / prep_s if prep_s else 0.0,
+        "overlap_s": hidden_s,
+        "prepare_s": prep_s,
+        "pipeline_depth": pipeline_depth if pipe_stats else 0,
+        "chunk_plan_hits": b1["hits"] - b0["hits"],
+        "chunk_plan_misses": b1["misses"] - b0["misses"],
+    }
+    return h

@@ -20,16 +20,30 @@ latency-tolerant):
     feature axis of the exchange, so one relay replay moves B requests'
     payload per ppermute (deeper messages over the same link schedule —
     exactly the trade a latency-tolerant, bandwidth-bound system wants).
-  * **Async double-buffered plan upload** — while the device executes
-    session A's batch, a background thread builds and uploads the NEXT
-    distinct session's plan arrays (host-side plan build +
-    ``device_put``-equivalent ``jnp.asarray`` + ``block_until_ready``).
-    At most one prefetch is in flight (the classic two buffers:
-    executing + filling); the consumer *fences* on the prefetch thread
-    before running that session, so results are bit-identical to the
-    synchronous path (``async_upload=False`` falls back to inline
-    uploads and is the reference behavior). The overlap won is reported
-    by :meth:`stats` as ``upload_overlap_fraction``.
+  * **Pipelined plan prefetch** — while the device executes session
+    A's batch, :class:`~repro.gcn.pipeline.SamplePipeline` workers
+    build and upload the next up-to-``prefetch_depth`` distinct
+    sessions' plan arrays (host-side plan build + ``jnp.asarray``
+    upload + ``block_until_ready``) CONCURRENTLY — the single
+    prefetch daemon this replaced could only overlap uploads, it
+    serialized the plan builds. The consumer *fences* (consumes the
+    pipeline strictly in-order) before running a prefetched session,
+    so results are bit-identical to the synchronous path
+    (``async_upload=False`` falls back to inline uploads and is the
+    reference behavior). The overlap won is reported by :meth:`stats`
+    as ``upload_overlap_fraction``.
+
+A third trick serves what the first two cannot: **layer-major
+admission** (``admission="auto"``, the default). A graph whose full
+plan provably exceeds the plan-store budget
+(:func:`repro.gcn.inference.plan_over_budget` — a lower-bound test
+that never builds the plan) is admitted anyway and served through
+:meth:`GCNEngine.forward_layer_major`: every layer runs for all
+vertices in bounded 1-hop chunks with ``h_l`` materialized on the
+host, bit-identical to full-graph forward. Over-budget graphs become
+servable instead of erroring; ``admission="layer-major"`` forces the
+chunked path for every session, ``admission="full"`` restores the
+pre-PR-8 behavior.
 
 Because every session shares the byte-bounded caches in
 ``repro.gcn.cache``, admitting more graphs than the plan budget holds
@@ -38,7 +52,6 @@ exactly once (see ``tests/test_gcn_cache.py``).
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Sequence
@@ -48,8 +61,9 @@ import numpy as np
 
 from repro.config import GCNConfig
 from repro.core.graph import Graph
-from repro.gcn import cache
+from repro.gcn import cache, inference
 from repro.gcn.engine import GCNEngine
+from repro.gcn.pipeline import SamplePipeline
 
 __all__ = ["GCNService", "ServeRequest"]
 
@@ -69,18 +83,6 @@ class ServeRequest:
     # timing (perf_counter seconds; t_done - t_submit = request latency)
     t_submit: float = 0.0
     t_done: float = 0.0
-
-
-@dataclass
-class _Prefetch:
-    """One in-flight background upload (the 'filling' buffer)."""
-
-    session: str
-    thread: threading.Thread
-    t_start: float
-    t_end: float = 0.0
-    seconds: float = 0.0  # upload wall time, folded into counters at the fence
-    error: BaseException | None = None
 
 
 @dataclass
@@ -122,25 +124,51 @@ class GCNService:
     shared across all services/engines by design — that sharing is the
     point): the last setter wins, and shrinking can evict another
     service's plans. Omit it to keep the current budget.
+
+    ``admission`` picks each session's serving mode at admit time:
+    ``"full"`` = always full-graph ``forward_batched``;
+    ``"layer-major"`` = always chunked layer-major inference;
+    ``"auto"`` (default) = layer-major only when the session's full
+    plan provably cannot fit the plan budget (otherwise full — a
+    within-budget graph keeps the batched fast path). ``chunk_size``
+    sizes the layer-major chunks; ``prefetch_depth`` /
+    ``prefetch_workers`` shape the plan-prefetch pipeline.
     """
 
     def __init__(self, mesh_dims: Sequence[int], *,
                  axis_names: Sequence[str] | None = None,
                  max_batch: int = 8, async_upload: bool = True,
-                 plan_budget_bytes: int | None = None):
+                 plan_budget_bytes: int | None = None,
+                 admission: str = "auto", chunk_size: int = 128,
+                 prefetch_depth: int = 2, prefetch_workers: int = 2):
         self.dims = tuple(int(d) for d in mesh_dims)
         self.axis_names = tuple(axis_names) if axis_names else None
         self.max_batch = int(max_batch)
         self.async_upload = bool(async_upload)
+        if admission not in ("full", "layer-major", "auto"):
+            raise ValueError(
+                f"admission must be 'full', 'layer-major' or 'auto'; "
+                f"got {admission!r}")
+        self.admission = admission
+        self.chunk_size = int(chunk_size)
+        self.prefetch_depth = max(int(prefetch_depth), 1)
+        self.prefetch_workers = max(int(prefetch_workers), 1)
         if plan_budget_bytes is not None:
             cache.set_cache_budget(plan_bytes=int(plan_budget_bytes))
         self.sessions: dict[str, GCNEngine] = {}
         # per-session feature-store handle (None = no registered
         # features; submit() then requires a per-request array)
         self._feat_handles: dict[str, object] = {}
+        # per-session serving mode, decided at admit/adopt time:
+        # "full" | "layer-major"
+        self._mode: dict[str, str] = {}
         self.queue: list[ServeRequest] = []
         self._next_rid = 0
-        self._prefetch: _Prefetch | None = None
+        # in-flight plan-prefetch pipeline (None = idle): task list of
+        # (name, engine) pairs consumed strictly in-order at the fence
+        self._pf: SamplePipeline | None = None
+        self._pf_tasks: list[str] = []
+        self._pf_next = 0
         self._c = _Counters()
         # per-session bucket-counter baseline at admission: an adopted
         # engine may arrive with pre-service counts (trainer use), and
@@ -174,9 +202,28 @@ class GCNService:
         elif layer_dims is not None:
             eng.init_params(jax.random.PRNGKey(seed), list(layer_dims))
         self.sessions[name] = eng
+        self._mode[name] = self._decide_mode(eng)
         self._bucket_base[name] = (eng._bucket_calls, eng._bucket_hits)
         self._attach_features(name, eng, features)
         return eng
+
+    def _decide_mode(self, eng: GCNEngine) -> str:
+        """The session's serving mode under this service's admission
+        policy. ``auto`` asks :func:`repro.gcn.inference.
+        plan_over_budget` — a provable lower bound on the full plan's
+        bytes vs the plan-store budget, evaluated WITHOUT preparing or
+        planning anything — so an over-budget graph is admitted
+        straight onto the chunked path and its full-graph plan is
+        never built."""
+        if self.admission == "layer-major":
+            return "layer-major"
+        if self.admission == "auto" and inference.plan_over_budget(eng):
+            return "layer-major"
+        return "full"
+
+    def session_mode(self, name: str) -> str:
+        """``"full"`` or ``"layer-major"`` for an admitted session."""
+        return self._mode[name]
 
     def _attach_features(self, name: str, eng: GCNEngine,
                          features) -> None:
@@ -231,6 +278,7 @@ class GCNService:
                 "adopted engine has no params; train it first or pass "
                 "params=")
         self.sessions[name] = engine
+        self._mode[name] = self._decide_mode(engine)
         self._bucket_base[name] = (engine._bucket_calls,
                                    engine._bucket_hits)
         self._attach_features(name, engine, features)
@@ -243,6 +291,7 @@ class GCNService:
         pressure evicts it."""
         eng = self.sessions.pop(name, None)
         self._feat_handles.pop(name, None)
+        self._mode.pop(name, None)
         if eng is not None:
             # retire the session's bucket counts so stats() history
             # survives eviction instead of vanishing with the session
@@ -327,59 +376,100 @@ class GCNService:
             self._c.uploads_async += 1
 
     def _start_prefetch(self, exclude: str) -> None:
-        """Kick the background upload for the next distinct session in
-        the queue (the 'filling' buffer). At most one in flight."""
-        if not self.async_upload or self._prefetch is not None:
+        """Kick background uploads for the next up-to-``prefetch_depth``
+        distinct full-plan sessions in the queue that are not resident
+        (the 'filling' buffers). :class:`~repro.gcn.pipeline.
+        SamplePipeline`-backed: ``prefetch_workers`` threads build +
+        upload DIFFERENT sessions' plans concurrently (the single
+        daemon this replaced serialized the plan builds — only the
+        uploads overlapped), and the fence consumes results strictly
+        in task order. Layer-major sessions have no full plan to
+        upload and are skipped. At most one pipeline in flight."""
+        if not self.async_upload or self._pf is not None:
             return
-        target = next(
-            (r.session for r in self.queue
-             if r.session != exclude
-             and not self.sessions[r.session].plan_uploaded()), None)
-        if target is None:
+        seen: set[str] = set()
+        tasks: list[tuple[str, GCNEngine]] = []
+        for r in self.queue:
+            n = r.session
+            if n in seen or n == exclude:
+                seen.add(n)
+                continue
+            seen.add(n)
+            eng = self.sessions[n]
+            if self._mode.get(n) == "layer-major" or eng.plan_uploaded():
+                continue
+            # capture the engine object: an in-flight upload keeps a
+            # coherent target even if the session is evicted meanwhile
+            tasks.append((n, eng))
+            if len(tasks) >= self.prefetch_depth:
+                break
+        if not tasks:
             return
-        eng = self.sessions[target]
-        pf = _Prefetch(target, None, t_start=time.perf_counter())
 
-        def work():
+        def prep(task):
+            # error-as-VALUE, never raised here: SamplePipeline.get
+            # closes the whole pipeline when prepare raises, but an
+            # upload failure must survive to the fence, which drops it
+            # if the session was evicted meanwhile (moot) and re-raises
+            # it otherwise
+            _, eng = task
+            t0 = time.perf_counter()
+            secs, err = 0.0, None
             try:
-                pf.seconds = self._upload(eng)
-            except BaseException as e:  # re-raised at the fence
-                pf.error = e
-            finally:
-                pf.t_end = time.perf_counter()
+                secs = self._upload(eng)
+            except BaseException as e:
+                err = e
+            return t0, time.perf_counter(), secs, err
 
-        pf.thread = threading.Thread(
-            target=work, name=f"gcn-serve-upload-{target}", daemon=True)
-        pf.thread.start()
-        self._prefetch = pf
+        self._pf = SamplePipeline(tasks, prep, depth=len(tasks),
+                                  workers=self.prefetch_workers,
+                                  name="gcn-serve-upload")
+        self._pf_tasks = [n for n, _ in tasks]
+        self._pf_next = 0
+
+    def _close_pf(self) -> None:
+        if self._pf is not None:
+            self._pf.close()
+        self._pf = None
+        self._pf_tasks = []
+        self._pf_next = 0
 
     def _fence(self, name: str | None = None) -> None:
-        """Join the in-flight prefetch (all of it — the plan arrays must
-        be fully resident before any consumer runs). ``name=None``
-        fences unconditionally; otherwise only a prefetch for ``name``
-        blocks the caller. Overlap accounting: the prefetch wall time
-        that intersected device-execution windows counts as hidden."""
-        pf = self._prefetch
-        if pf is None or (name is not None and pf.session != name):
+        """Consume in-flight prefetches, strictly in pipeline order —
+        a session's plan arrays must be fully resident before its
+        consumer runs. ``name=None`` drains the whole pipeline;
+        otherwise only a pipeline that still holds ``name`` blocks the
+        caller, and consumption stops once ``name``'s upload is folded
+        in. Overlap accounting: the upload wall time that intersected
+        device-execution windows counts as hidden."""
+        pending = (self._pf_tasks[self._pf_next:]
+                   if self._pf is not None else [])
+        if not pending or (name is not None and name not in pending):
             return
-        pf.thread.join()
-        self._prefetch = None
-        self._count_upload(pf.seconds, was_async=True)
-        if pf.error is not None:
-            if pf.session not in self.sessions:
-                pf.error = None  # evicted mid-upload: failure is moot
-            else:
-                raise pf.error
-        lo, hi = pf.t_start, pf.t_end
-        overlap = sum(
-            max(0.0, min(hi, e1) - max(lo, e0))
-            for e0, e1 in self._c.exec_windows)
-        # the thread's lifetime [lo, hi] also spans spawn/bookkeeping
-        # overhead, but only pf.seconds of actual upload was hideable —
-        # clamp so the reported fraction can never exceed 1.0
-        self._c.upload_overlap_s += min(overlap, pf.seconds)
-        self._c.exec_windows = [w for w in self._c.exec_windows
-                                if w[1] > hi]
+        while self._pf_next < len(self._pf_tasks):
+            n = self._pf_tasks[self._pf_next]
+            t0, t1, secs, err = self._pf.get(self._pf_next)
+            self._pf_next += 1
+            self._count_upload(secs, was_async=True)
+            if err is not None and n in self.sessions:
+                # still admitted: surface the failure (the fence runs
+                # before popping, so the requests stay queued and
+                # retryable); an evicted session's failure is moot
+                self._close_pf()
+                raise err
+            overlap = sum(
+                max(0.0, min(t1, e1) - max(t0, e0))
+                for e0, e1 in self._c.exec_windows)
+            # the worker's window [t0, t1] also spans claim/bookkeeping
+            # overhead, but only ``secs`` of actual upload was hideable
+            # — clamp so the reported fraction can never exceed 1.0
+            self._c.upload_overlap_s += min(overlap, secs)
+            self._c.exec_windows = [w for w in self._c.exec_windows
+                                    if w[1] > t1]
+            if n == name:
+                break
+        if self._pf_next >= len(self._pf_tasks):
+            self._close_pf()
 
     # ---------------- execution ----------------
 
@@ -398,22 +488,37 @@ class GCNService:
         # head-of-line requests queued (retryable), not silently dropped
         name = self.queue[0].session
         eng = self.sessions[name]
+        mode = self._mode.get(name, "full")
         self._fence(name)
-        if not eng.plan_uploaded():
+        if mode == "full" and not eng.plan_uploaded():
             # sync path / first-touch / post-eviction upload
             self._count_upload(self._upload(eng), was_async=False)
         batch = self._pop_batch()
         self._start_prefetch(exclude=name)
-        if batch[0].feats is None:
-            # store-backed: one gather serves the whole batch; repeat
-            # steps against the same session hit device-resident blocks
-            xb = self._feat_handles[name].gather_all()
-            feats = np.stack([xb] * len(batch))
-        else:
-            feats = np.stack([r.feats for r in batch])
+        if mode != "layer-major":
+            if batch[0].feats is None:
+                # store-backed: one gather serves the whole batch;
+                # repeat steps against the same session hit
+                # device-resident blocks
+                xb = self._feat_handles[name].gather_all()
+                feats = np.stack([xb] * len(batch))
+            else:
+                feats = np.stack([r.feats for r in batch])
         t0 = time.perf_counter()
         try:
-            out = eng.forward_batched(feats)
+            if mode == "layer-major":
+                # chunked layer-major serving: the full-graph plan is
+                # never built; store-backed requests hand the handle
+                # straight through (gathered per chunk — no full-V
+                # materialization anywhere on this path)
+                out = np.stack([
+                    eng.forward_layer_major(
+                        self._feat_handles[name] if r.feats is None
+                        else r.feats,
+                        chunk_size=self.chunk_size)
+                    for r in batch])
+            else:
+                out = eng.forward_batched(feats)
         except BaseException:
             # nothing completed: put the batch back at the head so an
             # execution error (bad feature width, transient OOM) leaves
@@ -421,7 +526,7 @@ class GCNService:
             self.queue = batch + self.queue
             raise
         t1 = time.perf_counter()
-        if self._prefetch is None:
+        if self._pf is None:
             # nothing in flight: no future prefetch can overlap windows
             # that already closed, so don't accumulate them
             self._c.exec_windows.clear()
@@ -467,6 +572,13 @@ class GCNService:
         inside ``step``), so idle gaps between ``run`` calls on a
         long-lived service don't dilute it; ``wall_s`` is the raw
         first-step-to-last-step span.
+
+        Layer-major serving telemetry aggregates over the admitted
+        layer-major sessions' :meth:`GCNEngine.inference_stats` (all
+        plan-free): ``peak_feature_bytes`` is the worst per-session
+        device-feature high-water mark, ``inference_overlap_fraction``
+        pools chunk-prepare time hidden behind execution, and the
+        chunk-bucket counters mirror the batch-bucket ones.
         """
         c = self._c
         wall = max(c.t_last - c.t_first, 0.0)
@@ -476,7 +588,31 @@ class GCNService:
         bucket_hits = c.bucket_hits_retired + sum(
             e._bucket_hits - self._bucket_base[n][1]
             for n, e in self.sessions.items())
+        lm_engines = [e for n, e in self.sessions.items()
+                      if self._mode.get(n) == "layer-major"]
+        lm = [e.inference_stats() for e in lm_engines]
+        chunk_calls = sum(s["chunk_bucket_calls"] for s in lm)
+        chunk_hits = sum(s["chunk_bucket_hits"] for s in lm)
+        # pooled chunk-prepare overlap across layer-major sessions,
+        # from the raw per-run seconds (hidden / total prepare)
+        prep_s = sum((e._inference_stats or {}).get("prepare_s", 0.0)
+                     for e in lm_engines)
+        hidden_s = sum((e._inference_stats or {}).get("overlap_s", 0.0)
+                       for e in lm_engines)
+        ov = hidden_s / prep_s if prep_s else 0.0
         return {
+            "admission": self.admission,
+            "sessions_layer_major": sum(
+                1 for m in self._mode.values() if m == "layer-major"),
+            "peak_feature_bytes": max(
+                (s["peak_feature_bytes"] for s in lm), default=0),
+            "dense_feature_bytes": max(
+                (s["dense_feature_bytes"] for s in lm), default=0),
+            "inference_overlap_fraction": ov,
+            "chunk_bucket_calls": chunk_calls,
+            "chunk_bucket_hits": chunk_hits,
+            "chunk_bucket_hit_rate": (
+                chunk_hits / chunk_calls if chunk_calls else 0.0),
             "sessions": len(self.sessions),
             "queued": len(self.queue),
             # forward_batched power-of-two bucketing across all

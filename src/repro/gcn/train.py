@@ -374,10 +374,15 @@ class GCNTrainer:
 
     def fit(self, feats, *, epochs: int = 30, params=None,
             layer_dims: Sequence[int] | None = None, seed: int = 0,
-            log_every: int = 0, reset_opt: bool = False) -> FitReport:
+            log_every: int = 0, reset_opt: bool = False,
+            eval_every: int = 0) -> FitReport:
         """Train for ``epochs`` full-batch steps; returns a
         :class:`FitReport` and stores the trained params on the engine
         (``engine.params``), ready for ``GCNService.adopt``.
+
+        ``eval_every > 0`` runs the admission-aware :meth:`evaluate`
+        every N epochs (and on the last), recording ``eval_loss`` /
+        ``eval_accuracy`` in the history.
 
         ``feats`` is a global ``(V, F)`` host array, a pre-sharded
         ``(*dims, Vp, F)`` device array, or a
@@ -415,6 +420,9 @@ class GCNTrainer:
                 epoch_walls.append(dt)
             rec = {"epoch": ep, "epoch_s": dt,
                    **{k: float(v) for k, v in metrics.items()}}
+            if eval_every and (ep % eval_every == 0 or ep == epochs - 1):
+                rec.update({f"eval_{k}": v for k, v
+                            in self.evaluate(feats, params).items()})
             history.append(rec)
             if log_every and (ep % log_every == 0 or ep == epochs - 1):
                 print(f"[gcn-train] epoch={ep} loss={rec['loss']:.4f} "
@@ -556,7 +564,8 @@ class GCNTrainer:
                     reshuffle_each_epoch: bool = False, log_every: int = 0,
                     reset_opt: bool = False, agg_impl: str | None = None,
                     pipeline_depth: int = 0,
-                    pipeline_workers: int = 2) -> SampledFitReport:
+                    pipeline_workers: int = 2,
+                    eval_every: int = 0) -> SampledFitReport:
         """Neighbor-sampled mini-batch training: each step optimizes the
         masked CE over one seed set of ``batch_size`` labeled vertices,
         computed on that batch's sampled subgraph with its OWN (cached,
@@ -599,7 +608,14 @@ class GCNTrainer:
         losses, params and batch order (pinned by
         ``tests/test_gcn_pipeline.py``). The report carries the overlap
         accounting (``pipeline_overlap_fraction`` et al.), also
-        surfaced via ``engine.stats()``."""
+        surfaced via ``engine.stats()``.
+
+        ``eval_every > 0`` runs the admission-aware :meth:`evaluate`
+        every N epochs (and on the last), recording ``eval_loss`` /
+        ``eval_accuracy`` in the history. The eval path inherits the
+        sampled path's scaling guarantee: on a graph whose full plan
+        exceeds the plan budget, evaluation goes layer-major and the
+        full-batch plan is STILL never built."""
         eng = self.engine
         if eng.bidir:
             raise ValueError(
@@ -692,6 +708,10 @@ class GCNTrainer:
                 rec = {"epoch": ep, "epoch_s": dt,
                        "batches": len(seed_sets),
                        "loss": loss_sum / max(weight, 1.0)}
+                if eval_every and (ep % eval_every == 0
+                                   or ep == epochs - 1):
+                    rec.update({f"eval_{k}": v for k, v
+                                in self.evaluate(handle, params).items()})
                 history.append(rec)
                 if log_every and (ep % log_every == 0 or ep == epochs - 1):
                     print(f"[gcn-train-sampled] epoch={ep} "
@@ -765,13 +785,30 @@ class GCNTrainer:
         x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
         return fn(bs.engine.plan_arrays(impl), params, x, lb_sh, mk_sh)
 
-    def evaluate(self, feats, params=None) -> dict:
+    def evaluate(self, feats, params=None, *, mode: str = "auto",
+                 chunk_size: int = 128) -> dict:
         """Loss + accuracy of the CURRENT params over the masked
-        vertices (host-side, via ``engine.forward``; ``feats`` may be a
-        dense ``(V, F)`` array or a store handle — full-graph eval
-        gathers the full table either way)."""
+        vertices. Admission-aware like :class:`~repro.gcn.service.
+        GCNService`: ``mode="auto"`` (default) runs the full-graph
+        forward only when the session's plan fits the plan budget (or
+        is already built); otherwise eval routes through
+        :func:`repro.gcn.inference.forward_layer_major` in
+        ``chunk_size`` node-chunks, so train-time evaluation of an
+        over-budget graph never builds the full-graph plan (the same
+        guarantee PR 5 pinned for the training step). ``mode="full"``
+        / ``"layer-major"`` force either path; outputs are
+        bit-identical between them."""
+        from repro.gcn import inference
+
+        if mode not in ("auto", "full", "layer-major"):
+            raise ValueError(f"mode must be auto|full|layer-major: {mode}")
         eng = self.engine
-        logits = eng.forward(feats, params)
+        if (mode == "layer-major"
+                or (mode == "auto" and inference.plan_over_budget(eng))):
+            logits = eng.forward_layer_major(feats, params,
+                                             chunk_size=chunk_size)
+        else:
+            logits = eng.forward(feats, params)
         mask = (np.ones(eng.graph.num_vertices, np.float32)
                 if self.train_mask is None else self.train_mask)
         loss = float(masked_cross_entropy(

@@ -15,6 +15,15 @@ trajectory (``--json BENCH_gcn.json``) that ``benchmarks/run.py
 ``--sync`` selects the synchronous-upload fallback (same results — the
 async path is fenced — but no upload/execute overlap; useful for
 before/after measurements of the overlap win).
+
+``--admission {full,layer-major,auto}`` picks the serving path:
+``auto`` (default) serves a session layer-major when its full plan
+provably exceeds the plan budget (``--plan-budget-kb``), so over-budget
+graphs are admitted and served in bounded ``--chunk-size`` vertex
+chunks instead of erroring; ``--verify-full`` additionally checks one
+served output per layer-major session bit-exactly against an
+UNBUDGETED full-graph forward (the acceptance oracle for the bench's
+layer-major record).
 """
 from __future__ import annotations
 
@@ -35,19 +44,21 @@ MODELS = ("gcn", "gin", "sage")
 def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
                   feat_in: int, layer_dims, max_batch: int,
                   async_upload: bool, plan_budget_bytes: int | None,
-                  agg_buffer_bytes: int = 8 << 10):
+                  agg_buffer_bytes: int = 8 << 10,
+                  admission: str = "auto", chunk_size: int = 128):
     """Admit ``num_graphs`` mixed RMAT sessions (scale and model cycle)
     onto one service, each with store-registered vertex features (the
     recurring-workload setup: requests can then be store-backed);
-    returns ``(service, {name: graph})``."""
+    returns ``(service, {name: graph}, {name: features})``."""
     from repro.config import get_gcn_config
     from repro.core.rmat import rmat
     from repro.gcn import GCNService
 
     svc = GCNService(mesh_dims, max_batch=max_batch,
                      async_upload=async_upload,
-                     plan_budget_bytes=plan_budget_bytes)
-    graphs = {}
+                     plan_budget_bytes=plan_budget_bytes,
+                     admission=admission, chunk_size=chunk_size)
+    graphs, featmap = {}, {}
     for i in range(num_graphs):
         model = MODELS[i % len(MODELS)]
         scale = base_scale + i % 3
@@ -62,7 +73,37 @@ def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
         svc.admit(name, cfg, g, layer_dims=[feat_in, *layer_dims],
                   seed=i, features=feats)
         graphs[name] = g
-    return svc, graphs
+        featmap[name] = feats
+    return svc, graphs, featmap
+
+
+def verify_layer_major(svc, graphs, featmap, done) -> int:
+    """Bit-exact oracle for the layer-major path: for each layer-major
+    session with a served request, rebuild a fresh engine with the plan
+    budget LIFTED, run the full-graph forward on the same input and
+    params, and require exact equality. Returns sessions checked."""
+    from repro.gcn import GCNEngine, cache
+
+    saved = cache._PLANS.budget_bytes
+    cache.set_cache_budget(plan_bytes=None)
+    checked = 0
+    try:
+        for name, eng in svc.sessions.items():
+            if svc.session_mode(name) != "layer-major":
+                continue
+            req = next((r for r in done if r.session == name and r.done),
+                       None)
+            if req is None:
+                continue
+            ref_eng = GCNEngine.build(eng.cfg, graphs[name], svc.dims)
+            x = featmap[name] if req.feats is None else req.feats
+            ref = np.asarray(ref_eng.forward(x, eng.params))
+            assert np.array_equal(req.out, ref), \
+                f"layer-major output differs from full forward: {name}"
+            checked += 1
+    finally:
+        cache.set_cache_budget(plan_bytes=saved)
+    return checked
 
 
 def drive(svc, graphs, *, num_requests: int, feat_in: int, seed: int = 0):
@@ -101,6 +142,22 @@ def main(argv=None) -> int:
                     help="disable async upload (reference behavior)")
     ap.add_argument("--plan-budget-mb", type=int, default=None,
                     help="byte budget for the shared plan cache")
+    ap.add_argument("--plan-budget-kb", type=int, default=None,
+                    help="plan budget in KiB (sub-MiB budgets: the "
+                         "over-budget layer-major scenario at smoke "
+                         "scale); wins over --plan-budget-mb")
+    ap.add_argument("--admission", default="auto",
+                    choices=("full", "layer-major", "auto"),
+                    help="serving path per session: full-graph plan, "
+                         "layer-major chunks, or auto (layer-major "
+                         "only when the plan provably exceeds the "
+                         "budget)")
+    ap.add_argument("--chunk-size", type=int, default=128,
+                    help="vertices a layer-major chunk owns")
+    ap.add_argument("--verify-full", action="store_true",
+                    help="check one served output per layer-major "
+                         "session bit-exactly against an unbudgeted "
+                         "full-graph forward")
     ap.add_argument("--feature-budget", type=int, default=64,
                     help="device byte budget for the feature store "
                          "(MiB; 0 = serve everything from host)")
@@ -115,18 +172,23 @@ def main(argv=None) -> int:
     set_cache_budget(feature_bytes=args.feature_budget << 20)
     mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
     layer_dims = [int(x) for x in args.layers.split(",")]
-    svc, graphs = build_service(
+    plan_budget = (args.plan_budget_kb << 10 if args.plan_budget_kb
+                   else args.plan_budget_mb << 20 if args.plan_budget_mb
+                   else None)
+    svc, graphs, featmap = build_service(
         mesh_dims, num_graphs=args.graphs, base_scale=args.scale,
         feat_in=args.feat, layer_dims=layer_dims, max_batch=args.batch,
-        async_upload=not args.sync,
-        plan_budget_bytes=(args.plan_budget_mb << 20
-                           if args.plan_budget_mb else None))
+        async_upload=not args.sync, plan_budget_bytes=plan_budget,
+        admission=args.admission, chunk_size=args.chunk_size)
     done, wall = drive(svc, graphs, num_requests=args.requests,
                        feat_in=args.feat)
     st = svc.stats()
+    # engine.stats() builds the session's full plan — exactly what an
+    # over-budget layer-major session must never do, so the analytic
+    # link-byte sum covers full-mode sessions only
     link_bytes = sum(
         int(svc.sessions[n].stats(feat_dim=args.feat)["link_bytes"])
-        for n in svc.sessions)
+        for n in svc.sessions if svc.session_mode(n) == "full")
     agg_backend = next(iter(svc.sessions.values())).agg_impl
 
     print(f"served {st['requests']} requests over {st['sessions']} graphs "
@@ -145,6 +207,22 @@ def main(argv=None) -> int:
     # the recurring workload MUST hit the device tiers; a zero hit rate
     # means the storage tier stopped serving (regression)
     assert fstats["hit_rate"] > 0, "feature store served no hits"
+
+    lm_sessions = st["sessions_layer_major"]
+    if lm_sessions:
+        print(f"layer-major: {lm_sessions}/{st['sessions']} sessions "
+              f"(admission={st['admission']}, chunk {args.chunk_size}); "
+              f"peak {st['peak_feature_bytes'] / 2**10:.0f} KiB vs "
+              f"{st['dense_feature_bytes'] / 2**10:.0f} KiB dense, "
+              f"prepare overlap {st['inference_overlap_fraction']:.0%}, "
+              f"chunk-bucket hit rate "
+              f"{st['chunk_bucket_hit_rate']:.0%}")
+    if args.verify_full:
+        checked = verify_layer_major(svc, graphs, featmap, done)
+        assert checked == lm_sessions, \
+            f"verified {checked} of {lm_sessions} layer-major sessions"
+        print(f"verify-full: {checked} layer-major session(s) "
+              "bit-identical to unbudgeted full forward")
 
     if args.json:
         rec = {
@@ -168,10 +246,26 @@ def main(argv=None) -> int:
             "feature_hit_rate": round(fstats["hit_rate"], 4),
             "feature_bytes_gathered": int(fstats["gathered_bytes"]),
             "feature_bytes_dense": int(fstats["dense_bytes"]),
+            "admission": st["admission"],
+            "sessions_layer_major": lm_sessions,
             "cache": {layer: {k: v for k, v in s.items()}
                       for layer, s in st["cache"].items()
                       if isinstance(s, dict)},
         }
+        if lm_sessions:
+            rec["layer_major"] = {
+                "sessions": lm_sessions,
+                "chunk_size": args.chunk_size,
+                "plan_budget_bytes": plan_budget,
+                "requests_per_sec": round(st["requests"] / wall, 3),
+                "peak_feature_bytes": int(st["peak_feature_bytes"]),
+                "dense_feature_bytes": int(st["dense_feature_bytes"]),
+                "inference_overlap_fraction": round(
+                    st["inference_overlap_fraction"], 4),
+                "chunk_bucket_hit_rate": round(
+                    st["chunk_bucket_hit_rate"], 4),
+                "verified_full_parity": bool(args.verify_full),
+            }
         from repro.launch.bench_record import write_record
 
         write_record(args.json, "serve", rec)

@@ -1,0 +1,300 @@
+"""Layer-major chunked inference (``repro.gcn.inference``): the
+serving path for graphs whose full plan exceeds the cache budget.
+
+Pins, in order of importance:
+
+  * **bit-identity property test** — ``forward_layer_major`` equals
+    full-graph ``forward`` EXACTLY (``np.array_equal``, not allclose)
+    across models {gcn, gin, sage}, both aggregation backends, chunk
+    sizes {64, 128, V} and serial vs pipelined preparation — the fp32
+    scatter-add order argument in the module docstring, made load
+    bearing;
+  * **bounded working set** — on a sparse graph the device-resident
+    feature high-water mark stays under what full-graph forward
+    allocates, and a store-handle input never triggers ``gather_all``;
+  * **over-budget admission** — a graph whose plan bytes provably
+    exceed ``set_cache_budget(plan_bytes=...)`` is admitted by
+    ``GCNService(admission="auto")`` and served bit-identically to an
+    unbudgeted full forward, with the full plan NEVER built (the
+    acceptance pin for the serve bench record);
+  * **eval path scaling** — ``fit_sampled(eval_every=...)`` on an
+    over-budget graph evaluates layer-major; the full-batch plan is
+    still never built (the PR-5 guarantee extended to eval);
+  * **cache-key hygiene** — chunk sub-plans live in the ``batch``
+    cache layer under ``"chunk:{parent_fp}:{sha1}"`` keys: chunks and
+    trainer batches never cross-hit, and two parents sharing a chunk
+    node set never share a sub-plan (edge-direction regression);
+  * **eviction mid-inference benign** — a batch budget too small for
+    all chunk sub-plans forces rebuilds, never wrong bits.
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``); the 8-device
+layer-major parity case lives in ``tests/_gcn_engine_main.py``.
+"""
+import numpy as np
+
+from _hypothesis_compat import given, settings, strategies as st
+
+V, E, F, C = 256, 2048, 8, 4
+
+# full-forward references, memoized per (model, impl): gcn_setup's
+# engines/params/features are deterministic per seed, so one oracle
+# serves every property example
+_FULL_REFS: dict = {}
+
+
+def _full_ref(eng, feats, model, impl):
+    key = (model, impl)
+    if key not in _FULL_REFS:
+        _FULL_REFS[key] = np.asarray(eng.forward(feats, agg_impl=impl))
+    return _FULL_REFS[key]
+
+
+@settings(max_examples=8, deadline=None)
+@given(model=st.sampled_from(["gcn", "gin", "sage"]),
+       impl=st.sampled_from(["jnp", "pallas"]),
+       chunk=st.sampled_from([64, 128, V]),
+       depth=st.sampled_from([0, 2]))
+def test_layer_major_bit_identical_to_full(fresh_caches, gcn_setup,
+                                           model, impl, chunk, depth):
+    """THE contract: layer-major output equals full-graph forward
+    bit-for-bit for every (model, backend, chunk size, pipelining)
+    combination — including chunk == V (one chunk spanning the graph)
+    and depth 0 (serial preparation)."""
+    eng, feats, _, _ = gcn_setup(model)
+    ref = _full_ref(eng, feats, model, impl)
+    out = eng.forward_layer_major(feats, agg_impl=impl, chunk_size=chunk,
+                                  pipeline_depth=depth)
+    assert out.shape == ref.shape and out.dtype == ref.dtype
+    assert np.array_equal(out, ref), (model, impl, chunk, depth)
+    st_ = eng.inference_stats()
+    assert st_["inference_chunks"] == -(-V // chunk)
+    # rerun is a pure sub-plan cache hit and still exact
+    again = eng.forward_layer_major(feats, agg_impl=impl,
+                                    chunk_size=chunk,
+                                    pipeline_depth=depth)
+    assert np.array_equal(again, ref)
+    st2 = eng.inference_stats()
+    assert st2["chunk_plan_misses"] == 0  # rerun: pure sub-plan hits
+    assert st2["chunk_plan_hits"] > 0
+
+
+def test_peak_feature_bytes_bounded_store_routed(fresh_caches, gcn_cfg):
+    """On a sparse graph the chunked schedule's device feature
+    high-water mark stays strictly under the full-forward dense
+    allocation, and a FeatureHandle input gathers per chunk through
+    the store — ``gather_all`` is never called."""
+    import jax
+
+    from repro.core.rmat import rmat
+    from repro.gcn import GCNEngine, featurestore
+
+    g = rmat(12, 8192, seed=7, name="sparse-infer")
+    eng = GCNEngine.build(gcn_cfg("gcn"), g, (1, 1))
+    eng.init_params(jax.random.PRNGKey(0), [F, 8, C])
+    feats = (np.random.default_rng(3)
+             .normal(size=(g.num_vertices, F)).astype(np.float32))
+    handle = featurestore.default_store().register(g, feats)
+    ref = np.asarray(eng.forward(feats))  # dense input: store untouched
+
+    out = eng.forward_layer_major(handle, chunk_size=128)
+    assert np.array_equal(out, ref)
+    st_ = eng.inference_stats()
+    assert 0 < st_["peak_feature_bytes"] < st_["dense_feature_bytes"]
+    assert handle.stats()["full_gathers"] == 0
+    assert st_["chunk_bucket_hit_rate"] > 0.5  # pow2 buckets shared
+
+
+def test_overbudget_graph_admitted_and_served_layer_major(fresh_caches,
+                                                          gcn_cfg):
+    """The acceptance pin: a graph whose plan provably exceeds
+    ``set_cache_budget(plan_bytes=...)`` is admitted under
+    ``admission="auto"``, served bit-identically to an UNBUDGETED
+    full-graph forward, at bounded peak bytes with overlap won — and
+    the session's full plan is never built."""
+    import jax
+
+    from repro.core.rmat import rmat
+    from repro.gcn import GCNEngine, GCNService, cache
+
+    cfg = gcn_cfg("gcn")
+    g = rmat(12, 8192, seed=7, name="overbudget-serve")
+    x = (np.random.default_rng(3)
+         .normal(size=(g.num_vertices, F)).astype(np.float32))
+
+    ref_eng = GCNEngine.build(cfg, g, (1, 1))
+    params = ref_eng.init_params(jax.random.PRNGKey(0), [F, 8, C])
+    ref = np.asarray(ref_eng.forward(x, params))
+    cache.clear_all()
+
+    cache.set_cache_budget(plan_bytes=64 << 10)  # < 12 * (E + V)
+    svc = GCNService((1, 1), admission="auto", chunk_size=128)
+    svc.admit("big", cfg, g, layer_dims=[F, 8, C], seed=0)
+    assert svc.session_mode("big") == "layer-major"
+    eng = svc.sessions["big"]
+    eng.params = params  # align with the oracle's init
+    assert not eng.plan_cached and eng._plan is None
+
+    r = svc.submit("big", x)
+    svc.run()
+    assert r.done and np.array_equal(r.out, ref)
+    assert eng._plan is None and not eng.plan_cached  # still never built
+    st_ = svc.stats()
+    assert st_["admission"] == "auto"
+    assert st_["sessions_layer_major"] == 1
+    assert 0 < st_["peak_feature_bytes"] < st_["dense_feature_bytes"]
+    assert st_["inference_overlap_fraction"] > 0
+    assert st_["chunk_bucket_hit_rate"] > 0
+
+
+def test_forced_admission_modes(fresh_caches, gcn_cfg, erdos_graph):
+    """``admission="layer-major"`` chunks even an in-budget graph;
+    ``admission="full"`` never does; both serve identical bits."""
+    from repro.gcn import GCNService
+
+    g = erdos_graph(V, E, seed=7)
+    x = (np.random.default_rng(1)
+         .normal(size=(V, F)).astype(np.float32))
+    outs = {}
+    for adm in ("full", "layer-major"):
+        svc = GCNService((1, 1), admission=adm, chunk_size=64)
+        svc.admit("g", gcn_cfg("gcn"), g, layer_dims=[F, 8, C], seed=0)
+        assert svc.session_mode("g") == adm
+        r = svc.submit("g", x)
+        svc.run()
+        outs[adm] = r.out
+    assert np.array_equal(outs["full"], outs["layer-major"])
+
+
+def test_eval_during_fit_sampled_never_builds_full_plan(fresh_caches,
+                                                        gcn_cfg):
+    """Satellite-2 pin: on an over-budget graph,
+    ``fit_sampled(eval_every=1)`` records eval loss/accuracy every
+    epoch via the layer-major path — and the full-batch plan is STILL
+    never built, extending PR 5's training guarantee to evaluation."""
+    from repro.core.rmat import rmat
+    from repro.gcn import GCNEngine, GCNTrainer, cache
+
+    g = rmat(12, 8192, seed=7, name="overbudget-eval")
+    Vb = g.num_vertices
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(Vb, F)).astype(np.float32)
+    labels = rng.integers(0, C, size=Vb).astype(np.int32)
+    mask = (rng.random(Vb) < 0.1).astype(np.float32)
+
+    cache.set_cache_budget(plan_bytes=64 << 10)
+    eng = GCNEngine.build(gcn_cfg("gcn"), g, (1, 1))
+    tr = GCNTrainer(eng, labels, mask)
+    rep = tr.fit_sampled(x, epochs=2, batch_size=64, fanouts=(4, 4),
+                         layer_dims=[F, 8, C], seed=0, eval_every=1)
+    assert eng._plan is None and not eng.plan_cached
+    evals = [h for h in rep.history if "eval_loss" in h]
+    assert len(evals) == 2
+    assert all(np.isfinite(h["eval_loss"]) for h in evals)
+    assert eng.inference_stats()["inference_chunks"] > 0
+
+    # forcing the two modes on the SAME params agrees exactly
+    cache.set_cache_budget(plan_bytes=None)
+    assert tr.evaluate(x, mode="full") == tr.evaluate(x,
+                                                      mode="layer-major")
+
+
+def test_chunk_and_batch_cache_keys_never_cross_hit(fresh_caches,
+                                                    gcn_setup):
+    """Satellite-6 regression: chunk sub-plans and the trainer's
+    sampled-batch sub-plans share the byte-bounded ``batch`` layer but
+    live in disjoint key namespaces (``chunk:`` vs ``batch:`` graph-fp
+    prefixes) — running both on one graph adds entries, never
+    cross-hits, and reruns of each are pure hits."""
+    from repro.gcn import GCNTrainer, cache
+
+    eng, feats, labels, mask = gcn_setup("gcn")
+    params0 = eng.params  # fit_sampled trains in place; pin the oracle
+    ref = np.asarray(eng.forward(feats, params0))
+
+    out = eng.forward_layer_major(feats, params0, chunk_size=64)
+    assert np.array_equal(out, ref)
+    s1 = cache.cache_stats()["batch"]
+    n_chunks = s1["entries"]
+    assert n_chunks == V // 64 and s1["misses"] == n_chunks
+    assert s1["hits"] == n_chunks  # layer 1 reused layer 0's sessions
+
+    tr = GCNTrainer(eng, labels, mask)
+    tr.fit_sampled(feats, epochs=1, batch_size=64, fanouts=(4, 4),
+                   layer_dims=[F, 8, C], seed=0)
+    s2 = cache.cache_stats()["batch"]
+    assert s2["entries"] > n_chunks  # batches did NOT reuse chunk slots
+
+    # rerunning inference hits every chunk entry, misses nothing
+    assert np.array_equal(
+        eng.forward_layer_major(feats, params0, chunk_size=64), ref)
+    s3 = cache.cache_stats()["batch"]
+    assert s3["entries"] == s2["entries"]
+    assert s3["misses"] == s2["misses"]
+    assert s3["hits"] == s2["hits"] + 2 * n_chunks  # both layers hit
+
+
+def test_chunk_keys_distinguish_parent_graphs(fresh_caches, gcn_cfg):
+    """Two parents can induce the SAME chunk node set (here: one edge,
+    opposite directions, both endpoints inside the chunk) — the parent
+    fingerprint in the ``chunk:{parent_fp}:{sha1}`` key must keep
+    their sub-plans apart, or the second graph would silently serve
+    the first graph's aggregation."""
+    import jax
+
+    from repro.core.graph import Graph
+    from repro.gcn import GCNEngine, cache
+    from repro.gcn import inference
+
+    Vs = 64
+    g1 = Graph(Vs, np.array([5], np.int32), np.array([6], np.int32),
+               name="fwd-edge")
+    g2 = Graph(Vs, np.array([6], np.int32), np.array([5], np.int32),
+               name="rev-edge")
+    engines = []
+    for g in (g1, g2):
+        e = GCNEngine.build(gcn_cfg("gcn"), g, (1, 1))
+        e.init_params(jax.random.PRNGKey(0), [F, C])
+        engines.append(e)
+    e1, e2 = engines
+    x = (np.random.default_rng(2)
+         .normal(size=(Vs, F)).astype(np.float32))
+
+    # identical chunk node sets...
+    cs1 = e1.forward_layer_major(x, chunk_size=Vs)
+    cs2 = e2.forward_layer_major(x, chunk_size=Vs)
+    assert cache.cache_stats()["batch"]["entries"] == 2  # ...two plans
+    # ...and each matches ITS OWN full forward (a collision would make
+    # g2 reuse g1's plan and fail this exactness)
+    assert np.array_equal(cs1, np.asarray(e1.forward(x)))
+    assert np.array_equal(cs2, np.asarray(e2.forward(x)))
+    assert not np.array_equal(cs1, cs2)
+
+    ch1 = inference._chunk_session(e1, 0, Vs,
+                                   inference._chunk_nodes(
+                                       *inference._prepared_csr(e1)[:2],
+                                       0, Vs))
+    assert ch1.engine.graph_fp.startswith("chunk:")
+
+
+def test_eviction_mid_inference_is_benign(fresh_caches, gcn_setup):
+    """A batch budget too small to hold every chunk sub-plan forces
+    eviction + rebuild DURING inference — results stay bit-exact (the
+    builds are pure and content-keyed), only the hit rate suffers."""
+    from repro.gcn import cache
+
+    eng, feats, _, _ = gcn_setup("gcn")
+    ref = np.asarray(eng.forward(feats))
+    one = cache.cache_stats()["batch"]["bytes"]  # 0: sizing probe below
+
+    eng.forward_layer_major(feats, chunk_size=64)
+    full_bytes = cache.cache_stats()["batch"]["bytes"]
+    assert full_bytes > 0 and one == 0
+    cache.set_cache_budget(batch_bytes=max(1, full_bytes // 2))
+    assert cache.cache_stats()["batch"]["evictions"] > 0
+
+    out = eng.forward_layer_major(feats, chunk_size=64)
+    assert np.array_equal(out, ref)
+    assert cache.cache_stats()["batch"]["evictions"] > 0
+    # and again, still exact, still churning
+    assert np.array_equal(eng.forward_layer_major(feats, chunk_size=64),
+                          ref)
