@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: smoke test bench bench-json serve train train-sampled \
-	docs-check check
+	docs-check trace-check check
 
 # engine example + tier-1 tests, multi-device (8 forced host devices)
 smoke:
@@ -53,5 +53,19 @@ bench-json:
 docs-check:
 	PYTHONPATH=src $(PY) tools/check_docs.py
 
+# observability gate: a small pipelined sampled-training run with
+# --trace-out, then tools/check_trace.py proves the Chrome trace is
+# well-formed AND that gcn-pipe prepare spans overlap main-thread
+# execute spans (the checker's own fixtures run first)
+trace-check:
+	PYTHONPATH=src $(PY) tools/check_trace.py --selftest
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src $(PY) -m repro.launch.gcn_train --mesh 2x2 \
+		--models gcn --scale 9 --epochs 6 --sampler \
+		--batch-size 128 --fanout 8,8 --pipeline-depth 2 \
+		--trace-out /tmp/gcn_trace.json
+	PYTHONPATH=src $(PY) tools/check_trace.py /tmp/gcn_trace.json \
+		--require-overlap
+
 # the CI-style gate: everything a PR must keep green
-check: smoke serve train train-sampled docs-check
+check: smoke serve train train-sampled trace-check docs-check

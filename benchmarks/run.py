@@ -56,6 +56,26 @@ def _forced_host_env(root: Path) -> dict:
     return env
 
 
+def _assert_telemetry(rec: dict, suite: str) -> None:
+    """Every suite record must embed a schema-versioned snapshot of the
+    process-wide metrics registry (``repro.gcn.obs``) — the machine-
+    readable counters future PRs diff perf claims against. A missing or
+    version-skewed snapshot means a launcher stopped embedding it (or
+    obs changed shape without bumping the schema)."""
+    from repro.gcn.obs import TELEMETRY_SCHEMA_VERSION
+
+    t = rec.get("telemetry")
+    assert isinstance(t, dict), \
+        f"{suite} record carries no telemetry snapshot: {sorted(rec)}"
+    assert t.get("schema_version") == TELEMETRY_SCHEMA_VERSION, \
+        (f"{suite} telemetry schema {t.get('schema_version')!r} != "
+         f"expected {TELEMETRY_SCHEMA_VERSION}")
+    assert isinstance(t.get("metrics"), dict) and t["metrics"], \
+        f"{suite} telemetry snapshot has no metrics"
+    print(f"# {suite} telemetry gate: schema v{t['schema_version']}, "
+          f"{len(t['metrics'])} metric(s)", flush=True)
+
+
 def run_smoke() -> int:
     """One-command multi-device smoke: the GCNEngine example (8 forced
     host devices) plus the tier-1 test suite. Each step runs in its own
@@ -152,7 +172,8 @@ def run_serve(json_path: str) -> int:
     assert lm["verified_full_parity"], "bit-parity oracle did not run"
     assert lm["peak_feature_bytes"] < lm["dense_feature_bytes"], \
         f"layer-major peak not bounded: {lm}"
-    assert lm["inference_overlap_fraction"] > 0, \
+    assert lm["inference_overlap_fraction"] is not None \
+        and lm["inference_overlap_fraction"] > 0, \
         f"no chunk-prepare time was hidden: {lm}"
     print(f"# serve layer-major gate: {lm['sessions']} sessions, "
           f"{lm['requests_per_sec']} req/s, peak "
@@ -164,6 +185,7 @@ def run_serve(json_path: str) -> int:
     from repro.launch.bench_record import write_record
 
     rec = json.loads(Path(json_path).read_text())["serve"]
+    _assert_telemetry(rec, "serve")
     rec["layer_major"] = lm
     write_record(json_path, "serve", rec)
     return 0
@@ -185,7 +207,13 @@ def run_train(json_path: str) -> int:
     print(f"# train: {' '.join(cmd)}", flush=True)
     r = subprocess.run(cmd, env=env, cwd=root)
     print(f"# train -> {'OK' if r.returncode == 0 else 'FAIL'}", flush=True)
-    return r.returncode
+    if r.returncode:
+        return r.returncode
+    import json
+
+    _assert_telemetry(json.loads(Path(json_path).read_text())["train"],
+                      "train")
+    return 0
 
 
 def run_train_sampled(json_path: str, pipeline_depth: int = 2) -> int:
@@ -201,7 +229,11 @@ def run_train_sampled(json_path: str, pipeline_depth: int = 2) -> int:
     pipeline runs at depth 2: the driver fits the first model serially
     AND pipelined (bit-identical, asserted in-driver) and this gate
     checks the recorded pair — overlap fraction > 0 and pipelined
-    epoch wall <= serial epoch wall. Records epoch wall, batch-plan
+    epoch wall <= serial epoch wall. The run exports a Chrome trace
+    (``--trace-out``) which ``tools/check_trace.py`` validates with
+    ``--require-overlap``: well-formed B/E events AND a gcn-pipe
+    worker's ``pipe_prepare`` span visibly concurrent with a
+    main-thread ``execute`` span. Records epoch wall, batch-plan
     cache hit rate, feature-store hit rate/bytes, the pipeline pair
     and the exchange bytes of one sampled step under
     ``"train-sampled"``."""
@@ -209,28 +241,41 @@ def run_train_sampled(json_path: str, pipeline_depth: int = 2) -> int:
 
     root = Path(__file__).resolve().parent.parent
     env = _forced_host_env(root)
-    cmd = [sys.executable, "-m", "repro.launch.gcn_train",
-           "--mesh", "2x2", "--models", "gcn,gin,sage",
-           "--scale", "9", "--epochs", "12", "--sampler",
-           "--batch-size", "128", "--fanout", "8,8",
-           "--feature-budget", "64",
-           "--pipeline-depth", str(pipeline_depth),
-           "--json", json_path]
-    print(f"# train-sampled: {' '.join(cmd)}", flush=True)
-    r = subprocess.run(cmd, env=env, cwd=root)
-    print(f"# train-sampled -> {'OK' if r.returncode == 0 else 'FAIL'}",
-          flush=True)
-    if r.returncode:
-        return r.returncode
+    with tempfile.TemporaryDirectory() as td:
+        trace_path = str(Path(td) / "train_sampled_trace.json")
+        cmd = [sys.executable, "-m", "repro.launch.gcn_train",
+               "--mesh", "2x2", "--models", "gcn,gin,sage",
+               "--scale", "9", "--epochs", "12", "--sampler",
+               "--batch-size", "128", "--fanout", "8,8",
+               "--feature-budget", "64",
+               "--pipeline-depth", str(pipeline_depth),
+               "--trace-out", trace_path,
+               "--json", json_path]
+        print(f"# train-sampled: {' '.join(cmd)}", flush=True)
+        r = subprocess.run(cmd, env=env, cwd=root)
+        print(f"# train-sampled -> {'OK' if r.returncode == 0 else 'FAIL'}",
+              flush=True)
+        if r.returncode:
+            return r.returncode
+        check = [sys.executable, str(root / "tools" / "check_trace.py"),
+                 trace_path]
+        if pipeline_depth > 0:
+            check.append("--require-overlap")
+        print(f"# train-sampled trace gate: {' '.join(check)}", flush=True)
+        r = subprocess.run(check, env=env, cwd=root)
+        if r.returncode:
+            return r.returncode
+    rec = json.loads(Path(json_path).read_text())["train-sampled"]
+    _assert_telemetry(rec, "train-sampled")
     if pipeline_depth <= 0:
         return 0  # serial run: no pair to gate
     # the pipeline gate reads the record the driver just wrote: host-
     # side latency must actually hide behind device execution, and
     # hiding it must never cost wall time
-    rec = json.loads(Path(json_path).read_text())["train-sampled"]
     pipe = rec.get("pipeline")
     assert pipe is not None, "train-sampled record lost its pipeline pair"
-    assert pipe["overlap_fraction"] > 0, \
+    assert pipe["overlap_fraction"] is not None \
+        and pipe["overlap_fraction"] > 0, \
         f"no prepare time was hidden: {pipe}"
     assert pipe["pipelined_wall_s"] <= pipe["serial_wall_s"], \
         f"pipelining must not slow the epoch wall: {pipe}"

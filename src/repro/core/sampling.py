@@ -46,6 +46,35 @@ from repro.core.graph import Graph
 __all__ = ["NeighborSampler", "SampledBatch", "csr_in_with_values",
            "induce_in_edges"]
 
+_OBS = None
+
+
+def _obs():
+    """Lazy handle on ``repro.gcn.obs`` — imported on first use, not at
+    module import, because ``repro.gcn`` imports this module (via
+    ``train``) and an eager import would cycle. ``core`` stays
+    importable without the gcn package on the path."""
+    global _OBS
+    if _OBS is None:
+        try:
+            from repro.gcn import obs as _OBS  # noqa: PLW0603
+        except ImportError:
+            _OBS = False
+    return _OBS or None
+
+
+class _NullCtx:
+    """Stand-in span when ``repro.gcn.obs`` is unavailable."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs):
+        return self
+
 
 def csr_in_with_values(graph: Graph, values: np.ndarray | None = None):
     """:meth:`Graph.csr_in` plus an optional per-edge ``values`` array
@@ -206,17 +235,31 @@ class NeighborSampler:
         V = self.graph.num_vertices
         if seeds.min() < 0 or seeds.max() >= V:
             raise ValueError(f"seed ids must be in [0, {V})")
-        rng = self._batch_rng(seeds)
-        nodes = seeds
-        layers = [seeds]
-        for fanout in self.fanouts:
-            sampled = self.sample_in_neighbors(nodes, fanout, rng)
-            nodes = np.union1d(nodes, sampled)
-            layers.append(nodes)
-        sub = None
-        if induce_subgraph:
-            sub, _ = induce_in_edges(self.indptr, self.src, None, nodes,
-                                     name=f"{self.graph.name}#batch")
+        obs = _obs()
+        with (obs.trace.span("sample", seeds=int(seeds.size),
+                             graph=self.graph.name)
+              if obs is not None else _NullCtx()) as sp:
+            rng = self._batch_rng(seeds)
+            nodes = seeds
+            layers = [seeds]
+            for fanout in self.fanouts:
+                sampled = self.sample_in_neighbors(nodes, fanout, rng)
+                nodes = np.union1d(nodes, sampled)
+                layers.append(nodes)
+            sub = None
+            if induce_subgraph:
+                sub, _ = induce_in_edges(self.indptr, self.src, None,
+                                         nodes,
+                                         name=f"{self.graph.name}#batch")
+            sp.set(nodes=int(nodes.size))
+        if obs is not None:
+            obs.metrics.counter(
+                "sample.batches", unit="batches",
+                help="mini-batches drawn by NeighborSampler.sample").add(1)
+            obs.metrics.counter(
+                "sample.nodes", unit="vertices",
+                help="visited vertices across all sampled batches").add(
+                    int(nodes.size))
         return SampledBatch(seeds=seeds, nodes=nodes, layers=tuple(layers),
                             subgraph=sub, parent_vertices=V)
 

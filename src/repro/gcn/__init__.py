@@ -20,10 +20,14 @@ bounded, order-preserving worker pool (``SamplePipeline``);
 budget — computed per layer in bounded 1-hop vertex chunks with
 pipelined chunk preparation, bit-identical to full-graph forward, and
 wired into ``GCNService`` admission (``admission="auto"`` routes
-over-budget graphs to it). ``register_model`` plugs
-new aggregation semantics into the shared execution path. The low-level
-layers underneath are ``repro.core.plan`` (host-side mapping) and
-``repro.core.message_passing`` (SPMD executor).
+over-budget graphs to it). ``repro.gcn.obs`` is the cross-cutting
+observability layer: one process-wide span ``Tracer`` (Chrome-trace
+export of the sample -> plan -> gather -> upload -> execute chain) and
+one typed ``MetricsRegistry`` every stage feeds — ``trace``,
+``metrics`` and ``telemetry()`` here are its singletons.
+``register_model`` plugs new aggregation semantics into the shared
+execution path. The low-level layers underneath are ``repro.core.plan``
+(host-side mapping) and ``repro.core.message_passing`` (SPMD executor).
 """
 from repro.gcn.cache import (
     PlanKey,
@@ -47,6 +51,16 @@ from repro.gcn.inference import (
     estimate_plan_bytes,
     forward_layer_major,
     plan_over_budget,
+)
+from repro.gcn.obs import (
+    KNOWN_PHASES,
+    TELEMETRY_SCHEMA_VERSION,
+    MetricsRegistry,
+    Tracer,
+    metrics,
+    overlap_fraction,
+    telemetry,
+    trace,
 )
 from repro.gcn.pipeline import SamplePipeline
 from repro.gcn.registry import (
@@ -74,11 +88,15 @@ __all__ = [
     "GCNEngine",
     "GCNService",
     "GCNTrainer",
+    "KNOWN_PHASES",
+    "MetricsRegistry",
     "ModelSpec",
     "PlanKey",
     "SamplePipeline",
     "SampledFitReport",
     "ServeRequest",
+    "TELEMETRY_SCHEMA_VERSION",
+    "Tracer",
     "cache_stats",
     "clear_plan_cache",
     "default_store",
@@ -87,6 +105,8 @@ __all__ = [
     "get_model",
     "graph_fingerprint",
     "masked_cross_entropy",
+    "metrics",
+    "overlap_fraction",
     "plan_cache_stats",
     "plan_over_budget",
     "reference_loss_and_grad",
@@ -94,4 +114,6 @@ __all__ = [
     "registered_models",
     "resolve_agg_impl",
     "set_cache_budget",
+    "telemetry",
+    "trace",
 ]

@@ -80,7 +80,7 @@ from repro.core import message_passing as mp
 from repro.core.graph import Graph
 from repro.core.partition import RoundPartition, TorusMesh, make_partition
 from repro.core.plan import CommPlan, build_plan
-from repro.gcn import cache
+from repro.gcn import cache, obs
 from repro.gcn.cache import PlanKey, graph_fingerprint
 from repro.gcn.registry import ModelSpec, get_model
 from repro.kernels.spmm import ops as spmm_ops
@@ -300,9 +300,15 @@ class GCNEngine:
         drops the ELL layouts / compiled steps derived from it."""
         if self._plan is None:
             def build():
-                g2, w = self.prepared_graph()
-                return build_plan(self.cfg, g2, self.torus, self.part,
-                                  edge_weights=w, bidir=self.bidir)
+                with obs.trace.span("plan_build", graph=self.graph_fp[:12],
+                                    scope="full"):
+                    g2, w = self.prepared_graph()
+                    plan = build_plan(self.cfg, g2, self.torus, self.part,
+                                      edge_weights=w, bidir=self.bidir)
+                obs.metrics.counter(
+                    "engine.plan_builds", unit="plans",
+                    help="relay plans built (cache misses)").add(1)
+                return plan
 
             # the pinned getter registers this session and assigns
             # self._plan (via _pin_plan) under the store lock, so an
@@ -351,12 +357,17 @@ class GCNEngine:
         key = dataclasses.replace(self.plan_key, agg_impl="pallas")
 
         def build():
-            plan = self.plan
-            return spmm_ops.build_ell_layout_rounds(
-                plan.edge_repl, plan.edge_slot, plan.edge_w,
-                plan.part.slots_per_round,
-                block_slots=self.cfg.ell_block_slots,
-                edge_align=self.cfg.ell_edge_align)
+            with obs.trace.span("ell_build", graph=self.graph_fp[:12]):
+                plan = self.plan
+                ell = spmm_ops.build_ell_layout_rounds(
+                    plan.edge_repl, plan.edge_slot, plan.edge_w,
+                    plan.part.slots_per_round,
+                    block_slots=self.cfg.ell_block_slots,
+                    edge_align=self.cfg.ell_edge_align)
+            obs.metrics.counter(
+                "engine.ell_builds", unit="layouts",
+                help="blocked-ELL layouts built (cache misses)").add(1)
+            return ell
 
         return cache.get_ell(key, build)
 
@@ -367,8 +378,14 @@ class GCNEngine:
         backend uploads its encoding exactly once."""
         impl = self._impl(agg_impl)
         if impl not in self._plan_dev:
-            ell = self.ell_layout() if impl == "pallas" else None
-            self._plan_dev[impl] = mp.plan_device_arrays(self.plan, ell=ell)
+            with obs.trace.span("upload", what="plan_arrays", impl=impl,
+                                graph=self.graph_fp[:12]):
+                ell = self.ell_layout() if impl == "pallas" else None
+                self._plan_dev[impl] = mp.plan_device_arrays(self.plan,
+                                                             ell=ell)
+            obs.metrics.counter(
+                "engine.plan_uploads", unit="uploads",
+                help="plan-array device uploads (per backend)").add(1)
         return self._plan_dev[impl]
 
     def plan_uploaded(self, agg_impl: str | None = None) -> bool:
@@ -821,39 +838,53 @@ class GCNEngine:
             # had already been executed, so the call compiled nothing
             batch_bucket_calls=self._bucket_calls,
             batch_bucket_hits=self._bucket_hits,
-            batch_bucket_hit_rate=(
-                self._bucket_hits / self._bucket_calls
-                if self._bucket_calls else 0.0),
+            # None (not 0.0) before any forward_batched call — an unrun
+            # ledger is not a measured zero hit rate
+            batch_bucket_hit_rate=obs.ratio(
+                self._bucket_hits, self._bucket_calls, default=None),
             batch_buckets=sorted({b for (_, b, _) in self._batch_buckets}),
         )
         # sampling-pipeline overlap of the last fit_sampled run on this
-        # engine (repro.gcn.pipeline; zeros when serial / never sampled)
-        ps = self._pipeline_stats or {}
+        # engine (repro.gcn.pipeline). None until a fit_sampled runs —
+        # a serial run then reports a genuine 0.0 (nothing was hidden)
+        ps = self._pipeline_stats
         out.update(
-            pipeline_depth=ps.get("pipeline_depth", 0),
-            pipeline_overlap_fraction=ps.get(
-                "pipeline_overlap_fraction", 0.0),
-            pipeline_queue_occupancy=ps.get(
-                "pipeline_queue_occupancy", 0.0),
+            pipeline_depth=ps.get("pipeline_depth", 0) if ps else 0,
+            pipeline_overlap_fraction=(
+                ps.get("pipeline_overlap_fraction") if ps else None),
+            pipeline_queue_occupancy=(
+                ps.get("pipeline_queue_occupancy") if ps else None),
         )
         out.update(self.inference_stats())
         from repro.gcn import featurestore
 
         fs = featurestore.default_store().graph_stats(self.graph_fp)
+        frows = fs["hit_rows"] + fs["miss_rows"]
         out.update(
-            feature_hit_rate=fs["hit_rate"],
+            # None until a gather touches this graph's features
+            feature_hit_rate=obs.ratio(fs["hit_rows"], frows,
+                                       default=None),
             feature_bytes_gathered=fs["gathered_bytes"],
             feature_bytes_dense=fs["dense_bytes"],
             feature_byte_reduction=(
                 1.0 - fs["gathered_bytes"] / fs["dense_bytes"]
-                if fs["dense_bytes"] else 0.0),
+                if fs["dense_bytes"] else None),
         )
         return out
 
+    def telemetry(self) -> dict:
+        """Schema-versioned snapshot of the process-wide typed metrics
+        registry (:mod:`repro.gcn.obs`) — counters are cumulative across
+        the whole process (every engine, service and pipeline), not
+        scoped to this session. Bench records embed this next to the
+        per-session :meth:`stats`."""
+        return obs.telemetry()
+
     def inference_stats(self) -> dict:
         """Layer-major inference telemetry of the LAST
-        :meth:`forward_layer_major` call on this engine (zeros before
-        one runs), plus the cumulative chunk-bucket ledger.
+        :meth:`forward_layer_major` call on this engine, plus the
+        cumulative chunk-bucket ledger. Ratio fields are ``None`` (not
+        ``0.0``) before any run measures them — counts stay 0.
         Deliberately **plan-free**: :meth:`stats` builds the full plan,
         which is exactly what an over-budget layer-major session must
         never do — the service reports through this accessor."""
@@ -868,12 +899,13 @@ class GCNEngine:
             "peak_feature_bytes": inf.get("peak_feature_bytes", 0),
             "dense_feature_bytes": inf.get("dense_feature_bytes", 0),
             # share of chunk-prepare wall time hidden behind execution
-            "inference_overlap_fraction": inf.get("overlap_fraction", 0.0),
+            # (None until a layer-major call runs)
+            "inference_overlap_fraction": inf.get("overlap_fraction"),
             "chunk_plan_hits": inf.get("chunk_plan_hits", 0),
             "chunk_plan_misses": inf.get("chunk_plan_misses", 0),
             "chunk_bucket_calls": calls,
             "chunk_bucket_hits": hits,
-            "chunk_bucket_hit_rate": hits / calls if calls else 0.0,
+            "chunk_bucket_hit_rate": obs.ratio(hits, calls, default=None),
         }
 
     def measured_link_bytes(self, feat_dim: int | None = None,

@@ -56,9 +56,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.gcn import cache
+from repro.gcn import cache, obs
 
 __all__ = ["FeatureHandle", "FeatureStore", "default_store"]
+
+# process-wide gather ledger (repro.gcn.obs) — the registry-side view of
+# the per-graph row-honest counters below; these are the numbers the
+# PAPER_MAPPING ties to the paper's 73 % off-chip-access reduction
+_HIT_ROWS = obs.metrics.counter(
+    "feature.hit_rows", unit="rows",
+    help="feature rows served from device-resident blocks")
+_MISS_ROWS = obs.metrics.counter(
+    "feature.miss_rows", unit="rows",
+    help="feature rows that touched the host tier")
+_GATHERED_BYTES = obs.metrics.counter(
+    "feature.gathered_bytes", unit="bytes",
+    help="bytes actually read from the host tier by gathers")
+_DENSE_BYTES = obs.metrics.counter(
+    "feature.dense_bytes", unit="bytes",
+    help="dense-slice baseline bytes for the same gather sequence")
+_FULL_GATHERS = obs.metrics.counter(
+    "feature.full_gathers", unit="calls",
+    help="gather_all calls (sampled training keeps this at zero)")
 
 
 @dataclass(frozen=True, eq=False)
@@ -276,7 +295,10 @@ class FeatureStore:
         the host column store (admitting the block to the cold tier
         when it fits the remaining budget)."""
         nodes = np.asarray(nodes, np.int64)
-        with self.lock:
+        tr = obs.trace
+        sp = (tr.span("feature_gather", rows=int(nodes.size))
+              if tr.enabled else obs.NULL_SPAN)
+        with sp, self.lock:
             g = self._graphs.get(graph_fp)
             if g is None:
                 raise KeyError(f"graph {graph_fp!r} is not registered")
@@ -285,6 +307,8 @@ class FeatureStore:
             if nodes.min() < 0 or nodes.max() >= g.num_vertices:
                 raise ValueError(
                     f"node ids out of range [0, {g.num_vertices})")
+            hr0, mr0 = g.hit_rows, g.miss_rows
+            gb0, db0 = g.gathered_bytes, g.dense_bytes
             out = np.empty((nodes.size, g.feat_dim), np.float32)
             blk_of = nodes // g.block_vertices
             for blk in np.unique(blk_of):
@@ -304,7 +328,15 @@ class FeatureStore:
                 host = g.blocks[blk]
                 out[sel] = host[local]
                 self._admit_cold(g, blk, host, touched_rows=rows)
-            return out
+            # deltas read under the lock (per-graph fields are shared)
+            dhr, dmr = g.hit_rows - hr0, g.miss_rows - mr0
+            dgb, ddb = g.gathered_bytes - gb0, g.dense_bytes - db0
+            sp.set(hit_rows=dhr, miss_rows=dmr)
+        _HIT_ROWS.add(dhr)
+        _MISS_ROWS.add(dmr)
+        _GATHERED_BYTES.add(dgb)
+        _DENSE_BYTES.add(ddb)
+        return out
 
     def gather_all(self, graph_fp: str) -> np.ndarray:
         """The full ``(V, F)`` table (counts every block access) — the
@@ -315,6 +347,7 @@ class FeatureStore:
             if g is None:
                 raise KeyError(f"graph {graph_fp!r} is not registered")
             g.full_gathers += 1
+            _FULL_GATHERS.add(1)
             return self.gather(graph_fp, np.arange(g.num_vertices))
 
     def _resident_block(self, g: _GraphFeatures, blk: int):
@@ -411,7 +444,7 @@ class FeatureStore:
                 "hit_rows": g.hit_rows, "miss_rows": g.miss_rows,
                 "gathered_bytes": g.gathered_bytes,
                 "dense_bytes": g.dense_bytes,
-                "hit_rate": g.hit_rows / rows if rows else 0.0,
+                "hit_rate": obs.ratio(g.hit_rows, rows),
                 "full_gathers": g.full_gathers,
                 # admission-rank telemetry: the ranks of the pinned
                 # blocks (degree-ordered admission => a prefix 0..k-1)
@@ -441,8 +474,7 @@ class FeatureStore:
                 "pinned_bytes": self._hot_bytes,
                 "hit_rows": hit_rows,
                 "miss_rows": miss_rows,
-                "hit_rate": (hit_rows / (hit_rows + miss_rows)
-                             if hit_rows + miss_rows else 0.0),
+                "hit_rate": obs.ratio(hit_rows, hit_rows + miss_rows),
                 "gathered_bytes": sum(g.gathered_bytes for g in gs),
                 "dense_bytes": sum(g.dense_bytes for g in gs),
                 "admission": {g.graph_fp[:12]: {

@@ -70,7 +70,7 @@ import numpy as np
 from repro.core import sampling
 from repro.core.partition import make_partition
 from repro.core.plan import build_plan, pad_plan_pow2
-from repro.gcn import cache
+from repro.gcn import cache, obs
 from repro.gcn.pipeline import SamplePipeline
 
 __all__ = ["ChunkSession", "estimate_plan_bytes", "forward_layer_major",
@@ -206,14 +206,18 @@ def _chunk_session(engine, lo: int, hi: int,
         indptr, src, w = _prepared_csr(engine)
         S = nodes.size
         vpad = 1 if S <= 1 else 1 << (S - 1).bit_length()
-        sub_g2, sub_w = sampling.induce_in_edges(
-            indptr, src, w, nodes, num_vertices=vpad,
-            name=f"{engine.graph.name}#chunk")
-        part = make_partition(engine.cfg, engine.torus.num_nodes,
-                              num_vertices=vpad)
-        plan = pad_plan_pow2(build_plan(
-            engine.cfg, sub_g2, engine.torus, part, edge_weights=sub_w,
-            bidir=engine.bidir))
+        with obs.trace.span("plan_build", scope="chunk", nodes=S,
+                            vpad=vpad):
+            sub_g2, sub_w = sampling.induce_in_edges(
+                indptr, src, w, nodes, num_vertices=vpad,
+                name=f"{engine.graph.name}#chunk")
+            part = make_partition(engine.cfg, engine.torus.num_nodes,
+                                  num_vertices=vpad)
+            plan = build_plan(
+                engine.cfg, sub_g2, engine.torus, part, edge_weights=sub_w,
+                bidir=engine.bidir)
+        with obs.trace.span("pad_plan", vpad=vpad):
+            plan = pad_plan_pow2(plan)
         sub = GCNEngine.from_plan(
             engine.cfg, plan, engine.dims, graph_fp=key.graph_fp,
             axis_names=engine.axis_names, name=sub_g2.name)
@@ -331,22 +335,25 @@ def forward_layer_major(engine, feats, params=None, *,
             device upload. Pure in ``ci`` for a fixed layer: ``h_prev``
             is complete and read-only once this layer's pipeline
             starts, and every cache is content-keyed."""
-            cs = _chunk_session(engine, *ranges[ci], node_sets[ci])
-            sub = cs.engine
-            S = cs.nodes.size
-            F = handle.feat_dim if h_prev is None else h_prev.shape[1]
-            xb = np.zeros((sub.graph.num_vertices, F), np.float32)
-            if h_prev is None:
-                xb[:S] = handle.gather(cs.nodes)
-            else:
-                xb[:S] = h_prev[cs.nodes]
-            step = sub._compiled_layer_step(impl)
-            pdev = sub.plan_arrays(impl)
-            x, _ = sub._shard_input(xb)
-            jax.block_until_ready(x)
-            nb = int(x.nbytes)
-            meter.add(nb)
-            return cs, step, pdev, x, nb
+            with obs.trace.span("chunk_prepare", chunk=ci, layer=li):
+                cs = _chunk_session(engine, *ranges[ci], node_sets[ci])
+                sub = cs.engine
+                S = cs.nodes.size
+                F = handle.feat_dim if h_prev is None else h_prev.shape[1]
+                xb = np.zeros((sub.graph.num_vertices, F), np.float32)
+                if h_prev is None:
+                    xb[:S] = handle.gather(cs.nodes)
+                else:
+                    xb[:S] = h_prev[cs.nodes]
+                step = sub._compiled_layer_step(impl)
+                pdev = sub.plan_arrays(impl)
+                with obs.trace.span("upload", what="chunk_input",
+                                    rows=S):
+                    x, _ = sub._shard_input(xb)
+                    jax.block_until_ready(x)
+                nb = int(x.nbytes)
+                meter.add(nb)
+                return cs, step, pdev, x, nb
 
         pipe = None
         if pipeline_depth > 0 and len(ranges) > 1:
@@ -364,10 +371,11 @@ def forward_layer_major(engine, feats, params=None, *,
                     engine._chunk_hits += 1
                 else:
                     engine._chunk_buckets.add(bucket)
-                y = step(pdev, x, layer, last=last)
-                ynb = int(y.nbytes)
-                meter.add(ynb)
-                out = cs.engine.unshard(np.asarray(y))  # (vpad, F_out)
+                with obs.trace.span("chunk_execute", chunk=ci, layer=li):
+                    y = step(pdev, x, layer, last=last)
+                    ynb = int(y.nbytes)
+                    meter.add(ynb)
+                    out = cs.engine.unshard(np.asarray(y))  # (vpad, F_out)
                 meter.sub(nb + ynb)
                 if h_next is None:
                     h_next = np.empty((V, out.shape[-1]), out.dtype)
@@ -381,6 +389,10 @@ def forward_layer_major(engine, feats, params=None, *,
         widths.append(int(h.shape[1]))
 
     b1 = cache.cache_stats()["batch"]
+    obs.metrics.counter(
+        "inference.chunks", unit="chunks",
+        help="layer-major chunk steps executed (chunks x layers)"
+    ).add(len(ranges) * len(params))
     prep_s = sum(p["prepare_s"] for p in pipe_stats)
     hidden_s = sum(p["overlap_s"] for p in pipe_stats)
     # what full-graph forward would hold on device at its widest layer
@@ -395,7 +407,7 @@ def forward_layer_major(engine, feats, params=None, *,
         "layers": len(params),
         "peak_feature_bytes": meter.peak,
         "dense_feature_bytes": int(dense),
-        "overlap_fraction": hidden_s / prep_s if prep_s else 0.0,
+        "overlap_fraction": obs.overlap_fraction(hidden_s, prep_s),
         "overlap_s": hidden_s,
         "prepare_s": prep_s,
         "pipeline_depth": pipeline_depth if pipe_stats else 0,

@@ -1,0 +1,501 @@
+"""Unified observability for the GCN stack: spans + typed metrics.
+
+The paper's core claims are quantitative (32 % fewer transmissions,
+73 % fewer off-chip accesses, latency hidden behind bandwidth —
+Observations 1-2), and before this module the repo's evidence for them
+was scattered across seven ad-hoc ``stats()`` dicts with no common
+schema and no per-event timeline. This module is the cross-cutting
+layer both gaps close through:
+
+  * :class:`Tracer` — span-based tracing (``with trace.span(
+    "plan_build", batch=fp):``) into a bounded ring buffer, with
+    begin/end timestamps, thread attribution and free-form attrs.
+    :meth:`Tracer.export` writes Chrome ``trace_event`` JSON loadable
+    in ``chrome://tracing`` / Perfetto — one track per thread, so the
+    sampling pipeline's prepare work on ``gcn-pipe`` workers shows as
+    bars actually overlapping the training thread's ``execute`` bars.
+  * :class:`MetricsRegistry` — typed counters/gauges/histograms with
+    declared units and help text. The module-level :data:`metrics`
+    registry is the single PROCESS-WIDE accumulation point the
+    instrumented stages feed (feature hit/miss rows, exchange bytes,
+    pipeline prepare/wait seconds, uploads, ...); per-object
+    ``stats()`` dicts stay as per-session views, and
+    :func:`telemetry` / ``GCNEngine.telemetry()`` snapshot the
+    registry with a schema version for the bench records.
+
+Design constraints (pinned by ``tests/test_gcn_obs.py``):
+
+  * **observe, never synchronize** — an enabled span reads a clock and
+    appends one tuple to a ``deque`` (GIL-atomic); it takes no lock on
+    the hot path and never blocks another thread, so pipelined
+    trajectories stay bit-identical with tracing on.
+  * **near-zero overhead when disabled** — ``trace.enabled`` is a
+    plain attribute; hot call sites guard on it and the disabled
+    ``span()`` returns one shared no-op singleton (no per-call
+    allocation, asserted by a tracemalloc smoke check).
+  * **deterministic tests** — the clock is injectable
+    (``Tracer(clock=...)``).
+
+The shared :func:`overlap_fraction` / :func:`ratio` helpers replace the
+hand-rolled fraction computations in ``pipeline.py`` / ``inference.py``
+/ ``service.py``; surfaces that cannot distinguish "measured zero" from
+"never ran" pass ``default=None`` so unmeasured telemetry reads as
+``None``, not ``0.0``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+
+__all__ = [
+    "KNOWN_PHASES",
+    "MetricsRegistry",
+    "TELEMETRY_SCHEMA_VERSION",
+    "Tracer",
+    "metrics",
+    "overlap_fraction",
+    "ratio",
+    "telemetry",
+    "trace",
+]
+
+#: bumped whenever the shape of :func:`telemetry` snapshots changes;
+#: ``benchmarks/run.py`` asserts the embedded snapshot carries it
+TELEMETRY_SCHEMA_VERSION = 1
+
+#: every span name the instrumented stages emit — ``tools/
+#: check_trace.py`` rejects exported traces with names outside this set
+#: (a misspelled phase would otherwise silently fork the timeline)
+KNOWN_PHASES = frozenset({
+    "sample",          # NeighborSampler.sample
+    "plan_build",      # build_plan (full / batch / chunk)
+    "pad_plan",        # pad_plan_pow2
+    "ell_build",       # blocked-ELL layout build
+    "feature_gather",  # FeatureStore.gather
+    "upload",          # device upload (plan arrays / batch inputs)
+    "execute",         # compiled-step execution
+    "evaluate",        # train-time evaluation
+    "batch_prepare",   # the sampled trainer's whole per-batch chain
+    "pipe_prepare",    # SamplePipeline worker prepare
+    "pipe_commit",     # SamplePipeline result commit
+    "pipe_get",        # SamplePipeline consumer get/wait
+    "serve_admit",     # GCNService.admit / adopt
+    "serve_step",      # one GCNService tick
+    "serve_upload",    # service plan upload (sync or prefetch)
+    "chunk_prepare",   # layer-major chunk prepare
+    "chunk_execute",   # layer-major chunk execute
+})
+
+
+# ---------------------------------------------------------------------------
+# Shared fraction helpers (the one place overlap/hit-rate math lives)
+# ---------------------------------------------------------------------------
+
+
+def ratio(num, den, *, default=0.0):
+    """``num / den`` with an explicit empty-denominator policy:
+    ``default=0.0`` keeps legacy surfaces bit-identical, ``default=
+    None`` makes "never measured" distinguishable from a measured
+    zero (the silent-zero fix on ``engine.stats()`` /
+    ``inference_stats()``)."""
+    return num / den if den else default
+
+
+def overlap_fraction(hidden_s: float, total_s: float, *, default=0.0):
+    """Share of ``total_s`` wall seconds that was hidden behind
+    concurrent execution — the ONE definition behind
+    ``SamplePipeline.stats()['overlap_fraction']``,
+    ``inference_overlap_fraction`` and the service's
+    ``upload_overlap_fraction`` (they previously hand-rolled the same
+    expression three times). ``default`` is returned when nothing was
+    measured (``total_s == 0``)."""
+    return ratio(hidden_s, total_s, default=default)
+
+
+# ---------------------------------------------------------------------------
+# Typed metrics registry
+# ---------------------------------------------------------------------------
+
+
+class _Instrument:
+    """Common identity of a declared metric: name + unit + help."""
+
+    kind = "instrument"
+
+    def __init__(self, name: str, unit: str, help: str,
+                 lock: threading.Lock):
+        self.name = name
+        self.unit = unit
+        self.help = help
+        self._lock = lock
+
+    def describe(self) -> dict:
+        return {"type": self.kind, "unit": self.unit, "help": self.help}
+
+
+class Counter(_Instrument):
+    """Monotonic process-cumulative count (rows, bytes, calls,
+    seconds-of-work). Never decremented, never reset by per-object
+    ``clear()`` paths — the Prometheus-style ledger."""
+
+    kind = "counter"
+
+    def __init__(self, name, unit, help, lock):
+        super().__init__(name, unit, help, lock)
+        self._value = 0
+
+    def add(self, n=1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self):
+        return self._value
+
+    def _snapshot(self) -> dict:
+        return {**self.describe(), "value": self._value}
+
+    def _reset(self) -> None:
+        self._value = 0
+
+
+class Gauge(_Instrument):
+    """Last-observed value (queue depth, bytes-per-step, fractions)."""
+
+    kind = "gauge"
+
+    def __init__(self, name, unit, help, lock):
+        super().__init__(name, unit, help, lock)
+        self._value = None
+
+    def set(self, v) -> None:
+        with self._lock:
+            self._value = v
+
+    @property
+    def value(self):
+        return self._value
+
+    def _snapshot(self) -> dict:
+        return {**self.describe(), "value": self._value}
+
+    def _reset(self) -> None:
+        self._value = None
+
+
+class Histogram(_Instrument):
+    """Streaming summary (count/sum/min/max) of an observed
+    distribution — per-phase span durations land here."""
+
+    kind = "histogram"
+
+    def __init__(self, name, unit, help, lock):
+        super().__init__(name, unit, help, lock)
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+
+    def observe(self, v) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            self.min = v if self.min is None else min(self.min, v)
+            self.max = v if self.max is None else max(self.max, v)
+
+    def _snapshot(self) -> dict:
+        return {**self.describe(), "count": self.count,
+                "sum": self.sum, "min": self.min, "max": self.max,
+                "mean": self.sum / self.count if self.count else None}
+
+    def _reset(self) -> None:
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+
+
+class MetricsRegistry:
+    """Thread-safe, typed metric store. Declaration is idempotent —
+    ``counter(name, ...)`` returns the existing instrument when the
+    name is already declared with the same type and unit, and raises
+    on a conflicting redeclaration (two call sites silently feeding
+    one name with different meanings is exactly the scattered-counter
+    failure mode this registry replaces)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: dict[str, _Instrument] = {}
+
+    def _declare(self, cls, name: str, unit: str, help: str):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is not None:
+                if inst.kind != cls.kind or inst.unit != unit:
+                    raise ValueError(
+                        f"metric {name!r} already declared as "
+                        f"{inst.kind}[{inst.unit!r}]; cannot redeclare "
+                        f"as {cls.kind}[{unit!r}]")
+                return inst
+            inst = cls(name, unit, help, self._lock)
+            self._instruments[name] = inst
+            return inst
+
+    def counter(self, name: str, *, unit: str = "",
+                help: str = "") -> Counter:
+        return self._declare(Counter, name, unit, help)
+
+    def gauge(self, name: str, *, unit: str = "", help: str = "") -> Gauge:
+        return self._declare(Gauge, name, unit, help)
+
+    def histogram(self, name: str, *, unit: str = "",
+                  help: str = "") -> Histogram:
+        return self._declare(Histogram, name, unit, help)
+
+    def get(self, name: str) -> _Instrument | None:
+        with self._lock:
+            return self._instruments.get(name)
+
+    def value(self, name: str, default=0):
+        """Convenience: a counter/gauge's current value (``default``
+        when the metric was never declared)."""
+        inst = self.get(name)
+        return default if inst is None else inst.value
+
+    def snapshot(self) -> dict:
+        """Schema-versioned dict of every declared metric — what
+        ``engine.telemetry()`` returns and the bench records embed."""
+        with self._lock:
+            return {
+                "schema_version": TELEMETRY_SCHEMA_VERSION,
+                "metrics": {n: inst._snapshot()
+                            for n, inst in sorted(
+                                self._instruments.items())},
+            }
+
+    def reset(self) -> None:
+        """Zero every value, keep every declaration (tests diff known
+        workloads against a clean ledger)."""
+        with self._lock:
+            for inst in self._instruments.values():
+                inst._reset()
+
+
+# ---------------------------------------------------------------------------
+# Span tracer
+# ---------------------------------------------------------------------------
+
+
+class _NullSpan:
+    """The disabled-path singleton: entering/exiting allocates
+    nothing, so guarded hot paths pay one attribute read."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One live span: records (name, t0, t1, tid, thread, attrs, ok)
+    into its tracer's ring buffer on exit — also when the body raised,
+    so a failing pipeline worker still closes its spans (the record
+    carries ``error=True``)."""
+
+    __slots__ = ("_tracer", "name", "attrs", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict | None):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = attrs
+
+    def set(self, **attrs):
+        """Attach attrs discovered after the span opened (batch sizes,
+        byte counts)."""
+        if self.attrs is None:
+            self.attrs = attrs
+        else:
+            self.attrs.update(attrs)
+        return self
+
+    def __enter__(self):
+        self._t0 = self._tracer.clock()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self._tracer._record(self.name, self._t0, self._tracer.clock(),
+                             self.attrs, exc_type is None)
+        return False
+
+
+class Tracer:
+    """Process-wide span recorder with a bounded ring buffer and Chrome
+    ``trace_event`` export.
+
+    ``enabled`` is a plain attribute — hot paths guard on it and pay
+    nothing else while tracing is off. When on, a span costs two clock
+    reads and one ``deque.append`` (GIL-atomic; no lock, no waiting:
+    spans observe, never synchronize). The buffer keeps the most
+    recent ``capacity`` spans. ``clock`` is injectable for
+    deterministic tests; ``registry`` (optional) additionally folds
+    every recorded span into a per-phase duration histogram
+    (``span_s.<name>``), which is how traced bench runs get per-phase
+    breakdowns into their telemetry snapshot."""
+
+    def __init__(self, *, enabled: bool = False, capacity: int = 65536,
+                 clock=time.perf_counter,
+                 registry: MetricsRegistry | None = None):
+        self.enabled = bool(enabled)
+        self.clock = clock
+        self.registry = registry
+        self._buf: deque = deque(maxlen=int(capacity))
+        self._epoch = clock()
+
+    # ---------------- recording ----------------
+
+    def span(self, name: str, **attrs):
+        """Context manager timing one ``name`` phase; kwargs become the
+        span's attrs. Returns the shared no-op singleton while
+        disabled."""
+        if not self.enabled:
+            return NULL_SPAN
+        return _Span(self, name, attrs or None)
+
+    def _record(self, name, t0, t1, attrs, ok) -> None:
+        if not self.enabled:
+            return  # disabled mid-span: drop silently
+        t = threading.current_thread()
+        self._buf.append((name, t0, t1, t.ident, t.name, attrs, ok))
+        reg = self.registry
+        if reg is not None:
+            reg.histogram(f"span_s.{name}", unit="s",
+                          help=f"wall seconds of {name!r} spans") \
+                .observe(t1 - t0)
+
+    # ---------------- control ----------------
+
+    def configure(self, *, enabled: bool | None = None,
+                  capacity: int | None = None, clock=None) -> "Tracer":
+        """Reconfigure in place (launchers flip ``enabled`` on
+        ``--trace-out``). Changing ``capacity`` re-bounds the buffer,
+        keeping the newest spans; changing ``clock`` re-anchors the
+        export epoch."""
+        if capacity is not None:
+            self._buf = deque(self._buf, maxlen=int(capacity))
+        if clock is not None:
+            self.clock = clock
+            self._epoch = clock()
+        if enabled is not None:
+            self.enabled = bool(enabled)
+        return self
+
+    def clear(self) -> None:
+        self._buf.clear()
+
+    def events(self) -> list[dict]:
+        """Snapshot of the buffered spans, oldest first (test/debug
+        surface; ``export`` is the interchange format)."""
+        return [{"name": n, "t0": t0, "t1": t1, "tid": tid,
+                 "thread": tname, "attrs": attrs, "ok": ok}
+                for n, t0, t1, tid, tname, attrs, ok in list(self._buf)]
+
+    # ---------------- Chrome trace export ----------------
+
+    def _us(self, t: float) -> float:
+        return (t - self._epoch) * 1e6
+
+    def export(self, path: str) -> int:
+        """Write the buffered spans as Chrome ``trace_event`` JSON
+        (``{"traceEvents": [...]}``, balanced B/E duration events, one
+        track per thread via ``thread_name`` metadata). Returns the
+        number of spans exported. Loadable in ``chrome://tracing`` or
+        https://ui.perfetto.dev; validated by ``tools/check_trace.py``.
+
+        Spans are buffered at completion time, so per-thread nesting is
+        reconstructed here: within one thread, context-manager
+        discipline guarantees proper nesting, and a start-ascending /
+        longest-first sweep with an explicit stack re-emits the
+        balanced B/E order."""
+        spans = list(self._buf)
+        pid = os.getpid()
+        events: list[dict] = [{
+            "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+            "ts": 0.0, "args": {"name": "repro-gcn"},
+        }]
+        by_tid: dict[int, list] = {}
+        for rec in spans:
+            by_tid.setdefault(rec[3], []).append(rec)
+        for tid, recs in sorted(by_tid.items()):
+            events.append({
+                "ph": "M", "name": "thread_name", "pid": pid,
+                "tid": tid, "ts": 0.0,
+                "args": {"name": recs[-1][4]},
+            })
+            recs.sort(key=lambda r: (r[1], -r[2]))
+            stack: list = []
+
+            def emit_end(r):
+                events.append({"ph": "E", "name": r[0], "pid": pid,
+                               "tid": tid, "ts": self._us(r[2])})
+
+            for r in recs:
+                while stack and r[1] >= stack[-1][2]:
+                    emit_end(stack.pop())
+                ev = {"ph": "B", "name": r[0], "cat": "gcn", "pid": pid,
+                      "tid": tid, "ts": self._us(r[1])}
+                args = _json_safe(r[5]) if r[5] else {}
+                if not r[6]:
+                    args["error"] = True
+                if args:
+                    ev["args"] = args
+                events.append(ev)
+                stack.append(r)
+            while stack:
+                emit_end(stack.pop())
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events, "displayTimeUnit": "ms"},
+                      f)
+        return len(spans)
+
+
+def _json_safe(attrs: dict) -> dict:
+    out = {}
+    for k, v in attrs.items():
+        if isinstance(v, (bool, int, float, str)) or v is None:
+            out[str(k)] = v
+        else:
+            out[str(k)] = str(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Process-wide singletons
+# ---------------------------------------------------------------------------
+
+#: the single typed registry every instrumented stage feeds
+metrics = MetricsRegistry()
+
+#: the process-wide tracer (disabled until a launcher's ``--trace-out``
+#: or a test enables it); spans feed ``span_s.*`` histograms in
+#: :data:`metrics` while enabled
+trace = Tracer(registry=metrics)
+
+
+def telemetry() -> dict:
+    """Schema-versioned snapshot of the process-wide registry — the
+    payload ``GCNEngine.telemetry()`` returns and every bench record
+    embeds under its ``"telemetry"`` key."""
+    return metrics.snapshot()

@@ -47,6 +47,8 @@ from __future__ import annotations
 import threading
 import time
 
+from repro.gcn import obs
+
 __all__ = ["SamplePipeline"]
 
 # thread-name prefix, so tests can pin the no-orphan-threads contract
@@ -117,12 +119,23 @@ class SamplePipeline:
                 i = self._next_claim
                 self._next_claim += 1
             t0 = time.perf_counter()
+            # the exception exits THROUGH the span (its record carries
+            # error=True — a failing worker never leaves an open span)
+            # and is captured here for the in-order re-raise in get()
             try:
-                val, err = self.prepare(self.tasks[i]), None
+                with obs.trace.span("pipe_prepare", task=i):
+                    val, err = self.prepare(self.tasks[i]), None
             except BaseException as e:  # re-raised on the consumer
                 val, err = None, e
             dt = time.perf_counter() - t0
-            with self._cv:
+            obs.metrics.counter(
+                "pipeline.prepare_s", unit="s",
+                help="worker seconds spent preparing pipeline tasks"
+            ).add(dt)
+            obs.metrics.counter(
+                "pipeline.prepared", unit="tasks",
+                help="pipeline tasks prepared by worker threads").add(1)
+            with obs.trace.span("pipe_commit", task=i), self._cv:
                 self._prepare_s += dt
                 self._prepared += 1
                 if self._closed:
@@ -138,7 +151,7 @@ class SamplePipeline:
         exception after draining the pipeline. The time spent blocked
         here is the NON-hidden part of prepare latency (see
         :meth:`stats`)."""
-        with self._cv:
+        with obs.trace.span("pipe_get", task=index), self._cv:
             if index != self._next_consume:
                 raise ValueError(
                     f"out-of-order get: index {index}, expected "
@@ -150,12 +163,17 @@ class SamplePipeline:
             t0 = time.perf_counter()
             while index not in self._ready and not self._closed:
                 self._cv.wait()
-            self._wait_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._wait_s += dt
             if self._closed:
                 raise RuntimeError("pipeline closed while waiting")
             val, err = self._ready.pop(index)
             self._next_consume += 1
             self._cv.notify_all()  # a claim slot opened
+        obs.metrics.counter(
+            "pipeline.wait_s", unit="s",
+            help="consumer seconds blocked waiting on pipeline results"
+        ).add(dt)
         if err is not None:
             self.close()
             raise err
@@ -196,8 +214,8 @@ class SamplePipeline:
                 "prepare_s": self._prepare_s,
                 "wait_s": self._wait_s,
                 "overlap_s": hidden,
-                "overlap_fraction": (
-                    hidden / self._prepare_s if self._prepare_s else 0.0),
-                "queue_occupancy_mean": (
-                    self._occ_sum / self._gets if self._gets else 0.0),
+                "overlap_fraction": obs.overlap_fraction(
+                    hidden, self._prepare_s),
+                "queue_occupancy_mean": obs.ratio(
+                    self._occ_sum, self._gets),
             }

@@ -61,7 +61,7 @@ import numpy as np
 
 from repro.config import GCNConfig
 from repro.core.graph import Graph
-from repro.gcn import cache, inference
+from repro.gcn import cache, inference, obs
 from repro.gcn.engine import GCNEngine
 from repro.gcn.pipeline import SamplePipeline
 
@@ -195,16 +195,19 @@ class GCNService:
         the same hot vertices stop re-reading host memory."""
         if name in self.sessions:
             raise ValueError(f"session {name!r} already admitted")
-        eng = GCNEngine.build(cfg, graph, self.dims,
-                              axis_names=self.axis_names)
-        if params is not None:
-            eng.params = list(params)
-        elif layer_dims is not None:
-            eng.init_params(jax.random.PRNGKey(seed), list(layer_dims))
-        self.sessions[name] = eng
-        self._mode[name] = self._decide_mode(eng)
-        self._bucket_base[name] = (eng._bucket_calls, eng._bucket_hits)
-        self._attach_features(name, eng, features)
+        with obs.trace.span("serve_admit", session=name):
+            eng = GCNEngine.build(cfg, graph, self.dims,
+                                  axis_names=self.axis_names)
+            if params is not None:
+                eng.params = list(params)
+            elif layer_dims is not None:
+                eng.init_params(jax.random.PRNGKey(seed),
+                                list(layer_dims))
+            self.sessions[name] = eng
+            self._mode[name] = self._decide_mode(eng)
+            self._bucket_base[name] = (eng._bucket_calls,
+                                       eng._bucket_hits)
+            self._attach_features(name, eng, features)
         return eng
 
     def _decide_mode(self, eng: GCNEngine) -> str:
@@ -277,11 +280,12 @@ class GCNService:
             raise ValueError(
                 "adopted engine has no params; train it first or pass "
                 "params=")
-        self.sessions[name] = engine
-        self._mode[name] = self._decide_mode(engine)
-        self._bucket_base[name] = (engine._bucket_calls,
-                                   engine._bucket_hits)
-        self._attach_features(name, engine, features)
+        with obs.trace.span("serve_admit", session=name, adopted=True):
+            self.sessions[name] = engine
+            self._mode[name] = self._decide_mode(engine)
+            self._bucket_base[name] = (engine._bucket_calls,
+                                       engine._bucket_hits)
+            self._attach_features(name, engine, features)
         return engine
 
     def evict(self, name: str) -> None:
@@ -364,8 +368,14 @@ class GCNService:
         if eng.plan_uploaded():
             return 0.0
         t0 = time.perf_counter()
-        jax.block_until_ready(eng.plan_arrays())
-        return time.perf_counter() - t0
+        with obs.trace.span("serve_upload", graph=eng.graph_fp[:12]):
+            jax.block_until_ready(eng.plan_arrays())
+        dt = time.perf_counter() - t0
+        obs.metrics.counter(
+            "serve.upload_s", unit="s",
+            help="wall seconds spent uploading serve-session plans"
+        ).add(dt)
+        return dt
 
     def _count_upload(self, seconds: float, *, was_async: bool) -> None:
         if seconds <= 0.0:
@@ -489,57 +499,70 @@ class GCNService:
         name = self.queue[0].session
         eng = self.sessions[name]
         mode = self._mode.get(name, "full")
-        self._fence(name)
-        if mode == "full" and not eng.plan_uploaded():
-            # sync path / first-touch / post-eviction upload
-            self._count_upload(self._upload(eng), was_async=False)
-        batch = self._pop_batch()
-        self._start_prefetch(exclude=name)
-        if mode != "layer-major":
-            if batch[0].feats is None:
-                # store-backed: one gather serves the whole batch;
-                # repeat steps against the same session hit
-                # device-resident blocks
-                xb = self._feat_handles[name].gather_all()
-                feats = np.stack([xb] * len(batch))
-            else:
-                feats = np.stack([r.feats for r in batch])
-        t0 = time.perf_counter()
-        try:
-            if mode == "layer-major":
-                # chunked layer-major serving: the full-graph plan is
-                # never built; store-backed requests hand the handle
-                # straight through (gathered per chunk — no full-V
-                # materialization anywhere on this path)
-                out = np.stack([
-                    eng.forward_layer_major(
-                        self._feat_handles[name] if r.feats is None
-                        else r.feats,
-                        chunk_size=self.chunk_size)
-                    for r in batch])
-            else:
-                out = eng.forward_batched(feats)
-        except BaseException:
-            # nothing completed: put the batch back at the head so an
-            # execution error (bad feature width, transient OOM) leaves
-            # the requests retryable/observable instead of vanishing
-            self.queue = batch + self.queue
-            raise
-        t1 = time.perf_counter()
-        if self._pf is None:
-            # nothing in flight: no future prefetch can overlap windows
-            # that already closed, so don't accumulate them
-            self._c.exec_windows.clear()
-        self._c.exec_windows.append((t0, t1))
-        self._c.exec_s += t1 - t0
-        self._c.batches += 1
-        for b, r in enumerate(batch):
-            r.out = out[b]
-            r.done = True
-            r.t_done = t1
-        self._c.requests += len(batch)
-        self._c.busy_s += t1 - ts
-        self._c.t_last = t1
+        with obs.trace.span("serve_step", session=name,
+                            mode=mode) as sp:
+            self._fence(name)
+            if mode == "full" and not eng.plan_uploaded():
+                # sync path / first-touch / post-eviction upload
+                self._count_upload(self._upload(eng), was_async=False)
+            batch = self._pop_batch()
+            sp.set(batch=len(batch))
+            self._start_prefetch(exclude=name)
+            if mode != "layer-major":
+                if batch[0].feats is None:
+                    # store-backed: one gather serves the whole batch;
+                    # repeat steps against the same session hit
+                    # device-resident blocks
+                    xb = self._feat_handles[name].gather_all()
+                    feats = np.stack([xb] * len(batch))
+                else:
+                    feats = np.stack([r.feats for r in batch])
+            t0 = time.perf_counter()
+            try:
+                with obs.trace.span("execute", what="serve_batch",
+                                    session=name, mode=mode):
+                    if mode == "layer-major":
+                        # chunked layer-major serving: the full-graph
+                        # plan is never built; store-backed requests
+                        # hand the handle straight through (gathered
+                        # per chunk — no full-V materialization
+                        # anywhere on this path)
+                        out = np.stack([
+                            eng.forward_layer_major(
+                                self._feat_handles[name]
+                                if r.feats is None else r.feats,
+                                chunk_size=self.chunk_size)
+                            for r in batch])
+                    else:
+                        out = eng.forward_batched(feats)
+            except BaseException:
+                # nothing completed: put the batch back at the head so
+                # an execution error (bad feature width, transient OOM)
+                # leaves the requests retryable/observable instead of
+                # vanishing
+                self.queue = batch + self.queue
+                raise
+            t1 = time.perf_counter()
+            if self._pf is None:
+                # nothing in flight: no future prefetch can overlap
+                # windows that already closed, so don't accumulate them
+                self._c.exec_windows.clear()
+            self._c.exec_windows.append((t0, t1))
+            self._c.exec_s += t1 - t0
+            self._c.batches += 1
+            for b, r in enumerate(batch):
+                r.out = out[b]
+                r.done = True
+                r.t_done = t1
+            self._c.requests += len(batch)
+            self._c.busy_s += t1 - ts
+            self._c.t_last = t1
+        obs.metrics.counter(
+            "serve.batches", unit="batches",
+            help="service batches executed").add(1)
+        obs.metrics.counter(
+            "serve.requests", unit="requests",
+            help="requests completed by the service").add(len(batch))
         return batch
 
     def run(self, max_steps: int = 100_000) -> list[ServeRequest]:
@@ -567,7 +590,9 @@ class GCNService:
         ``upload_overlap_fraction`` is the share of total plan-upload
         wall time that ran concurrently with device execution — the
         paper's latency-tolerance dividend (1.0 = every upload fully
-        hidden; 0.0 = sync fallback or nothing to hide).
+        hidden; 0.0 = sync fallback; ``None`` until an upload was
+        measured — ratio fields here report ``None``, never a silent
+        0.0, when nothing ran).
         ``requests_per_sec`` is throughput over BUSY time (seconds spent
         inside ``step``), so idle gaps between ``run`` calls on a
         long-lived service don't dilute it; ``wall_s`` is the raw
@@ -594,12 +619,13 @@ class GCNService:
         chunk_calls = sum(s["chunk_bucket_calls"] for s in lm)
         chunk_hits = sum(s["chunk_bucket_hits"] for s in lm)
         # pooled chunk-prepare overlap across layer-major sessions,
-        # from the raw per-run seconds (hidden / total prepare)
+        # from the raw per-run seconds (hidden / total prepare);
+        # None until a layer-major pipeline has actually run
         prep_s = sum((e._inference_stats or {}).get("prepare_s", 0.0)
                      for e in lm_engines)
         hidden_s = sum((e._inference_stats or {}).get("overlap_s", 0.0)
                        for e in lm_engines)
-        ov = hidden_s / prep_s if prep_s else 0.0
+        ov = obs.overlap_fraction(hidden_s, prep_s, default=None)
         return {
             "admission": self.admission,
             "sessions_layer_major": sum(
@@ -611,8 +637,8 @@ class GCNService:
             "inference_overlap_fraction": ov,
             "chunk_bucket_calls": chunk_calls,
             "chunk_bucket_hits": chunk_hits,
-            "chunk_bucket_hit_rate": (
-                chunk_hits / chunk_calls if chunk_calls else 0.0),
+            "chunk_bucket_hit_rate": obs.ratio(
+                chunk_hits, chunk_calls, default=None),
             "sessions": len(self.sessions),
             "queued": len(self.queue),
             # forward_batched power-of-two bucketing across all
@@ -620,8 +646,8 @@ class GCNService:
             # that reused an already-compiled padded batch size
             "batch_bucket_calls": bucket_calls,
             "batch_bucket_hits": bucket_hits,
-            "batch_bucket_hit_rate": (
-                bucket_hits / bucket_calls if bucket_calls else 0.0),
+            "batch_bucket_hit_rate": obs.ratio(
+                bucket_hits, bucket_calls, default=None),
             "requests": c.requests,
             "batches": c.batches,
             "mean_batch": c.requests / max(c.batches, 1),
@@ -632,9 +658,9 @@ class GCNService:
             "uploads": c.uploads,
             "uploads_async": c.uploads_async,
             "upload_overlap_s": c.upload_overlap_s,
-            "upload_overlap_fraction": (
-                c.upload_overlap_s / c.upload_s if c.upload_s else 0.0),
-            "requests_per_sec": c.requests / c.busy_s if c.busy_s else 0.0,
+            "upload_overlap_fraction": obs.overlap_fraction(
+                c.upload_overlap_s, c.upload_s, default=None),
+            "requests_per_sec": obs.ratio(c.requests, c.busy_s),
             "async_upload": self.async_upload,
             "cache": cache.cache_stats(),
         }

@@ -64,7 +64,7 @@ from repro.core import message_passing as mp
 from repro.core import sampling
 from repro.core.partition import make_partition
 from repro.core.plan import build_plan, pad_plan_pow2
-from repro.gcn import cache
+from repro.gcn import cache, obs
 from repro.gcn.pipeline import SamplePipeline
 from repro.train import optimizer as optlib
 
@@ -488,14 +488,18 @@ class GCNTrainer:
             indptr, src, w = self._prepared_csr()
             S = batch.num_nodes
             vpad = 1 if S <= 1 else 1 << (S - 1).bit_length()
-            sub_g2, sub_w = sampling.induce_in_edges(
-                indptr, src, w, batch.nodes, num_vertices=vpad,
-                name=f"{eng.graph.name}#batch")
-            part = make_partition(eng.cfg, eng.torus.num_nodes,
-                                  num_vertices=vpad)
-            plan = pad_plan_pow2(build_plan(
-                eng.cfg, sub_g2, eng.torus, part, edge_weights=sub_w,
-                bidir=eng.bidir))
+            with obs.trace.span("plan_build", scope="batch", nodes=S,
+                                vpad=vpad):
+                sub_g2, sub_w = sampling.induce_in_edges(
+                    indptr, src, w, batch.nodes, num_vertices=vpad,
+                    name=f"{eng.graph.name}#batch")
+                part = make_partition(eng.cfg, eng.torus.num_nodes,
+                                      num_vertices=vpad)
+                plan = build_plan(
+                    eng.cfg, sub_g2, eng.torus, part, edge_weights=sub_w,
+                    bidir=eng.bidir)
+            with obs.trace.span("pad_plan", vpad=vpad):
+                plan = pad_plan_pow2(plan)
             sub = GCNEngine.from_plan(
                 eng.cfg, plan, eng.dims, graph_fp=key.graph_fp,
                 axis_names=eng.axis_names, name=sub_g2.name)
@@ -554,8 +558,10 @@ class GCNTrainer:
         seed_local = np.searchsorted(bs.nodes, bs.seeds)
         mk[seed_local] = (1.0 if self.train_mask is None
                           else self.train_mask[bs.seeds])
-        x, _ = sub._shard_input(xb)
-        lb_sh, mk_sh = shard_training_inputs(sub, lb, mk)
+        with obs.trace.span("upload", what="batch_inputs", rows=S,
+                            vpad=vpad):
+            x, _ = sub._shard_input(xb)
+            lb_sh, mk_sh = shard_training_inputs(sub, lb, mk)
         return x, lb_sh, mk_sh
 
     def fit_sampled(self, feats, *, epochs: int = 10, batch_size: int = 64,
@@ -662,12 +668,13 @@ class GCNTrainer:
             upload. Pure in ``seeds`` (every cache is content-keyed and
             first-commit-wins), so it runs identically on the training
             thread (serial) or a builder thread (pipelined)."""
-            batch = self._sampled_batch(sampler, seeds)
-            bs = self._batch_session(batch)
-            step = bs.engine._compiled_train_step(self.opt, impl)
-            pdev = bs.engine.plan_arrays(impl)
-            x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
-            return bs, batch.fingerprint(), step, pdev, x, lb_sh, mk_sh
+            with obs.trace.span("batch_prepare", seeds=int(seeds.size)):
+                batch = self._sampled_batch(sampler, seeds)
+                bs = self._batch_session(batch)
+                step = bs.engine._compiled_train_step(self.opt, impl)
+                pdev = bs.engine.plan_arrays(impl)
+                x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
+                return bs, batch.fingerprint(), step, pdev, x, lb_sh, mk_sh
 
         pipe = None
         if pipeline_depth > 0 and tasks:
@@ -690,10 +697,15 @@ class GCNTrainer:
                             tasks[ti])
                     ti += 1
                     fingerprints.append(fp)
-                    params, self.opt_state, metrics = step(
-                        pdev, params, self.opt_state, x, lb_sh, mk_sh)
+                    # the span covers the host-side sync on the loss
+                    # too — that is when the device work is truly done
+                    with obs.trace.span("execute", what="train_step",
+                                        epoch=ep, batch=ti - 1):
+                        params, self.opt_state, metrics = step(
+                            pdev, params, self.opt_state, x, lb_sh, mk_sh)
+                        loss = float(metrics["loss"])
                     w = float(seeds.size)
-                    loss_sum += float(metrics["loss"]) * w
+                    loss_sum += loss * w
                     weight += w
                     buckets.add(bs.num_padded_vertices)
                     if (big_bs is None
@@ -710,8 +722,9 @@ class GCNTrainer:
                        "loss": loss_sum / max(weight, 1.0)}
                 if eval_every and (ep % eval_every == 0
                                    or ep == epochs - 1):
-                    rec.update({f"eval_{k}": v for k, v
-                                in self.evaluate(handle, params).items()})
+                    with obs.trace.span("evaluate", epoch=ep):
+                        rec.update({f"eval_{k}": v for k, v in
+                                    self.evaluate(handle, params).items()})
                 history.append(rec)
                 if log_every and (ep % log_every == 0 or ep == epochs - 1):
                     print(f"[gcn-train-sampled] epoch={ep} "
@@ -733,16 +746,28 @@ class GCNTrainer:
         f1 = handle.stats()
         frows = ((f1["hit_rows"] - f0["hit_rows"])
                  + (f1["miss_rows"] - f0["miss_rows"]))
+        # measured on the LARGEST bucket's session: the remainder batch
+        # is systematically the runt, and the bench baseline should
+        # reflect the dominant per-step payload
+        xbytes = (_train_exchange_bytes(big_bs.engine, params, impl)
+                  if big_bs is not None else 0)
+        steps = len(fingerprints)
+        obs.metrics.counter(
+            "train.steps", unit="steps",
+            help="sampled train steps executed").add(steps)
+        obs.metrics.counter(
+            "train.exchange_bytes", unit="bytes",
+            help="link bytes moved by sampled train-step exchanges "
+                 "(per-step payload x steps)").add(xbytes * steps)
+        obs.metrics.gauge(
+            "train.exchange_bytes_per_step", unit="bytes",
+            help="per-step exchange payload of the last sampled fit"
+        ).set(xbytes)
         return SampledFitReport(
             history=history, epochs=epochs,
             epoch_s=float(np.mean(epoch_walls)) if epoch_walls else compile_s,
             compile_s=compile_s,
-            # measured on the LARGEST bucket's session: the remainder
-            # batch is systematically the runt, and the bench baseline
-            # should reflect the dominant per-step payload
-            exchange_bytes_per_step=(
-                _train_exchange_bytes(big_bs.engine, params, impl)
-                if big_bs is not None else 0),
+            exchange_bytes_per_step=xbytes,
             params=params,
             batch_size=int(batch_size), fanouts=tuple(sampler.fanouts),
             batches_per_epoch=n_batches,
@@ -750,8 +775,8 @@ class GCNTrainer:
             batch_plan_misses=c1["batch"]["misses"] - c0["batch"]["misses"],
             vertex_buckets=sorted(buckets),
             train_step_compiles=c1["step"]["misses"] - c0["step"]["misses"],
-            feature_hit_rate=(
-                (f1["hit_rows"] - f0["hit_rows"]) / frows if frows else 0.0),
+            feature_hit_rate=obs.ratio(
+                f1["hit_rows"] - f0["hit_rows"], frows),
             feature_bytes_gathered=(
                 f1["gathered_bytes"] - f0["gathered_bytes"]),
             feature_bytes_dense=f1["dense_bytes"] - f0["dense_bytes"],

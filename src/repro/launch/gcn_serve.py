@@ -41,6 +41,18 @@ import numpy as np
 MODELS = ("gcn", "gin", "sage")
 
 
+def fmt_pct(x) -> str:
+    """Percent for display; unmeasured (None) ratios print as n/a —
+    service/engine stats report None, never a silent 0.0, when the
+    underlying path did not run."""
+    return "n/a" if x is None else f"{x:.0%}"
+
+
+def rnd(x, n: int):
+    """``round`` that passes None (unmeasured) through."""
+    return None if x is None else round(x, n)
+
+
 def build_service(mesh_dims, *, num_graphs: int, base_scale: int,
                   feat_in: int, layer_dims, max_batch: int,
                   async_upload: bool, plan_budget_bytes: int | None,
@@ -163,12 +175,19 @@ def main(argv=None) -> int:
                          "(MiB; 0 = serve everything from host)")
     ap.add_argument("--json", default="",
                     help="write the perf record here (BENCH_gcn.json)")
+    ap.add_argument("--trace-out", default="",
+                    help="export a Chrome trace_event JSON of the whole "
+                         "run here (load in chrome://tracing or "
+                         "ui.perfetto.dev; validate with "
+                         "tools/check_trace.py)")
     args = ap.parse_args(argv)
 
     import jax
 
-    from repro.gcn import set_cache_budget
+    from repro.gcn import obs, set_cache_budget
 
+    if args.trace_out:
+        obs.trace.configure(enabled=True)
     set_cache_budget(feature_bytes=args.feature_budget << 20)
     mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
     layer_dims = [int(x) for x in args.layers.split(",")]
@@ -197,7 +216,7 @@ def main(argv=None) -> int:
     print(f"agg backend: {agg_backend} (jax {jax.default_backend()}); "
           f"analytic link bytes: {link_bytes / 2**20:.1f} MiB")
     print(f"plan upload: {st['uploads']} uploads, {st['upload_s']:.2f}s, "
-          f"overlap {st['upload_overlap_fraction']:.0%} "
+          f"overlap {fmt_pct(st['upload_overlap_fraction'])} "
           f"({'async' if st['async_upload'] else 'sync'})")
     fstats = st["cache"]["features"]
     print(f"feature store: hit rate {fstats['hit_rate']:.0%}, "
@@ -214,15 +233,21 @@ def main(argv=None) -> int:
               f"(admission={st['admission']}, chunk {args.chunk_size}); "
               f"peak {st['peak_feature_bytes'] / 2**10:.0f} KiB vs "
               f"{st['dense_feature_bytes'] / 2**10:.0f} KiB dense, "
-              f"prepare overlap {st['inference_overlap_fraction']:.0%}, "
+              f"prepare overlap "
+              f"{fmt_pct(st['inference_overlap_fraction'])}, "
               f"chunk-bucket hit rate "
-              f"{st['chunk_bucket_hit_rate']:.0%}")
+              f"{fmt_pct(st['chunk_bucket_hit_rate'])}")
     if args.verify_full:
         checked = verify_layer_major(svc, graphs, featmap, done)
         assert checked == lm_sessions, \
             f"verified {checked} of {lm_sessions} layer-major sessions"
         print(f"verify-full: {checked} layer-major session(s) "
               "bit-identical to unbudgeted full forward")
+
+    if args.trace_out:
+        spans = obs.trace.export(args.trace_out)
+        print(f"wrote {args.trace_out} ({spans} spans; validate with "
+              f"tools/check_trace.py)")
 
     if args.json:
         rec = {
@@ -237,7 +262,7 @@ def main(argv=None) -> int:
             "requests_per_sec": round(st["requests"] / wall, 3),
             "exec_s": round(st["exec_s"], 4),
             "upload_s": round(st["upload_s"], 4),
-            "upload_overlap_fraction": round(
+            "upload_overlap_fraction": rnd(
                 st["upload_overlap_fraction"], 4),
             "async_upload": st["async_upload"],
             "agg_backend": agg_backend,
@@ -251,6 +276,9 @@ def main(argv=None) -> int:
             "cache": {layer: {k: v for k, v in s.items()}
                       for layer, s in st["cache"].items()
                       if isinstance(s, dict)},
+            # schema-versioned snapshot of the process-wide typed
+            # metrics registry (repro.gcn.obs)
+            "telemetry": obs.telemetry(),
         }
         if lm_sessions:
             rec["layer_major"] = {
@@ -260,9 +288,9 @@ def main(argv=None) -> int:
                 "requests_per_sec": round(st["requests"] / wall, 3),
                 "peak_feature_bytes": int(st["peak_feature_bytes"]),
                 "dense_feature_bytes": int(st["dense_feature_bytes"]),
-                "inference_overlap_fraction": round(
+                "inference_overlap_fraction": rnd(
                     st["inference_overlap_fraction"], 4),
-                "chunk_bucket_hit_rate": round(
+                "chunk_bucket_hit_rate": rnd(
                     st["chunk_bucket_hit_rate"], 4),
                 "verified_full_parity": bool(args.verify_full),
             }

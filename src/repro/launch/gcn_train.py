@@ -152,16 +152,23 @@ def main(argv=None) -> int:
                          "way)")
     ap.add_argument("--pipeline-workers", type=int, default=2,
                     help="builder threads for the sampling pipeline")
+    ap.add_argument("--trace-out", default="",
+                    help="export a Chrome trace_event JSON of the whole "
+                         "run here (load in chrome://tracing or "
+                         "ui.perfetto.dev; validate with "
+                         "tools/check_trace.py)")
     args = ap.parse_args(argv)
 
     import jax
 
     from repro.core.rmat import rmat
-    from repro.gcn import GCNService
+    from repro.gcn import GCNService, obs
     from repro.launch.bench_record import write_record
 
     from repro.gcn import set_cache_budget
 
+    if args.trace_out:
+        obs.trace.configure(enabled=True)
     set_cache_budget(feature_bytes=args.feature_budget << 20)
     mesh_dims = tuple(int(d) for d in args.mesh.split("x"))
     if len(mesh_dims) < 2:
@@ -308,6 +315,11 @@ def main(argv=None) -> int:
           f"through GCNService without replanning "
           f"(jax {jax.default_backend()})")
 
+    if args.trace_out:
+        spans = obs.trace.export(args.trace_out)
+        print(f"wrote {args.trace_out} ({spans} spans; validate with "
+              f"tools/check_trace.py)")
+
     if args.json:
         rec = {
             "suite": suite,
@@ -321,6 +333,9 @@ def main(argv=None) -> int:
             "wall_s": round(wall, 4),
             "jax_backend": jax.default_backend(),
             "models": per_model,
+            # schema-versioned snapshot of the process-wide typed
+            # metrics registry (repro.gcn.obs)
+            "telemetry": obs.telemetry(),
         }
         if args.sampler:
             rec["sampler"] = {"batch_size": args.batch_size,

@@ -1,0 +1,425 @@
+"""The observability layer (``repro.gcn.obs``): span tracing, the typed
+metrics registry, Chrome-trace export, and the design constraints the
+instrumented stack hangs off it:
+
+  * spans nest per thread and are attributed to the ``gcn-pipe`` worker
+    that ran them; a worker exception still closes its spans (the
+    record carries ``error=True``) and the pipeline's fail-fast drain
+    contract survives tracing;
+  * :meth:`Tracer.export` writes trace_event JSON that
+    ``tools/check_trace.py`` validates — balanced B/E, monotonic
+    per-track timestamps, only KNOWN_PHASES names;
+  * registry counters are exact: feature hit/miss rows match the
+    store's own ledger, ``train.exchange_bytes`` is the per-step
+    payload times executed steps;
+  * disabled mode is free: one shared no-op span singleton, no
+    retained allocation on the guarded hot path, empty buffer;
+  * tracing observes, never synchronizes: a pipelined ``fit_sampled``
+    trajectory is bit-identical with tracing on vs off;
+  * the shared ``ratio``/``overlap_fraction`` helpers are THE one
+    definition (regression-pinned against the hand-rolled formulas
+    they replaced), and unmeasured engine telemetry reads ``None``,
+    never a silent ``0.0``.
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``).
+"""
+import json
+import sys
+import threading
+import time
+import tracemalloc
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import check_trace  # noqa: E402  (tools/check_trace.py, path above)
+
+V, E, F, C = 256, 2048, 8, 4
+
+
+@pytest.fixture
+def obs_reset():
+    """The process-wide tracer/registry, saved+restored around the
+    test: tracing off, buffer/ledger cleared, wall clock and default
+    ring capacity reinstated on both sides (tests inject deterministic
+    clocks and shrink the buffer)."""
+    from repro.gcn import obs
+
+    capacity = obs.trace._buf.maxlen
+    obs.trace.configure(enabled=False, capacity=capacity,
+                        clock=time.perf_counter)
+    obs.trace.clear()
+    obs.metrics.reset()
+    yield obs
+    obs.trace.configure(enabled=False, capacity=capacity,
+                        clock=time.perf_counter)
+    obs.trace.clear()
+    obs.metrics.reset()
+
+
+def _trainer(gcn_setup, **kw):
+    from repro.gcn import GCNTrainer
+
+    eng, feats, labels, mask = gcn_setup(**kw)
+    return GCNTrainer(eng, labels, mask), eng, feats, labels, mask
+
+
+# ---------------------------------------------------------------------------
+# spans: nesting, attribution, exceptions
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_attrs_and_injectable_clock(obs_reset):
+    """Nested spans record inner-first with correct begin/end ticks
+    from the injected clock; ``set()`` merges late attrs; both spans
+    land on the recording thread's ident."""
+    obs = obs_reset
+    ticks = iter(float(t) for t in range(100))
+    obs.trace.configure(enabled=True, clock=lambda: next(ticks))  # epoch=0
+    with obs.trace.span("plan_build", scope="batch") as sp:
+        with obs.trace.span("pad_plan"):
+            pass
+        sp.set(nodes=128)
+    evs = obs.trace.events()
+    assert [e["name"] for e in evs] == ["pad_plan", "plan_build"]
+    inner, outer = evs
+    assert (outer["t0"], inner["t0"], inner["t1"], outer["t1"]) == \
+        (1.0, 2.0, 3.0, 4.0)
+    assert outer["attrs"] == {"scope": "batch", "nodes": 128}
+    assert inner["attrs"] is None and inner["ok"] and outer["ok"]
+    me = threading.current_thread()
+    assert {e["tid"] for e in evs} == {me.ident}
+    assert {e["thread"] for e in evs} == {me.name}
+
+
+def test_worker_spans_attributed_and_exception_closes_span(obs_reset):
+    """SamplePipeline worker spans carry the ``gcn-pipe`` thread name;
+    a prepare that raises still closes its ``pipe_prepare`` span (with
+    ``error``/``ok=False``) and the exception surfaces in-order on the
+    consumer — tracing does not weaken the fail-fast drain contract."""
+    from repro.gcn.pipeline import SamplePipeline
+
+    obs = obs_reset
+    obs.trace.configure(enabled=True)
+
+    def prepare(task):
+        if task == 2:
+            raise RuntimeError("boom")
+        return task * 10
+
+    pipe = SamplePipeline(list(range(4)), prepare, depth=2, workers=2)
+    try:
+        assert pipe.get(0) == 0 and pipe.get(1) == 10
+        with pytest.raises(RuntimeError, match="boom"):
+            pipe.get(2)
+    finally:
+        pipe.close()
+    prep = [e for e in obs.trace.events() if e["name"] == "pipe_prepare"]
+    assert prep and all(e["thread"].startswith("gcn-pipe")
+                        for e in prep)
+    failed = [e for e in prep if e["attrs"]["task"] == 2]
+    assert len(failed) == 1 and failed[0]["ok"] is False
+    assert all(e["ok"] for e in prep if e["attrs"]["task"] != 2)
+    # consumer-side spans stay on the consuming thread
+    gets = [e for e in obs.trace.events() if e["name"] == "pipe_get"]
+    assert gets and {e["tid"] for e in gets} == \
+        {threading.current_thread().ident}
+    assert not any(t.name.startswith("gcn-pipe")
+                   for t in threading.enumerate())
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+def test_export_is_valid_chrome_trace(obs_reset, tmp_path):
+    """Exported JSON passes the full tools/check_trace.py validation
+    (balanced LIFO B/E, monotonic per-track ts, KNOWN_PHASES only,
+    thread_name metadata) even with spans from concurrent worker
+    threads, and the error span's args carry ``error: true``."""
+    from repro.gcn.pipeline import SamplePipeline
+
+    obs = obs_reset
+    obs.trace.configure(enabled=True)
+
+    def prepare(task):
+        with obs.trace.span("sample", seeds=task):
+            time.sleep(0.001)
+        if task == 5:
+            raise RuntimeError("boom")
+        return task
+
+    pipe = SamplePipeline(list(range(6)), prepare, depth=3, workers=2)
+    try:
+        for i in range(5):
+            with obs.trace.span("execute", what="consume"):
+                assert pipe.get(i) == i
+        with pytest.raises(RuntimeError):
+            pipe.get(5)
+    finally:
+        pipe.close()
+    path = tmp_path / "trace.json"
+    n = obs.trace.export(str(path))
+    assert n == len(obs.trace.events()) > 0
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    stats = check_trace.validate(doc)  # raises TraceError on violation
+    assert stats["spans"] == n
+    names = set(stats["threads"].values())
+    assert any(t.startswith("gcn-pipe") for t in names), names
+    errs = [ev for ev in doc["traceEvents"]
+            if ev["ph"] == "B" and ev.get("args", {}).get("error")]
+    assert len(errs) == 1 and errs[0]["name"] == "pipe_prepare"
+
+
+def test_export_ring_buffer_bounds_and_clear(obs_reset, tmp_path):
+    """The buffer keeps only the newest ``capacity`` spans; ``clear``
+    empties it; re-export after clear writes metadata only."""
+    obs = obs_reset
+    obs.trace.configure(enabled=True, capacity=8)
+    for i in range(20):
+        with obs.trace.span("sample", seeds=i):
+            pass
+    evs = obs.trace.events()
+    assert len(evs) == 8
+    assert [e["attrs"]["seeds"] for e in evs] == list(range(12, 20))
+    obs.trace.clear()
+    path = tmp_path / "empty.json"
+    assert obs.trace.export(str(path)) == 0
+    doc = json.loads(path.read_text())
+    assert all(ev["ph"] == "M" for ev in doc["traceEvents"])
+    check_trace.validate(doc)
+
+
+# ---------------------------------------------------------------------------
+# registry exactness
+# ---------------------------------------------------------------------------
+
+
+def test_registry_typing_and_conflicts(obs_reset):
+    """Declare-or-get is idempotent; redeclaring under a different
+    kind or unit is a hard error; snapshot carries the schema version
+    plus type/unit/help per metric."""
+    obs = obs_reset
+    c = obs.metrics.counter("t.rows", unit="rows", help="h")
+    assert obs.metrics.counter("t.rows", unit="rows", help="h") is c
+    c.add(3)
+    c.add(2)
+    assert obs.metrics.value("t.rows") == 5
+    with pytest.raises(ValueError):
+        obs.metrics.gauge("t.rows", unit="rows")
+    with pytest.raises(ValueError):
+        obs.metrics.counter("t.rows", unit="bytes")
+    obs.metrics.gauge("t.depth", unit="tasks").set(4)
+    h = obs.metrics.histogram("t.lat", unit="s")
+    for v in (0.25, 0.75):
+        h.observe(v)
+    snap = obs.metrics.snapshot()
+    assert snap["schema_version"] == obs.TELEMETRY_SCHEMA_VERSION
+    m = snap["metrics"]
+    assert m["t.rows"] == {"type": "counter", "unit": "rows",
+                           "help": "h", "value": 5}
+    assert m["t.depth"]["type"] == "gauge" and m["t.depth"]["value"] == 4
+    assert m["t.lat"]["count"] == 2
+    assert m["t.lat"]["sum"] == pytest.approx(1.0)
+    assert obs.metrics.value("t.nope", default=None) is None
+
+
+def test_feature_counters_match_store_ledger(obs_reset, feature_store):
+    """The process-wide ``feature.*`` counters advance by EXACTLY the
+    per-graph deltas the store's own ledger records for the same
+    gathers — two views of one measurement, not two measurements."""
+    obs = obs_reset
+    store, g, feats, handle = feature_store(V=V, E=E, F=F,
+                                            block_vertices=32)
+    fp = handle.graph_fp
+    before = dict(store.graph_stats(fp))
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        nodes = rng.integers(0, V, size=40)
+        np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+    after = dict(store.graph_stats(fp))
+    d = {k: after[k] - before[k] for k in
+         ("hit_rows", "miss_rows", "gathered_bytes", "dense_bytes")}
+    assert d["hit_rows"] + d["miss_rows"] == 4 * 40
+    assert obs.metrics.value("feature.hit_rows") == d["hit_rows"]
+    assert obs.metrics.value("feature.miss_rows") == d["miss_rows"]
+    assert obs.metrics.value("feature.gathered_bytes") == \
+        d["gathered_bytes"]
+    assert obs.metrics.value("feature.dense_bytes") == d["dense_bytes"]
+
+
+def test_train_counters_exact(obs_reset, fresh_caches, gcn_setup):
+    """``train.steps`` counts exactly the executed sampled steps and
+    ``train.exchange_bytes`` is the measured per-step payload times
+    that count (the machine-readable side of the paper's transmission-
+    reduction claim)."""
+    obs = obs_reset
+    tr, eng, feats, _, _ = _trainer(gcn_setup)
+    rep = tr.fit_sampled(feats, epochs=3, batch_size=64, fanouts=(4, 4))
+    steps = 3 * rep.batches_per_epoch
+    assert obs.metrics.value("train.steps") == steps
+    assert obs.metrics.value("train.exchange_bytes") == \
+        rep.exchange_bytes_per_step * steps
+    assert obs.metrics.value("train.exchange_bytes_per_step") == \
+        rep.exchange_bytes_per_step
+    # fixed seed sets sample once; epochs 2..3 hit the batch-plan cache
+    assert obs.metrics.value("sample.batches") == rep.batches_per_epoch
+    snap = eng.telemetry()
+    assert snap["schema_version"] == obs.TELEMETRY_SCHEMA_VERSION
+    assert snap["metrics"]["train.steps"]["value"] == steps
+
+
+# ---------------------------------------------------------------------------
+# disabled mode
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_mode_is_free(obs_reset):
+    """Disabled tracing returns ONE shared no-op singleton, records
+    nothing, and the guarded hot-path pattern (featurestore.gather's)
+    retains zero bytes per call."""
+    obs = obs_reset
+    tr = obs.trace
+    assert not tr.enabled
+    assert tr.span("feature_gather") is obs.NULL_SPAN
+    with tr.span("feature_gather") as sp:
+        assert sp is obs.NULL_SPAN
+        sp.set(rows=1)  # no-op, no state
+    assert tr.events() == []
+
+    def guarded():
+        sp = (tr.span("feature_gather", rows=128) if tr.enabled
+              else obs.NULL_SPAN)
+        with sp:
+            pass
+
+    guarded()  # warm up bytecode caches before measuring
+    tracemalloc.start()
+    try:
+        base = tracemalloc.get_traced_memory()[0]
+        # stay in the interned small-int range: the loop variable must
+        # not itself be the one allocation this pin is measuring
+        for _ in range(256):
+            guarded()
+        grown = tracemalloc.get_traced_memory()[0] - base
+    finally:
+        tracemalloc.stop()
+    assert grown == 0, f"disabled span path retained {grown} bytes"
+
+
+# ---------------------------------------------------------------------------
+# bit-identity with tracing on
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_fit_bit_identical_tracing_on_vs_off(
+        obs_reset, fresh_caches, gcn_setup):
+    """Spans observe, never synchronize: the pipelined sampled
+    trajectory (losses, params, consumed fingerprint order) is
+    bit-identical with tracing enabled, and the traced run captured
+    pipeline spans from gcn-pipe workers."""
+    import jax
+
+    obs = obs_reset
+    runs = []
+    for enabled in (False, True):
+        fresh_caches.clear_all()
+        obs.trace.configure(enabled=enabled)
+        obs.trace.clear()
+        tr, _, feats, _, _ = _trainer(gcn_setup)
+        rep = tr.fit_sampled(feats, epochs=3, batch_size=64,
+                             fanouts=(4, 4), pipeline_depth=2,
+                             pipeline_workers=2)
+        runs.append(([h["loss"] for h in rep.history],
+                     [np.asarray(a) for a in jax.tree.leaves(rep.params)],
+                     rep.batch_fingerprints))
+    (loss_off, leaves_off, fp_off), (loss_on, leaves_on, fp_on) = runs
+    assert loss_on == loss_off
+    assert fp_on == fp_off
+    for a, b in zip(leaves_on, leaves_off):
+        np.testing.assert_array_equal(a, b)
+    names = {e["name"] for e in obs.trace.events()}
+    assert {"pipe_prepare", "pipe_get", "batch_prepare", "execute",
+            "sample"} <= names, names
+    workers = {e["thread"] for e in obs.trace.events()
+               if e["name"] == "pipe_prepare"}
+    assert workers and all(w.startswith("gcn-pipe") for w in workers)
+
+
+# ---------------------------------------------------------------------------
+# shared fraction helpers + silent-zero fix
+# ---------------------------------------------------------------------------
+
+
+def test_shared_helpers_match_hand_rolled_formulas(obs_reset):
+    """Regression pin for the dedupe: ``obs.ratio`` /
+    ``obs.overlap_fraction`` reproduce the three hand-rolled
+    expressions they replaced (pipeline stats, inference overlap,
+    service upload overlap) bit-for-bit, including the den==0 legacy
+    default — and ``default=None`` flags the never-measured case."""
+    obs = obs_reset
+    cases = [(0.0, 0.0), (0.0, 2.0), (0.5, 2.0), (2.0, 2.0),
+             (1e-9, 3.0), (7.25, 0.5)]
+    for hidden, total in cases:
+        legacy = (hidden / total) if total else 0.0  # the old inline form
+        assert obs.overlap_fraction(hidden, total) == legacy, (hidden,
+                                                               total)
+        assert obs.ratio(hidden, total) == legacy
+    assert obs.overlap_fraction(1.0, 0.0, default=None) is None
+    assert obs.ratio(5, 0, default=None) is None
+    assert obs.ratio(3, 4) == 0.75
+
+
+def test_pipeline_stats_still_use_shared_helper_values(obs_reset):
+    """End-to-end: SamplePipeline.stats() computes its fractions
+    through the shared helpers with the legacy 0.0 default (raw stats
+    keep their meaning; the None semantics live on engine surfaces)."""
+    from repro.gcn.pipeline import SamplePipeline
+
+    obs = obs_reset
+    pipe = SamplePipeline([0, 1, 2], lambda t: t, depth=2, workers=1)
+    try:
+        for i in range(3):
+            pipe.get(i)
+    finally:
+        pipe.close()
+    st = pipe.stats()
+    assert st["overlap_fraction"] == obs.overlap_fraction(
+        st["overlap_s"], st["prepare_s"])
+    legacy = (st["overlap_s"] / st["prepare_s"]) if st["prepare_s"] \
+        else 0.0
+    assert st["overlap_fraction"] == legacy
+    assert 0.0 <= st["queue_occupancy_mean"] <= st["depth"]
+
+
+def test_engine_stats_none_before_measured_after(
+        obs_reset, fresh_caches, gcn_setup):
+    """The silent-zero fix: unmeasured ratios on ``engine.stats()`` /
+    ``inference_stats()`` read ``None``; after a sampled fit the same
+    fields are measured floats (a serial run reports a genuine 0.0
+    overlap, not None — nothing was hidden, and that was measured)."""
+    tr, eng, feats, _, _ = _trainer(gcn_setup)
+    st = eng.stats(feat_dim=F)
+    assert st["batch_bucket_hit_rate"] is None
+    assert st["pipeline_overlap_fraction"] is None
+    assert st["pipeline_queue_occupancy"] is None
+    assert st["feature_hit_rate"] is None
+    assert st["feature_byte_reduction"] is None
+    inf = eng.inference_stats()
+    assert inf["inference_overlap_fraction"] is None
+    assert inf["chunk_bucket_hit_rate"] is None
+    # counts (not ratios) stay plain zeros — they ARE measured
+    assert st["batch_bucket_calls"] == 0
+    assert inf["inference_chunks"] == 0
+
+    tr.fit_sampled(feats, epochs=2, batch_size=64, fanouts=(4, 4))
+    st = eng.stats(feat_dim=F)
+    assert isinstance(st["pipeline_overlap_fraction"], float)
+    assert st["pipeline_overlap_fraction"] == 0.0  # serial: measured 0
+    assert isinstance(st["feature_hit_rate"], float)
+    assert isinstance(st["feature_byte_reduction"], float)

@@ -1,0 +1,240 @@
+"""Chrome-trace validator for ``--trace-out`` exports: proves the file
+any launcher wrote is a well-formed ``trace_event`` JSON that Perfetto /
+``chrome://tracing`` will load, and (optionally) that the sampling
+pipeline's worker-thread ``pipe_prepare`` spans really overlap
+main-thread ``execute`` spans — the whole point of ``--pipeline-depth``.
+Wired into ``make trace-check`` (part of ``make check``).
+
+Checks:
+  * top level is ``{"traceEvents": [...]}``;
+  * every event carries ``ph``/``name``/``pid``/``tid``/``ts`` with
+    ``ph`` in {M, B, E} and a finite numeric ``ts``;
+  * within each (pid, tid) track, non-metadata timestamps are
+    monotonically non-decreasing in file order;
+  * B/E events are LIFO-balanced per track with matching names (a
+    dangling B or stray E would render as a torn bar);
+  * every B-span name is a phase ``repro.gcn.obs.KNOWN_PHASES`` knows
+    about, so dashboards keyed on phase names never see strangers.
+
+    PYTHONPATH=src python tools/check_trace.py TRACE.json \
+        [--require-overlap]
+    python tools/check_trace.py --selftest
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+try:
+    from repro.gcn.obs import KNOWN_PHASES
+except ImportError:  # run as a bare script without PYTHONPATH=src
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.gcn.obs import KNOWN_PHASES
+
+#: thread-name prefix SamplePipeline gives its workers
+PIPE_THREAD_PREFIX = "gcn-pipe"
+
+REQUIRED_KEYS = ("ph", "name", "pid", "tid", "ts")
+
+
+class TraceError(Exception):
+    """One validation failure, with enough context to locate it."""
+
+
+def validate(doc: dict) -> dict:
+    """Validate one parsed trace document; returns summary stats.
+    Raises :class:`TraceError` on the first violation."""
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        raise TraceError("top level must be {'traceEvents': [...]}")
+    events = doc["traceEvents"]
+    spans = 0
+    threads: dict[tuple, str] = {}
+    last_ts: dict[tuple, float] = {}
+    stacks: dict[tuple, list[str]] = {}
+    for i, ev in enumerate(events):
+        for k in REQUIRED_KEYS:
+            if k not in ev:
+                raise TraceError(f"event {i} missing key {k!r}: {ev}")
+        ph, ts = ev["ph"], ev["ts"]
+        if ph not in ("M", "B", "E"):
+            raise TraceError(f"event {i} has unknown ph {ph!r}")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            raise TraceError(f"event {i} has non-finite ts {ts!r}")
+        track = (ev["pid"], ev["tid"])
+        if ph == "M":
+            if ev["name"] == "thread_name":
+                threads[track] = ev.get("args", {}).get("name", "")
+            continue
+        if ts < last_ts.get(track, 0.0):
+            raise TraceError(
+                f"event {i} ts {ts} < previous {last_ts[track]} on "
+                f"track {track} (timestamps must be monotonic)")
+        last_ts[track] = ts
+        stack = stacks.setdefault(track, [])
+        if ph == "B":
+            if ev["name"] not in KNOWN_PHASES:
+                raise TraceError(
+                    f"event {i} span name {ev['name']!r} not in "
+                    f"KNOWN_PHASES {sorted(KNOWN_PHASES)}")
+            stack.append(ev["name"])
+            spans += 1
+        else:  # E
+            if not stack:
+                raise TraceError(
+                    f"event {i}: E {ev['name']!r} with no open B on "
+                    f"track {track}")
+            opened = stack.pop()
+            if opened != ev["name"]:
+                raise TraceError(
+                    f"event {i}: E {ev['name']!r} closes B {opened!r} "
+                    f"on track {track} (names must match LIFO)")
+    for track, stack in stacks.items():
+        if stack:
+            raise TraceError(
+                f"track {track} ends with unclosed span(s) {stack}")
+    return {"events": len(events), "spans": spans, "threads": threads}
+
+
+def _intervals(events, want_name: str, tids) -> list[tuple]:
+    """(start, end) pairs of ``want_name`` spans on the given tids,
+    reconstructed from balanced B/E order (validate() ran first)."""
+    out, open_ts = [], {}
+    for ev in events:
+        if ev["ph"] not in ("B", "E") or ev["name"] != want_name:
+            continue
+        track = (ev["pid"], ev["tid"])
+        if ev["tid"] not in tids:
+            continue
+        if ev["ph"] == "B":
+            open_ts.setdefault(track, []).append(ev["ts"])
+        else:
+            out.append((open_ts[track].pop(), ev["ts"]))
+    return sorted(out)
+
+
+def _merge(iv: list[tuple]) -> list[tuple]:
+    merged: list[list] = []
+    for s, e in iv:
+        if merged and s <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], e)
+        else:
+            merged.append([s, e])
+    return [tuple(m) for m in merged]
+
+
+def pipeline_overlap_us(doc: dict, threads: dict) -> float:
+    """Microseconds during which a ``gcn-pipe`` worker's
+    ``pipe_prepare`` span ran concurrently with an ``execute`` span on
+    any other thread — the observable signature of pipelined
+    sampling."""
+    pipe_tids = {tid for (_, tid), name in threads.items()
+                 if name.startswith(PIPE_THREAD_PREFIX)}
+    other_tids = {ev["tid"] for ev in doc["traceEvents"]
+                  if ev["tid"] not in pipe_tids}
+    prep = _merge(_intervals(doc["traceEvents"], "pipe_prepare",
+                             pipe_tids))
+    execute = _merge(_intervals(doc["traceEvents"], "execute",
+                                other_tids))
+    total, j = 0.0, 0
+    for s, e in prep:
+        while j < len(execute) and execute[j][1] <= s:
+            j += 1
+        k = j
+        while k < len(execute) and execute[k][0] < e:
+            total += min(e, execute[k][1]) - max(s, execute[k][0])
+            k += 1
+    return total
+
+
+def check_file(path: Path, require_overlap: bool) -> int:
+    doc = json.loads(path.read_text())
+    try:
+        stats = validate(doc)
+    except TraceError as e:
+        print(f"check_trace: {path}: INVALID: {e}")
+        return 1
+    overlap = pipeline_overlap_us(doc, stats["threads"])
+    names = sorted(set(stats["threads"].values()))
+    print(f"check_trace: {path}: OK — {stats['spans']} spans across "
+          f"{len(stats['threads'])} thread(s) {names}; "
+          f"pipeline prepare/execute overlap {overlap / 1e3:.2f} ms")
+    if require_overlap and overlap <= 0.0:
+        print("check_trace: FAIL — --require-overlap set but no "
+              "gcn-pipe pipe_prepare span overlaps an execute span "
+              "on another thread")
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# selftest
+# ---------------------------------------------------------------------------
+
+
+def _doc(events):
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def _ev(ph, name, tid, ts, **kw):
+    return {"ph": ph, "name": name, "pid": 1, "tid": tid, "ts": ts, **kw}
+
+
+def selftest() -> int:
+    ok = _doc([
+        _ev("M", "thread_name", 1, 0.0, args={"name": "MainThread"}),
+        _ev("M", "thread_name", 2, 0.0, args={"name": "gcn-pipe-0"}),
+        _ev("B", "execute", 1, 10.0), _ev("E", "execute", 1, 40.0),
+        _ev("B", "pipe_prepare", 2, 20.0),
+        _ev("E", "pipe_prepare", 2, 50.0),
+    ])
+    stats = validate(ok)
+    assert stats["spans"] == 2, stats
+    ov = pipeline_overlap_us(ok, stats["threads"])
+    assert abs(ov - 20.0) < 1e-9, ov  # [20, 40) of [10, 40) x [20, 50)
+
+    bad = {
+        "unbalanced": [_ev("B", "execute", 1, 1.0)],
+        "stray E": [_ev("E", "execute", 1, 1.0)],
+        "name mismatch": [_ev("B", "execute", 1, 1.0),
+                          _ev("E", "sample", 1, 2.0)],
+        "non-monotonic": [_ev("B", "execute", 1, 5.0),
+                          _ev("E", "execute", 1, 3.0)],
+        "unknown phase": [_ev("B", "frobnicate", 1, 1.0),
+                          _ev("E", "frobnicate", 1, 2.0)],
+        "missing key": [{"ph": "B", "name": "execute", "pid": 1,
+                         "ts": 1.0}],
+    }
+    for label, events in bad.items():
+        try:
+            validate(_doc(events))
+        except TraceError:
+            continue
+        raise AssertionError(f"selftest: {label!r} was not rejected")
+    print("check_trace: selftest OK")
+    return 0
+
+
+def main(argv) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="?", help="trace_event JSON to check")
+    ap.add_argument("--require-overlap", action="store_true",
+                    help="additionally fail unless a gcn-pipe "
+                         "pipe_prepare span overlaps an execute span "
+                         "on another thread")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the checker's own fixture suite and exit")
+    args = ap.parse_args(argv[1:])
+    if args.selftest:
+        return selftest()
+    if not args.trace:
+        ap.error("trace path required (or --selftest)")
+    return check_file(Path(args.trace), args.require_overlap)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
