@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: smoke test bench bench-json serve train train-sampled \
-	docs-check trace-check check
+	train-cv docs-check trace-check check
 
 # engine example + tier-1 tests, multi-device (8 forced host devices)
 smoke:
@@ -38,6 +38,14 @@ train-sampled:
 		--pipeline-depth $(PIPELINE_DEPTH) \
 		--json /tmp/BENCH_gcn.json
 
+# control-variate sampled-training gate: fanout-2 CV must move strictly
+# fewer exchange bytes per step than plain fanout-8 at matched (+-2%)
+# train accuracy, with the pipelined CV trajectory asserted
+# bit-identical to serial (tracing on); scratch path as above
+train-cv:
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-cv \
+		--json /tmp/BENCH_gcn.json
+
 # machine-readable perf trajectory: refresh ALL suite records in
 # BENCH_gcn.json in place so PRs can diff serve + train perf against
 # the checked-in baseline
@@ -47,6 +55,8 @@ bench-json:
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite train \
 		--json BENCH_gcn.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-sampled \
+		--json BENCH_gcn.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --suite train-cv \
 		--json BENCH_gcn.json
 
 # execute every fenced ```python block in README.md and docs/*.md
@@ -68,4 +78,4 @@ trace-check:
 		--require-overlap
 
 # the CI-style gate: everything a PR must keep green
-check: smoke serve train train-sampled trace-check docs-check
+check: smoke serve train train-sampled train-cv trace-check docs-check

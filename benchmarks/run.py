@@ -19,10 +19,16 @@ microbenches. Prints ``name,us_per_call,derived`` CSV.
                                                           # writes the
                                                           # "train-sampled"
                                                           # record
+  PYTHONPATH=src python -m benchmarks.run --suite train-cv
+                                                          # control-variate
+                                                          # fanout-2 vs plain
+                                                          # fanout-8 gate,
+                                                          # writes the
+                                                          # "train-cv" record
 
 ``BENCH_gcn.json`` holds one record per suite (serve + train +
-train-sampled); each suite refreshes only its own slot, so ``make
-bench-json`` (all suites) rebuilds the full checked-in baseline.
+train-sampled + train-cv); each suite refreshes only its own slot, so
+``make bench-json`` (all suites) rebuilds the full checked-in baseline.
 """
 from __future__ import annotations
 
@@ -286,6 +292,108 @@ def run_train_sampled(json_path: str, pipeline_depth: int = 2) -> int:
     return 0
 
 
+def run_train_cv(json_path: str) -> int:
+    """Control-variate sampled-training benchmark: the byte-vs-accuracy
+    trade the historical-aggregation sampler exists for. Two launcher
+    runs on the SAME graph/labels/seed/epochs (2x2 torus, 8 forced host
+    devices):
+
+      * plain neighbor sampling at fanout 8,8 — the accuracy baseline
+        and its measured per-step exchange bytes;
+      * control-variate sampling at fanout 2,2
+        (``--variance-reduction``) — each layer adds the dropped-edge
+        aggregation over cached historical activations, so the tiny
+        fanout keeps the baseline's accuracy while the sampled exchange
+        shrinks with the edge count. The CV run exports a Chrome trace
+        (tracing ON) and the driver's in-run serial-vs-pipelined pair
+        asserts the pipelined CV trajectory is bit-identical to serial.
+
+    The gate — the record is only written if it holds:
+
+      * ``exchange_bytes_per_step`` (CV, fanout 2) strictly below the
+        plain fanout-8 baseline;
+      * train accuracy within 2 percentage points of the baseline.
+
+    The merged ``"train-cv"`` record carries both sub-records plus the
+    byte-reduction ratio — the repo-level, machine-checked analog of
+    the paper's transmission-reduction claim."""
+    import json
+
+    root = Path(__file__).resolve().parent.parent
+    env = _forced_host_env(root)
+    common = ["--mesh", "2x2", "--models", "gcn", "--scale", "9",
+              "--epochs", "12", "--sampler", "--batch-size", "128",
+              "--feature-budget", "64", "--pipeline-depth", "2"]
+    with tempfile.TemporaryDirectory() as td:
+        plain_json = str(Path(td) / "plain.json")
+        cv_json = str(Path(td) / "cv.json")
+        trace_path = str(Path(td) / "train_cv_trace.json")
+        runs = [
+            ("train-cv baseline (fanout 8, plain)",
+             common + ["--fanout", "8,8", "--json", plain_json]),
+            ("train-cv candidate (fanout 2, CV)",
+             common + ["--fanout", "2,2", "--variance-reduction",
+                       "--history-budget", "64",
+                       "--trace-out", trace_path, "--json", cv_json]),
+        ]
+        for name, extra in runs:
+            cmd = [sys.executable, "-m", "repro.launch.gcn_train"] + extra
+            print(f"# {name}: {' '.join(cmd)}", flush=True)
+            r = subprocess.run(cmd, env=env, cwd=root)
+            print(f"# {name} -> {'OK' if r.returncode == 0 else 'FAIL'}",
+                  flush=True)
+            if r.returncode:
+                return r.returncode
+        check = [sys.executable, str(root / "tools" / "check_trace.py"),
+                 trace_path, "--require-overlap"]
+        print(f"# train-cv trace gate: {' '.join(check)}", flush=True)
+        r = subprocess.run(check, env=env, cwd=root)
+        if r.returncode:
+            return r.returncode
+        plain = json.loads(Path(plain_json).read_text())["train-sampled"]
+        cv = json.loads(Path(cv_json).read_text())["train-sampled"]
+
+    pm, cm = plain["models"]["gcn"], cv["models"]["gcn"]
+    assert cm["variance_reduction"] and not pm["variance_reduction"]
+    # THE gate: fewer bytes at matched accuracy
+    assert cm["exchange_bytes_per_step"] < pm["exchange_bytes_per_step"], \
+        (f"CV fanout-2 must move strictly fewer bytes than plain "
+         f"fanout-8: {cm['exchange_bytes_per_step']} vs "
+         f"{pm['exchange_bytes_per_step']}")
+    acc_gap = abs(cm["train_accuracy"] - pm["train_accuracy"])
+    assert acc_gap <= 0.02, \
+        (f"CV fanout-2 accuracy {cm['train_accuracy']} strays "
+         f"{acc_gap:.4f} (> 0.02) from plain fanout-8 "
+         f"{pm['train_accuracy']}")
+    assert cm["history_write_rows"] > 0, \
+        "CV run never wrote history back"
+    _assert_telemetry(cv, "train-cv")
+    ratio = (cm["exchange_bytes_per_step"]
+             / max(pm["exchange_bytes_per_step"], 1))
+    print(f"# train-cv gate: {pm['exchange_bytes_per_step']}B/step "
+          f"(fanout 8, acc {pm['train_accuracy']:.2%}) -> "
+          f"{cm['exchange_bytes_per_step']}B/step (fanout 2 CV, acc "
+          f"{cm['train_accuracy']:.2%}); {(1 - ratio):.0%} fewer bytes",
+          flush=True)
+
+    from repro.launch.bench_record import write_record
+
+    rec = {
+        "suite": "train-cv",
+        "gate": {"bytes_ratio": round(ratio, 4),
+                 "accuracy_gap": round(acc_gap, 4),
+                 "max_accuracy_gap": 0.02},
+        "plain_fanout8": pm,
+        "cv_fanout2": cm,
+        "sampler_plain": plain["sampler"],
+        "sampler_cv": cv["sampler"],
+        "telemetry": cv["telemetry"],
+    }
+    write_record(json_path, "train-cv", rec)
+    print(f"# wrote {json_path} (train-cv suite)", flush=True)
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of module stems")
@@ -294,7 +402,9 @@ def main() -> None:
                          "(8 host devices); 'serve' = multi-graph "
                          "GCNService bench; 'train' = distributed GCN "
                          "training bench; 'train-sampled' = neighbor-"
-                         "sampled mini-batch bench (all merge into "
+                         "sampled mini-batch bench; 'train-cv' = "
+                         "control-variate fanout-2 vs plain fanout-8 "
+                         "byte/accuracy gate (all merge into "
                          "BENCH_gcn.json)")
     ap.add_argument("--json", default="BENCH_gcn.json",
                     help="perf-record path for --suite "
@@ -312,9 +422,11 @@ def main() -> None:
         sys.exit(run_train(args.json))
     elif args.suite == "train-sampled":
         sys.exit(run_train_sampled(args.json, args.pipeline_depth))
+    elif args.suite == "train-cv":
+        sys.exit(run_train_cv(args.json))
     elif args.suite:
         sys.exit(f"unknown suite {args.suite!r} (expected 'smoke', "
-                 "'serve', 'train' or 'train-sampled')")
+                 "'serve', 'train', 'train-sampled' or 'train-cv')")
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
     print("name,us_per_call,derived")

@@ -249,6 +249,27 @@ def shard_features(plan: CommPlan, feats_global: np.ndarray) -> np.ndarray:
     return shard_node_values(plan, feats_global, fill=0)
 
 
+def scatter_rows_sharded(plan: CommPlan, rows: np.ndarray,
+                         index: np.ndarray | None = None) -> np.ndarray:
+    """Sparse per-vertex rows -> the full sharded ``(*dims, Vp, F)``
+    table, zero everywhere else. ``rows`` is ``(S, F)``; ``index``
+    (default ``arange(S)``) gives each row's global vertex id.
+
+    The exchange executor is *linear* per feature column, so any
+    constant additive offset to the aggregation — the control-variate
+    history term ``repro.gcn.train`` adds per layer — composes OUTSIDE
+    the exchange: the offset is scattered into this layout host-side
+    and added to the exchanged accumulators on device, which keeps the
+    exchange's custom_vjp untouched (the backward pass sees the offset
+    as a constant and moves not one extra ppermute byte)."""
+    rows = np.asarray(rows)
+    V = plan.part.num_vertices
+    full = np.zeros((V,) + rows.shape[1:], rows.dtype)
+    full[np.arange(rows.shape[0]) if index is None
+         else np.asarray(index, np.int64)] = rows
+    return shard_node_values(plan, full, fill=0)
+
+
 def unshard_features(plan: CommPlan, local: np.ndarray, V: int) -> np.ndarray:
     """Inverse of shard_features for (..., Vp, F) tables."""
     part = plan.part

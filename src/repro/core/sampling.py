@@ -44,7 +44,7 @@ import numpy as np
 from repro.core.graph import Graph
 
 __all__ = ["NeighborSampler", "SampledBatch", "csr_in_with_values",
-           "induce_in_edges"]
+           "induce_in_edges", "missing_in_edges"]
 
 _OBS = None
 
@@ -119,6 +119,40 @@ def induce_in_edges(indptr: np.ndarray, src: np.ndarray,
                 dst_local[keep].astype(np.int32), name=name)
     vals = None if values is None else values[idx[keep]]
     return sub, vals
+
+
+def missing_in_edges(indptr: np.ndarray, src: np.ndarray,
+                     values: np.ndarray | None, nodes: np.ndarray):
+    """The exact complement of :func:`induce_in_edges` over the same
+    destination-CSR view: every parent edge whose dst is in ``nodes``
+    but whose src is NOT — the edges a vertex-induced mini-batch drops.
+
+    This is the control-variate correction set (``repro.gcn.train``):
+    aggregating cached historical activations ``h̄[src]`` over exactly
+    these edges makes ``Â_sub·h + Σ_missing w·h̄[src]`` an unbiased,
+    low-variance estimate of the parent aggregation, and because the
+    set is the *precise* complement, it is empty for every interior
+    vertex of a full-fanout batch — the correction vanishes identically
+    and CV training degenerates to plain sampling bit-for-bit.
+
+    Returns ``(dst_local, src_global, values_missing)`` with
+    ``dst_local`` indexing into ``nodes`` (``values_missing`` is None
+    when ``values`` is)."""
+    nodes = np.asarray(nodes, np.int64)
+    S = int(nodes.size)
+    counts = (indptr[nodes + 1] - indptr[nodes]).astype(np.int64)
+    if counts.sum() == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                None if values is None else np.zeros(0, values.dtype))
+    idx = np.concatenate([np.arange(indptr[v], indptr[v + 1])
+                          for v in nodes])
+    dst_local = np.repeat(np.arange(S, dtype=np.int64), counts)
+    src_glob = src[idx].astype(np.int64)
+    pos = np.searchsorted(nodes, src_glob)
+    pos_c = np.minimum(pos, S - 1)
+    drop = nodes[pos_c] != src_glob
+    vals = None if values is None else values[idx[drop]]
+    return dst_local[drop], src_glob[drop], vals
 
 
 @dataclass
@@ -283,7 +317,18 @@ class NeighborSampler:
             hit = self._memo.get(key)
             if hit is not None:
                 self._memo.move_to_end(key)
-                return hit
+        if hit is not None:
+            # a hit skips sample() entirely, so without its own counter
+            # telemetry under-reports sampler work from epoch 2 on (and
+            # pipelined vs serial runs disagree on identical work):
+            # sample.batches + sample.memo_hits == batches consumed
+            obs = _obs()
+            if obs is not None:
+                obs.metrics.counter(
+                    "sample.memo_hits", unit="batches",
+                    help="sample_memoized calls served from the memo "
+                         "without re-sampling").add(1)
+            return hit
         batch = self.sample(seeds, induce_subgraph=induce_subgraph)
         with self._memo_lock:
             won = self._memo.setdefault(key, batch)

@@ -8,7 +8,11 @@ prepared graphs, compiled layer steps) with byte-bounded LRU eviction;
 sessions with async double-buffered plan upload;
 ``repro.gcn.featurestore`` is the storage tier — a process-wide
 ``FeatureStore`` with a byte-budgeted, degree-ordered device cache
-that every consumer gathers vertex features through; ``GCNTrainer``
+that every consumer gathers vertex features through;
+``repro.gcn.history`` is its training-side sibling — a byte-budgeted
+``HistoryStore`` of per-layer historical activations backing the
+sampled trainer's control-variate (historical-aggregation) mode
+(``fit_sampled(variance_reduction=True)``); ``GCNTrainer``
 (``repro.gcn.train``) trains full-batch node classification THROUGH the
 same exchange (its VJP is a reversed relay replay) and hands trained
 params to serving via ``GCNService.adopt``; ``repro.gcn.pipeline``
@@ -45,6 +49,10 @@ from repro.gcn.featurestore import (
     FeatureHandle,
     FeatureStore,
     default_store,
+)
+from repro.gcn.history import (
+    HistoryStore,
+    default_history,
 )
 from repro.gcn.inference import (
     ChunkSession,
@@ -88,6 +96,7 @@ __all__ = [
     "GCNEngine",
     "GCNService",
     "GCNTrainer",
+    "HistoryStore",
     "KNOWN_PHASES",
     "MetricsRegistry",
     "ModelSpec",
@@ -99,6 +108,7 @@ __all__ = [
     "Tracer",
     "cache_stats",
     "clear_plan_cache",
+    "default_history",
     "default_store",
     "estimate_plan_bytes",
     "forward_layer_major",

@@ -315,6 +315,14 @@ def _feature_layer():
     return featurestore.default_store()
 
 
+def _history_layer():
+    """The process-wide history store (lazy import: history imports
+    this module at its top level, like featurestore)."""
+    from repro.gcn import history
+
+    return history.default_history()
+
+
 def _on_plan_evict(key: PlanKey, _plan):
     # coherence: a plan's derived encodings and compiled executors can
     # never outlive it — else a re-admitted graph could pair a FRESH
@@ -326,6 +334,9 @@ def _on_plan_evict(key: PlanKey, _plan):
     # the evicted graph stops holding device feature bytes too; its
     # host column store survives and re-warms through the cold tier
     _feature_layer().release_device(key.graph_fp)
+    # same cascade for historical activations: they re-warm through
+    # write-backs (reads fall back to the plain sampled term meanwhile)
+    _history_layer().release(key.graph_fp)
     for session in list(_SESSIONS.pop(key, ())):
         session._release_plan_memos()
 
@@ -367,7 +378,8 @@ def set_cache_budget(*, plan_bytes: int | None = ...,
                      prep_bytes: int | None = ...,
                      step_entries: int | None = ...,
                      batch_bytes: int | None = ...,
-                     feature_bytes: int | None = ...) -> None:
+                     feature_bytes: int | None = ...,
+                     history_bytes: int | None = ...) -> None:
     """Reconfigure the byte budgets (``None`` = unbounded; omitted
     fields keep their current value). Shrinks immediately —
     ``feature_bytes`` unpins/evicts device feature blocks down to the
@@ -386,6 +398,8 @@ def set_cache_budget(*, plan_bytes: int | None = ...,
             _BATCH.budget_bytes = batch_bytes
         if feature_bytes is not ...:
             _feature_layer().set_budget(feature_bytes)
+        if history_bytes is not ...:
+            _history_layer().set_budget(history_bytes)
         for store in (_PLANS, _ELL, _PREP, _STEPS, _BATCH):
             store._shrink()
 
@@ -497,6 +511,7 @@ def clear_all() -> None:
         for store in (_PLANS, _ELL, _PREP, _STEPS, _BATCH):
             store.clear()
         _feature_layer().clear()
+        _history_layer().clear()
         _STEP_DEPS.clear()
         for sessions in list(_SESSIONS.values()):
             for session in list(sessions):
@@ -538,6 +553,7 @@ def cache_stats() -> dict:
         out = {s.name: s.stats()
                for s in (_PLANS, _ELL, _PREP, _STEPS, _BATCH)}
         out["features"] = _feature_layer().layer_stats()
+        out["history"] = _history_layer().stats()
         out.update(hits=_PLANS.hits, misses=_PLANS.misses,
                    entries=len(_PLANS._d), ell_entries=len(_ELL._d))
         return out

@@ -723,6 +723,43 @@ class GCNEngine:
                 lambda: _train.build_train_step(self, impl, opt_cfg))
         return self._train_fns[memo]
 
+    def _compiled_cv_loss_grad(self, agg_impl: str | None = None):
+        """:meth:`_compiled_loss_grad` for the control-variate forward:
+        ``(pdev, params, x, corrs, labels, mask) -> (loss, grads)``.
+        ``corrs`` (one ``(*dims, Vp, F_l)`` table per layer) enters as a
+        constant input — no gradient path, no extra exchange — so the
+        traced ppermute payload equals the plain step's (pinned by
+        ``tests/test_gcn_train_cv.py``)."""
+        from repro.gcn import train as _train
+
+        impl = self._impl(agg_impl)
+        memo = ("cv_loss_grad", impl)
+        if memo not in self._train_fns:
+            fp = ("cv_loss_grad", self._exec_fp(impl, False))
+            self._train_fns[memo] = cache.get_step(
+                self.plan_key_for(impl), fp,
+                lambda: _train.build_cv_loss_grad(self, impl))
+        return self._train_fns[memo]
+
+    def _compiled_cv_train_step(self, opt_cfg, agg_impl: str | None = None):
+        """:meth:`_compiled_train_step` for control-variate sampled
+        training: ``(pdev, params, opt_state, x, corrs, labels, mask)
+        -> (params, opt_state, metrics, hiddens)``. The extra
+        ``hiddens`` output carries each hidden layer's freshly computed
+        activations so the trainer can write them back to the
+        :class:`~repro.gcn.history.HistoryStore` after the optimizer
+        update."""
+        from repro.gcn import train as _train
+
+        impl = self._impl(agg_impl)
+        memo = ("cv_train_step", impl, opt_cfg)
+        if memo not in self._train_fns:
+            fp = ("cv_train_step", opt_cfg, self._exec_fp(impl, False))
+            self._train_fns[memo] = cache.get_step(
+                self.plan_key_for(impl), fp,
+                lambda: _train.build_cv_train_step(self, impl, opt_cfg))
+        return self._train_fns[memo]
+
     def loss_and_grad(self, feats, labels, mask=None, params=None, *,
                       agg_impl: str | None = None):
         """Masked cross-entropy and its parameter gradients, computed

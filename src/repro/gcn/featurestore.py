@@ -138,6 +138,20 @@ class _GraphFeatures:
         return self.feat_dim * 4  # float32
 
 
+def _check_budget(budget_bytes):
+    """None (unbounded) or a non-negative byte count. A negative budget
+    used to be accepted silently and behave like 0 in some paths while
+    draining pins in others — reject it outright so the unset (None)
+    and zero corners are the only special cases the tiers handle."""
+    if budget_bytes is None:
+        return None
+    b = int(budget_bytes)
+    if b < 0:
+        raise ValueError(f"budget_bytes must be >= 0 or None: "
+                         f"{budget_bytes}")
+    return b
+
+
 class FeatureStore:
     """Byte-budgeted vertex-feature cache: pinned hot tier + LRU cold
     tier over a host-backed column store. See the module docstring for
@@ -162,9 +176,14 @@ class FeatureStore:
                  block_vertices: int = 64, hot_fraction: float = 0.5,
                  lock=None):
         self.lock = lock if lock is not None else threading.RLock()
-        self.budget_bytes = budget_bytes
+        self.budget_bytes = _check_budget(budget_bytes)
         self.block_vertices = int(block_vertices)
+        if self.block_vertices <= 0:
+            raise ValueError("block_vertices must be positive")
         self.hot_fraction = float(hot_fraction)
+        if not 0.0 <= self.hot_fraction <= 1.0:
+            raise ValueError(
+                f"hot_fraction must be in [0, 1]: {hot_fraction}")
         self._graphs: dict[str, _GraphFeatures] = {}
         # pin log in admission order (newest last): budget shrinks unpin
         # LIFO, so the hottest earliest-admitted blocks survive longest
@@ -264,6 +283,7 @@ class FeatureStore:
         tier fits, then the cold LRU evicts down to the remainder. The
         invariant ``device_bytes <= budget`` holds on return."""
         with self.lock:
+            budget_bytes = _check_budget(budget_bytes)
             self.budget_bytes = budget_bytes
             if budget_bytes is not None:
                 while self._pin_log and self._hot_bytes > budget_bytes:

@@ -1,0 +1,284 @@
+"""Historical-activation store for control-variate sampled training.
+
+VR-GCN-style variance reduction (the DGL ``gcn_cv_sc`` update rule,
+SNIPPETS.md snippet 2) lets the sampler's fanout drop from 8 to ~2
+without losing accuracy: each layer's aggregation is estimated as the
+*sampled* aggregation over the induced mini-batch edges plus a
+*historical* aggregation over exactly the edges the batch dropped
+(:func:`repro.core.sampling.missing_in_edges`), read from the last
+activations computed for those vertices. The history term is constant
+w.r.t. the current parameters, so gradients still flow only through the
+sampled exchange — per-step ``exchange_bytes`` shrink with the fanout,
+which is the bandwidth axis the paper's 32 % transmission reduction
+targets.
+
+This module is the storage side: per ``(graph fingerprint, layer)`` a
+host-resident ``(V, F)`` float32 activation mirror plus a per-vertex
+``written`` mask (rows never written read as *invalid* — the trainer
+treats them as zero history, i.e. it falls back to the plain sampled
+term for those edges, so a cold or evicted history degrades gracefully
+instead of biasing the estimate with garbage).
+
+Budget + coherence contract (mirrors :mod:`repro.gcn.featurestore`):
+
+  * byte-budgeted LRU over whole ``(graph, layer)`` entries, wired into
+    ``cache.set_cache_budget(history_bytes=...)`` /
+    ``cache_stats()["history"]`` / ``clear_plan_cache``;
+  * the plan-eviction cascade releases a parent graph's history with
+    its plan (``repro.gcn.cache._on_plan_evict`` calls
+    :meth:`HistoryStore.release`) — an evicted graph re-warms through
+    write-backs exactly like the feature store's cold tier;
+  * every public method runs fully under ``self.lock`` (the default
+    store shares ``repro.gcn.cache._LOCK``); reads return copies, so a
+    concurrent eviction or write-back never mutates a batch mid-step.
+
+Pipelined determinism: history mutates every optimizer step, so —
+unlike features and plans — it must NOT be read inside pipeline
+``prepare`` closures. The trainer reads history rows on the *training
+thread*, in consumption order, which keeps the pipelined CV trajectory
+bit-identical to serial (``tests/test_gcn_train_cv.py``).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.gcn import cache, obs
+
+__all__ = ["HistoryStore", "default_history"]
+
+_WRITE_ROWS = obs.metrics.counter(
+    "history.write_rows", unit="rows",
+    help="activation rows written back to the history store")
+_READ_ROWS = obs.metrics.counter(
+    "history.read_rows", unit="rows",
+    help="valid (written) history rows served to CV corrections")
+_FALLBACK_ROWS = obs.metrics.counter(
+    "history.fallback_rows", unit="rows",
+    help="requested history rows served as zero (unwritten or evicted)")
+_EVICTIONS = obs.metrics.counter(
+    "history.evictions", unit="entries",
+    help="(graph, layer) history entries evicted under the byte budget")
+
+
+def _check_budget(budget_bytes):
+    if budget_bytes is None:
+        return None
+    b = int(budget_bytes)
+    if b < 0:
+        raise ValueError(f"budget_bytes must be >= 0 or None: "
+                         f"{budget_bytes}")
+    return b
+
+
+class _LayerHistory:
+    """One entry: the last activations computed for one layer of one
+    graph, plus which rows have ever been written."""
+
+    __slots__ = ("values", "written", "version", "nbytes")
+
+    def __init__(self, num_vertices: int, feat_dim: int):
+        self.values = np.zeros((num_vertices, feat_dim), np.float32)
+        self.written = np.zeros(num_vertices, bool)
+        self.version = 0
+        self.nbytes = self.values.nbytes + self.written.nbytes
+
+
+class HistoryStore:
+    """Byte-budgeted per-``(graph_fp, layer)`` historical activations.
+
+    Entries allocate lazily on first :meth:`write`; admission evicts
+    least-recently-used entries until the newcomer fits, and an entry
+    that cannot fit the whole budget is simply not kept (the write is
+    dropped, reads fall back to zero — CV degrades to plain sampling
+    for that layer rather than holding a partial table).
+    """
+
+    def __init__(self, *, budget_bytes: int | None = None, lock=None):
+        self.lock = lock if lock is not None else threading.RLock()
+        self.budget_bytes = _check_budget(budget_bytes)
+        self._layers: OrderedDict[tuple, _LayerHistory] = OrderedDict()
+        self._heights: dict[str, int] = {}
+        self.total_bytes = 0
+        # store-wide counters (cache_stats()["history"])
+        self.writes = 0
+        self.write_rows = 0
+        self.read_rows = 0
+        self.fallback_rows = 0
+        self.evictions = 0
+        self.rejected_writes = 0
+
+    # ---------------- admission / eviction ----------------
+
+    def _evict_until(self, need: int, keep: tuple | None) -> None:
+        """Evict LRU entries (never ``keep``) until ``need`` free bytes
+        exist under the budget."""
+        if self.budget_bytes is None:
+            return
+        for key in list(self._layers):
+            if self.total_bytes + need <= self.budget_bytes:
+                break
+            if key == keep:
+                continue
+            ent = self._layers.pop(key)
+            self.total_bytes -= ent.nbytes
+            self.evictions += 1
+            _EVICTIONS.add(1)
+
+    def _entry_for_write(self, key: tuple, num_vertices: int,
+                         feat_dim: int) -> _LayerHistory | None:
+        ent = self._layers.get(key)
+        if ent is not None:
+            if (ent.values.shape != (num_vertices, feat_dim)):
+                # shape changed (new model/graph padding): start over
+                self.total_bytes -= ent.nbytes
+                del self._layers[key]
+                ent = None
+            else:
+                self._layers.move_to_end(key)
+                return ent
+        ent = _LayerHistory(num_vertices, feat_dim)
+        if self.budget_bytes is not None:
+            self._evict_until(ent.nbytes, keep=None)
+            if self.total_bytes + ent.nbytes > self.budget_bytes:
+                return None  # cannot fit even after evicting everything
+        self._layers[key] = ent
+        self.total_bytes += ent.nbytes
+        return ent
+
+    # ---------------- the trainer-facing API ----------------
+
+    def write(self, graph_fp: str, layer: int, nodes, values) -> int:
+        """Write freshly computed activations for ``nodes`` (global
+        vertex ids of the *parent* graph) of ``layer``; returns the
+        number of rows written (0 when the entry cannot fit the
+        budget)."""
+        nodes = np.asarray(nodes, np.int64)
+        values = np.asarray(values, np.float32)
+        if values.ndim != 2 or values.shape[0] != nodes.size:
+            raise ValueError(
+                f"values must be (len(nodes), F); got {values.shape} "
+                f"for {nodes.size} nodes")
+        with self.lock:
+            ent = self._entry_for_write(
+                (graph_fp, int(layer)),
+                num_vertices=self._num_vertices_hint(
+                    graph_fp, int(layer), nodes),
+                feat_dim=int(values.shape[1]))
+            if ent is None:
+                self.rejected_writes += 1
+                return 0
+            ent.values[nodes] = values
+            ent.written[nodes] = True
+            ent.version += 1
+            self.writes += 1
+            self.write_rows += int(nodes.size)
+        _WRITE_ROWS.add(int(nodes.size))
+        return int(nodes.size)
+
+    def _num_vertices_hint(self, graph_fp: str, layer: int,
+                           nodes: np.ndarray) -> int:
+        """Table height for a lazily allocated entry: the registered
+        height when known, else enough to hold ``nodes``. The trainer
+        calls :meth:`ensure` with the parent's vertex count first, so
+        in practice this is always the registered height."""
+        ent = self._layers.get((graph_fp, layer))
+        if ent is not None:
+            return int(ent.values.shape[0])
+        hint = self._heights.get(graph_fp)
+        if hint is not None:
+            return int(hint)
+        return int(nodes.max()) + 1 if nodes.size else 0
+
+    def ensure_height(self, graph_fp: str, num_vertices: int) -> None:
+        """Declare the parent graph's vertex count, so lazily allocated
+        entries get full-height tables regardless of which batch writes
+        first."""
+        with self.lock:
+            self._heights[graph_fp] = int(num_vertices)
+
+    def read(self, graph_fp: str, layer: int, nodes):
+        """History rows for ``nodes``: ``(rows, valid)`` where ``rows``
+        is ``(len(nodes), F)`` float32 with unwritten rows zeroed and
+        ``valid`` the per-row written mask — or ``None`` when the
+        ``(graph, layer)`` entry does not exist (never written, or
+        evicted): the caller falls back to the plain sampled term."""
+        nodes = np.asarray(nodes, np.int64)
+        with self.lock:
+            ent = self._layers.get((graph_fp, int(layer)))
+            if ent is None:
+                self.fallback_rows += int(nodes.size)
+                _FALLBACK_ROWS.add(int(nodes.size))
+                return None
+            self._layers.move_to_end((graph_fp, int(layer)))
+            valid = ent.written[nodes]
+            rows = ent.values[nodes]  # fancy index: a copy
+            rows[~valid] = 0.0
+            nvalid = int(valid.sum())
+            self.read_rows += nvalid
+            self.fallback_rows += int(nodes.size) - nvalid
+        _READ_ROWS.add(nvalid)
+        _FALLBACK_ROWS.add(int(nodes.size) - nvalid)
+        return rows, valid
+
+    def version(self, graph_fp: str, layer: int) -> int:
+        """Monotone write counter for one entry (0 = absent) — lets
+        tests pin that pipeline workers never observed mid-epoch
+        history states."""
+        with self.lock:
+            ent = self._layers.get((graph_fp, int(layer)))
+            return 0 if ent is None else ent.version
+
+    # ---------------- budget / coherence ----------------
+
+    def set_budget(self, budget_bytes: int | None) -> None:
+        """Reconfigure and shrink immediately (LRU entries go first);
+        ``total_bytes <= budget`` holds on return — a whole-entry store,
+        so unlike the plan LRU nothing is kept over budget."""
+        with self.lock:
+            self.budget_bytes = _check_budget(budget_bytes)
+            self._evict_until(0, keep=None)
+
+    def release(self, graph_fp: str) -> int:
+        """Drop every layer of one graph (the plan-eviction cascade)."""
+        with self.lock:
+            doomed = [k for k in self._layers if k[0] == graph_fp]
+            for key in doomed:
+                self.total_bytes -= self._layers.pop(key).nbytes
+            self._heights.pop(graph_fp, None)
+            return len(doomed)
+
+    def clear(self) -> int:
+        with self.lock:
+            n = len(self._layers)
+            self._layers.clear()
+            self._heights.clear()
+            self.total_bytes = 0
+            return n
+
+    def stats(self) -> dict:
+        with self.lock:
+            return {
+                "entries": len(self._layers),
+                "bytes": self.total_bytes,
+                "budget_bytes": self.budget_bytes,
+                "writes": self.writes,
+                "write_rows": self.write_rows,
+                "read_rows": self.read_rows,
+                "fallback_rows": self.fallback_rows,
+                "evictions": self.evictions,
+                "rejected_writes": self.rejected_writes,
+            }
+
+
+def default_history() -> HistoryStore:
+    """The process-wide instance the cache layer budgets
+    (``set_cache_budget(history_bytes=...)``), reports
+    (``cache_stats()["history"]``) and clears. Imported lazily by
+    ``repro.gcn.cache`` to avoid an import cycle."""
+    return _DEFAULT
+
+
+_DEFAULT = HistoryStore(lock=cache._LOCK)

@@ -87,6 +87,8 @@ KNOWN_PHASES = frozenset({
     "serve_upload",    # service plan upload (sync or prefetch)
     "chunk_prepare",   # layer-major chunk prepare
     "chunk_execute",   # layer-major chunk execute
+    "history_agg",     # CV correction build (history read + upload)
+    "history_write",   # CV activation write-back after the step
 })
 
 

@@ -92,6 +92,10 @@ class SamplePipeline:
         self._prepared = 0
         self._occ_sum = 0
         self._gets = 0
+        # test-injectable barrier: called by close() after the closed
+        # flag is set but before workers are joined / the buffer is
+        # dropped (None outside the race regression tests)
+        self._drain_barrier = None
         self._threads = [
             threading.Thread(target=self._work, name=f"{name}-{i}",
                              daemon=True)
@@ -156,8 +160,7 @@ class SamplePipeline:
                 raise ValueError(
                     f"out-of-order get: index {index}, expected "
                     f"{self._next_consume}")
-            if self._closed:
-                raise RuntimeError("pipeline is closed")
+            closed_at_entry = self._closed
             self._occ_sum += len(self._ready)
             self._gets += 1
             t0 = time.perf_counter()
@@ -165,9 +168,17 @@ class SamplePipeline:
                 self._cv.wait()
             dt = time.perf_counter() - t0
             self._wait_s += dt
-            if self._closed:
-                raise RuntimeError("pipeline closed while waiting")
-            val, err = self._ready.pop(index)
+            # Buffer BEFORE the closed flag: a result already committed
+            # for this index survives a concurrently-arriving close()
+            # (e.g. the trainer's ``finally`` racing the last get) —
+            # close() only drops the buffer after workers are joined, so
+            # a waiter woken by close's notify still finds its value.
+            entry = self._ready.pop(index, None)
+            if entry is None:
+                raise RuntimeError(
+                    "pipeline is closed" if closed_at_entry
+                    else "pipeline closed while waiting")
+            val, err = entry
             self._next_consume += 1
             self._cv.notify_all()  # a claim slot opened
         obs.metrics.counter(
@@ -187,6 +198,10 @@ class SamplePipeline:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+        if self._drain_barrier is not None:
+            # test hook: hold the close here — flag set, buffer intact —
+            # so the get()-vs-close() race window is deterministic
+            self._drain_barrier()
         for t in self._threads:
             if t is not threading.current_thread():
                 t.join()

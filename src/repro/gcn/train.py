@@ -64,12 +64,14 @@ from repro.core import message_passing as mp
 from repro.core import sampling
 from repro.core.partition import make_partition
 from repro.core.plan import build_plan, pad_plan_pow2
-from repro.gcn import cache, obs
+from repro.gcn import cache, history as historylib, obs
 from repro.gcn.pipeline import SamplePipeline
 from repro.train import optimizer as optlib
 
 __all__ = ["BatchSession", "FitReport", "GCNTrainer", "SampledFitReport",
-           "masked_cross_entropy", "reference_loss_and_grad"]
+           "build_cv_loss_grad", "build_cv_train_step",
+           "forward_layers_cv", "masked_cross_entropy",
+           "reference_loss_and_grad"]
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +127,98 @@ def build_loss_grad(engine, impl: str):
                    vg(params, pdev, x, labels, mask))
 
 
+def forward_layers_cv(engine, impl: str):
+    """Control-variate whole-network forward ``(pdev, params, x, corrs)
+    -> (logits, hiddens)``: each layer's aggregation is the sampled
+    exchange PLUS a constant per-layer correction table ``corrs[l]``
+    (``(*dims, Vp, F_l)``) — the historical aggregation over exactly
+    the parent edges the sampled subgraph dropped (VR-GCN; the DGL
+    ``gcn_cv_sc`` rule ``h = h*subg_norm + agg_history*norm``, with the
+    norms already folded into the edge weights both terms carry).
+
+    The exchange is linear, so the correction composes OUTSIDE it
+    (:func:`repro.core.message_passing.scatter_rows_sharded`): the
+    custom_vjp exchange story is untouched, ``jax.grad`` flows only
+    through the sampled term on both agg backends, and when every
+    correction row is exactly zero (full fanout drops no edges into
+    any loss-relevant vertex) this forward is bit-identical to
+    :func:`forward_layers`.
+
+    ``hiddens`` are the freshly computed hidden activations
+    ``(h_1 .. h_{L-1})`` — layer ``l``'s input — which the trainer
+    writes back to the history store after the optimizer step."""
+    exchange = engine.exchange_fn(impl)
+    nd = len(engine.dims)
+    combine = engine.model_spec.combine
+
+    def fwd(pdev, params, x, corrs):
+        hiddens = []
+        for li, layer in enumerate(params):
+            accs = exchange(pdev, x)  # (*dims, R, slots, F)
+            agg = accs.reshape(accs.shape[:nd] + (-1, accs.shape[-1]))
+            agg = agg + corrs[li]
+            x = combine(layer, agg, x, last=li == len(params) - 1)
+            if li < len(params) - 1:
+                hiddens.append(x)
+        return x, tuple(hiddens)
+
+    return fwd
+
+
+def build_cv_loss_grad(engine, impl: str):
+    """``(pdev, params, x, corrs, labels, mask) -> (loss, grads)`` for
+    the control-variate forward. ``corrs`` is differentiation-inert (a
+    plain input, never a differentiated argument), so the traced
+    backward carries exactly the plain step's ppermute payload."""
+    fwd = forward_layers_cv(engine, impl)
+
+    def loss_fn(params, pdev, x, corrs, labels, mask):
+        logits, _ = fwd(pdev, params, x, corrs)
+        return masked_cross_entropy(logits, labels, mask)
+
+    vg = jax.value_and_grad(loss_fn)
+    return jax.jit(lambda pdev, params, x, corrs, labels, mask:
+                   vg(params, pdev, x, corrs, labels, mask))
+
+
+def build_cv_train_step(engine, impl: str, opt_cfg: optlib.AdamWConfig):
+    """One control-variate training step: CV loss + grads (through the
+    sampled exchange only) + AdamW update, returning the hidden
+    activations as a fourth output for history write-back:
+    ``(pdev, params, opt_state, x, corrs, labels, mask) ->
+    (params, opt_state, metrics, hiddens)``. The hiddens come from the
+    same forward the gradient used (pre-update params — VR-GCN's h̄ is
+    the last *computed* activation, not a recompute under new
+    params)."""
+    fwd = forward_layers_cv(engine, impl)
+
+    def step(pdev, params, opt_state, x, corrs, labels, mask):
+        def loss_fn(p):
+            logits, hiddens = fwd(pdev, p, x, corrs)
+            return masked_cross_entropy(logits, labels, mask), hiddens
+
+        (loss, hiddens), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, metrics = optlib.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics}, hiddens
+
+    return jax.jit(step, donate_argnums=_donation_argnums())
+
+
+def _cv_layer_dims(params) -> list[int]:
+    """Per-layer aggregation input widths — the history feature dims.
+    Every registered model's layer dict carries ``w: (fan_in,
+    fan_out)`` (GCN/GIN/SAGE all do); a model without one cannot size
+    its correction tables, which is a hard error, not a guess."""
+    try:
+        return [int(layer["w"].shape[0]) for layer in params]
+    except (KeyError, TypeError, AttributeError, IndexError) as e:
+        raise ValueError(
+            "variance_reduction needs per-layer input widths: every "
+            "layer dict must carry 'w' of shape (fan_in, fan_out)") from e
+
+
 def _donation_argnums() -> tuple[int, ...]:
     """Argnums of the train step's donated buffers: params and opt
     state, both replaced wholesale every step, so XLA may update them
@@ -159,12 +253,17 @@ def build_train_step(engine, impl: str, opt_cfg: optlib.AdamWConfig):
     return jax.jit(step, donate_argnums=_donation_argnums())
 
 
-def _train_exchange_bytes(engine, params, impl: str) -> int:
+def _train_exchange_bytes(engine, params, impl: str, *,
+                          cv: bool = False) -> int:
     """ppermute payload bytes of one training step on ``engine``'s plan
     (forward relay replays + their transposed backward replays),
     counted from the traced ``value_and_grad`` jaxpr with abstract
     inputs — works identically for full-batch sessions and sampled
-    batch sessions."""
+    batch sessions. ``cv=True`` traces the control-variate step
+    instead; its payload MUST equal the plain step's on the same
+    session (the history term adds no exchange — pinned by test), so
+    the bench's fanout-2-CV vs fanout-8-plain comparison isolates the
+    fanout effect."""
     from repro.gcn import engine as _engine
 
     pdev = engine.plan_arrays(impl)
@@ -173,10 +272,19 @@ def _train_exchange_bytes(engine, params, impl: str) -> int:
     x_abs = jax.ShapeDtypeStruct(engine.dims + (Vp, F), jnp.float32)
     lb_abs = jax.ShapeDtypeStruct(engine.dims + (Vp,), jnp.int32)
     mk_abs = jax.ShapeDtypeStruct(engine.dims + (Vp,), jnp.float32)
-    fn = build_loss_grad(engine, impl)
-    jaxpr = jax.make_jaxpr(
-        lambda pd, p, xx, lb, mk: fn(pd, p, xx, lb, mk))(
-        pdev, params, x_abs, lb_abs, mk_abs)
+    if cv:
+        corrs_abs = tuple(
+            jax.ShapeDtypeStruct(engine.dims + (Vp, d), jnp.float32)
+            for d in _cv_layer_dims(params))
+        fn = build_cv_loss_grad(engine, impl)
+        jaxpr = jax.make_jaxpr(
+            lambda pd, p, xx, cc, lb, mk: fn(pd, p, xx, cc, lb, mk))(
+            pdev, params, x_abs, corrs_abs, lb_abs, mk_abs)
+    else:
+        fn = build_loss_grad(engine, impl)
+        jaxpr = jax.make_jaxpr(
+            lambda pd, p, xx, lb, mk: fn(pd, p, xx, lb, mk))(
+            pdev, params, x_abs, lb_abs, mk_abs)
     return _engine._ppermute_payload_bytes(jaxpr.jaxpr, 1)
 
 
@@ -272,6 +380,16 @@ class SampledFitReport(FitReport):
     pipeline_wait_s: float = 0.0
     pipeline_queue_occupancy: float = 0.0
     batch_fingerprints: list = field(default_factory=list)
+    # control-variate (historical-aggregation) telemetry: zeros/False
+    # for plain sampled runs. The byte story the train-cv bench gates:
+    # CV at fanout 2 must move strictly fewer exchange bytes per step
+    # than plain sampling at fanout 8 at matched accuracy
+    variance_reduction: bool = False
+    history_bytes: int = 0  # store-resident history bytes after the fit
+    history_write_rows: int = 0
+    history_read_rows: int = 0
+    history_fallback_rows: int = 0
+    history_evictions: int = 0
 
     @property
     def batch_plan_hit_rate(self) -> float:
@@ -291,10 +409,37 @@ class BatchSession:
     nodes: np.ndarray  # (S,) int64 sorted global ids; local i == nodes[i]
     seeds: np.ndarray  # (B,) int64 sorted global ids, subset of nodes
     engine: object  # GCNEngine.from_plan session (padded Vpad vertices)
+    # lazily attached control-variate payload (_CVBatchData): the
+    # batch's missing-edge arrays + exact layer-0 correction. Pure
+    # content (a function of batch + parent CSR + feature content), so
+    # concurrent builders may both compute it — last assignment wins,
+    # values identical. Not counted in the cache entry's nbytes: the
+    # payload is bounded by the batch's own edge count.
+    cv: object = None
 
     @property
     def num_padded_vertices(self) -> int:
         return self.engine.graph.num_vertices
+
+
+@dataclass
+class _CVBatchData:
+    """Step-independent control-variate inputs of one batch session:
+    the parent edges the induced subgraph dropped (dst in the batch,
+    src outside — :func:`repro.core.sampling.missing_in_edges`),
+    grouped by unique source for history gathers, plus the layer-0
+    correction, which is EXACT (layer-0 history is the input features
+    themselves) and therefore safe to precompute on pipeline workers.
+    Corrections for layers >= 1 read the mutable history store and are
+    computed on the training thread per step."""
+
+    feat_fp: str | None  # feature-content identity corr0 was built for
+    dst_local: np.ndarray  # (M,) int64 into the batch's local ids
+    src_glob: np.ndarray  # (M,) int64 parent ids outside the batch
+    w: np.ndarray  # (M,) f32 prepared-graph edge weights
+    usrc: np.ndarray  # unique src_glob (history gather set)
+    inv: np.ndarray  # src_glob = usrc[inv]
+    corr0: object  # (*dims, Vp, F0) sharded exact layer-0 correction
 
 
 class GCNTrainer:
@@ -564,6 +709,91 @@ class GCNTrainer:
             lb_sh, mk_sh = shard_training_inputs(sub, lb, mk)
         return x, lb_sh, mk_sh
 
+    # ---------------- control-variate (historical aggregation) ----------------
+
+    @staticmethod
+    def _feat_fp(handle) -> str | None:
+        """Content identity of the handle's registered features (the
+        CV payload caches per feature content: a re-fit with different
+        features on the same graph must rebuild corr0)."""
+        store = handle.store
+        with store.lock:
+            g = store._graphs.get(handle.graph_fp)
+            return None if g is None else g.feat_fp
+
+    def _cv_batch_data(self, bs: BatchSession, handle) -> _CVBatchData:
+        """The batch's step-independent CV inputs (lazily attached to
+        the cached session): missing-edge arrays from the prepared
+        parent CSR and the EXACT layer-0 correction (layer-0 history is
+        the input features, which are constant — so this whole build is
+        pure in (batch, parent graph, feature content) and safe on
+        pipeline workers)."""
+        ffp = self._feat_fp(handle)
+        cv = bs.cv
+        if cv is not None and cv.feat_fp == ffp:
+            return cv
+        indptr, src, w = self._prepared_csr()
+        dst_local, src_glob, mw = sampling.missing_in_edges(
+            indptr, src, w, bs.nodes)
+        mw = np.asarray(mw, np.float32)
+        usrc, inv = np.unique(src_glob, return_inverse=True)
+        S = bs.nodes.size
+        corr_rows = np.zeros((S, handle.feat_dim), np.float32)
+        if usrc.size:
+            feats = handle.gather(usrc)
+            np.add.at(corr_rows, dst_local, mw[:, None] * feats[inv])
+        with obs.trace.span("upload", what="cv_corr0", rows=S,
+                            missing_edges=int(dst_local.size)):
+            corr0 = jnp.asarray(
+                mp.scatter_rows_sharded(bs.engine.plan, corr_rows))
+        cv = _CVBatchData(feat_fp=ffp, dst_local=dst_local,
+                          src_glob=src_glob, w=mw, usrc=usrc, inv=inv,
+                          corr0=corr0)
+        bs.cv = cv  # benign race: concurrent builds are identical
+        return cv
+
+    def _cv_corrections(self, bs: BatchSession, cv_dims, hist) -> tuple:
+        """Per-layer correction tables for one step. Layer 0 is the
+        precomputed exact term; layers >= 1 aggregate the CURRENT
+        history rows over the missing edges — read on the training
+        thread, in consumption order, which is what keeps the pipelined
+        CV trajectory bit-identical to serial. An absent entry (never
+        written, evicted, or width-mismatched) contributes zero: the
+        estimate falls back to the plain sampled term, it never goes
+        stale-wrong."""
+        cv = bs.cv
+        S = bs.nodes.size
+        fp = self.engine.graph_fp
+        with obs.trace.span("history_agg", rows=int(cv.usrc.size),
+                            layers=len(cv_dims) - 1):
+            corrs = [cv.corr0]
+            for l in range(1, len(cv_dims)):
+                Fl = cv_dims[l]
+                rows = np.zeros((S, Fl), np.float32)
+                if cv.usrc.size:
+                    got = hist.read(fp, l, cv.usrc)
+                    if got is not None and got[0].shape[1] == Fl:
+                        np.add.at(rows, cv.dst_local,
+                                  cv.w[:, None] * got[0][cv.inv])
+                corrs.append(jnp.asarray(
+                    mp.scatter_rows_sharded(bs.engine.plan, rows)))
+        return tuple(corrs)
+
+    def _cv_write_back(self, bs: BatchSession, hiddens, hist) -> int:
+        """Post-step write-back: the step's freshly computed hidden
+        activations for the batch's vertices become the history the
+        NEXT steps' corrections read. Rows written are exactly
+        ``bs.nodes`` per hidden layer (pinned by test)."""
+        S = bs.nodes.size
+        fp = self.engine.graph_fp
+        written = 0
+        with obs.trace.span("history_write", rows=S,
+                            layers=len(hiddens)):
+            for l, h in enumerate(hiddens, start=1):
+                rows = bs.engine.unshard(np.asarray(h))[:S]
+                written += hist.write(fp, l, bs.nodes, rows)
+        return written
+
     def fit_sampled(self, feats, *, epochs: int = 10, batch_size: int = 64,
                     fanouts: Sequence[int] = (8, 8), params=None,
                     layer_dims: Sequence[int] | None = None, seed: int = 0,
@@ -571,6 +801,7 @@ class GCNTrainer:
                     reset_opt: bool = False, agg_impl: str | None = None,
                     pipeline_depth: int = 0,
                     pipeline_workers: int = 2,
+                    variance_reduction: bool = False,
                     eval_every: int = 0) -> SampledFitReport:
         """Neighbor-sampled mini-batch training: each step optimizes the
         masked CE over one seed set of ``batch_size`` labeled vertices,
@@ -616,6 +847,25 @@ class GCNTrainer:
         accounting (``pipeline_overlap_fraction`` et al.), also
         surfaced via ``engine.stats()``.
 
+        ``variance_reduction=True`` turns on historical-aggregation
+        (control-variate) sampling: each layer's aggregation becomes
+        the sampled-edge sum over live activations PLUS the
+        dropped-edge sum over stale per-layer historical activations
+        h-bar (exact input features for layer 0; a byte-budgeted
+        :class:`~repro.gcn.history.HistoryStore` for layers >= 1,
+        refreshed after every optimizer step from that step's own
+        forward). The history term is a constant w.r.t. the
+        parameters, so gradients — and the cross-device exchange they
+        ride on — flow only through the sampled term: the per-step
+        exchange payload is identical to the plain path at the same
+        fanout, which is what lets tiny fanouts (e.g. ``(2, 2)``)
+        match large-fanout accuracy at a fraction of the bytes.
+        Missing or evicted history rows contribute zero (graceful
+        fallback toward plain sampling), and at full fanout the
+        dropped-edge set is empty, so the trajectory is bit-identical
+        to ``variance_reduction=False``. Budget via
+        ``cache.set_cache_budget(history_bytes=...)``.
+
         ``eval_every > 0`` runs the admission-aware :meth:`evaluate`
         every N epochs (and on the last), recording ``eval_loss`` /
         ``eval_accuracy`` in the history. The eval path inherits the
@@ -641,6 +891,16 @@ class GCNTrainer:
         if train_nodes.size == 0:
             raise ValueError("no labeled vertices to sample seeds from")
         sampler = self._sampler(fanouts, seed)
+        hist = cv_dims = None
+        if variance_reduction:
+            # historical-aggregation control variate: per layer the
+            # aggregation becomes (sampled edges over live activations)
+            # + (dropped edges over stale history h-bar); the history
+            # term is a constant w.r.t. params, so gradients flow only
+            # through the sampled exchange
+            cv_dims = _cv_layer_dims(params)
+            hist = historylib.default_history()
+            hist.ensure_height(eng.graph_fp, V)
         if self.opt_state is None or reset_opt:
             self.opt_state = optlib.init(params)
         c0 = cache.cache_stats()
@@ -671,7 +931,17 @@ class GCNTrainer:
             with obs.trace.span("batch_prepare", seeds=int(seeds.size)):
                 batch = self._sampled_batch(sampler, seeds)
                 bs = self._batch_session(batch)
-                step = bs.engine._compiled_train_step(self.opt, impl)
+                if variance_reduction:
+                    step = bs.engine._compiled_cv_train_step(self.opt, impl)
+                    # the step-independent CV pieces (missing-edge
+                    # structure + exact layer-0 correction from the
+                    # feature store) are pure in the seed set, so
+                    # builder threads pre-gather them here; the
+                    # history rows for layers >= 1 are read on the
+                    # training thread, in consumption order
+                    self._cv_batch_data(bs, handle)
+                else:
+                    step = bs.engine._compiled_train_step(self.opt, impl)
                 pdev = bs.engine.plan_arrays(impl)
                 x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
                 return bs, batch.fingerprint(), step, pdev, x, lb_sh, mk_sh
@@ -699,11 +969,24 @@ class GCNTrainer:
                     fingerprints.append(fp)
                     # the span covers the host-side sync on the loss
                     # too — that is when the device work is truly done
-                    with obs.trace.span("execute", what="train_step",
-                                        epoch=ep, batch=ti - 1):
-                        params, self.opt_state, metrics = step(
-                            pdev, params, self.opt_state, x, lb_sh, mk_sh)
-                        loss = float(metrics["loss"])
+                    if variance_reduction:
+                        corrs = self._cv_corrections(bs, cv_dims, hist)
+                        with obs.trace.span("execute", what="train_step",
+                                            epoch=ep, batch=ti - 1):
+                            (params, self.opt_state, metrics,
+                             hiddens) = step(pdev, params, self.opt_state,
+                                             x, corrs, lb_sh, mk_sh)
+                            loss = float(metrics["loss"])
+                        # refresh h-bar AFTER the optimizer step with
+                        # the activations the step itself computed
+                        self._cv_write_back(bs, hiddens, hist)
+                    else:
+                        with obs.trace.span("execute", what="train_step",
+                                            epoch=ep, batch=ti - 1):
+                            params, self.opt_state, metrics = step(
+                                pdev, params, self.opt_state, x, lb_sh,
+                                mk_sh)
+                            loss = float(metrics["loss"])
                     w = float(seeds.size)
                     loss_sum += loss * w
                     weight += w
@@ -749,7 +1032,8 @@ class GCNTrainer:
         # measured on the LARGEST bucket's session: the remainder batch
         # is systematically the runt, and the bench baseline should
         # reflect the dominant per-step payload
-        xbytes = (_train_exchange_bytes(big_bs.engine, params, impl)
+        xbytes = (_train_exchange_bytes(big_bs.engine, params, impl,
+                                        cv=variance_reduction)
                   if big_bs is not None else 0)
         steps = len(fingerprints)
         obs.metrics.counter(
@@ -789,25 +1073,50 @@ class GCNTrainer:
             pipeline_wait_s=pstats["wait_s"] if pstats else 0.0,
             pipeline_queue_occupancy=(
                 pstats["queue_occupancy_mean"] if pstats else 0.0),
+            variance_reduction=variance_reduction,
+            history_bytes=(c1["history"]["bytes"]
+                           if variance_reduction else 0),
+            history_write_rows=(c1["history"]["write_rows"]
+                                - c0["history"]["write_rows"]),
+            history_read_rows=(c1["history"]["read_rows"]
+                               - c0["history"]["read_rows"]),
+            history_fallback_rows=(c1["history"]["fallback_rows"]
+                                   - c0["history"]["fallback_rows"]),
+            history_evictions=(c1["history"]["evictions"]
+                               - c0["history"]["evictions"]),
             batch_fingerprints=fingerprints)
 
     def sampled_loss_and_grad(self, feats, seeds, *,
                               fanouts: Sequence[int], seed: int = 0,
-                              params=None, agg_impl: str | None = None):
+                              params=None, agg_impl: str | None = None,
+                              variance_reduction: bool = False):
         """``(loss, grads)`` of ONE sampled batch — the masked CE over
         the seed vertices on the batch's padded subgraph plan. The
         parity anchor: with full fanout (``-1`` per layer, depth >= the
         network depth) and ``seeds`` = every labeled vertex, this
         matches :meth:`engine.loss_and_grad` on the full graph to fp32
-        tolerance on either aggregation backend."""
+        tolerance on either aggregation backend.
+
+        ``variance_reduction=True`` adds the historical-aggregation
+        correction per layer (see :meth:`fit_sampled`); at full fanout
+        the dropped-edge set is empty and the result is bit-identical
+        to the plain path — the CV parity anchor."""
         eng = self.engine
         impl = eng._impl(agg_impl) if agg_impl is not None else self.impl
         params = eng._resolve_params(params)
         handle = self._feature_handle(feats)
         bs = self._batch_session(
             self._sampled_batch(self._sampler(fanouts, seed), seeds))
-        fn = bs.engine._compiled_loss_grad(impl)
         x, lb_sh, mk_sh = self._batch_inputs(bs, handle)
+        if variance_reduction:
+            fn = bs.engine._compiled_cv_loss_grad(impl)
+            self._cv_batch_data(bs, handle)
+            hist = historylib.default_history()
+            hist.ensure_height(eng.graph_fp, eng.graph.num_vertices)
+            corrs = self._cv_corrections(bs, _cv_layer_dims(params), hist)
+            return fn(bs.engine.plan_arrays(impl), params, x, corrs,
+                      lb_sh, mk_sh)
+        fn = bs.engine._compiled_loss_grad(impl)
         return fn(bs.engine.plan_arrays(impl), params, x, lb_sh, mk_sh)
 
     def evaluate(self, feats, params=None, *, mode: str = "auto",

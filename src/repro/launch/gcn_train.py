@@ -25,7 +25,11 @@ chain with device execution (``repro.gcn.pipeline``); the first model
 is additionally fit serially on a cold cache so the record carries a
 serial-vs-pipelined epoch-wall pair plus the measured
 ``pipeline_overlap_fraction``, and the two loss trajectories are
-asserted bit-identical.
+asserted bit-identical. ``--variance-reduction`` adds the
+historical-aggregation control variate (``--history-budget`` MiB for
+the activation store): fanout can drop to 2 while the record keeps the
+large-fanout accuracy — ``benchmarks/run.py --suite train-cv`` gates
+that byte-vs-accuracy trade.
 
 The trained parameters are handed straight to a ``GCNService`` at the
 end (``service.adopt``) and one serving request is verified against the
@@ -142,6 +146,17 @@ def main(argv=None) -> int:
     ap.add_argument("--reshuffle", action="store_true",
                     help="re-shuffle seed sets every epoch (defeats the "
                          "batch-plan cache; default keeps them fixed)")
+    ap.add_argument("--variance-reduction", action="store_true",
+                    help="historical-aggregation (control-variate) "
+                         "sampling: each layer adds the dropped-edge "
+                         "aggregation over cached historical "
+                         "activations, letting tiny fanouts (e.g. 2,2) "
+                         "match large-fanout accuracy at a fraction of "
+                         "the exchange bytes (requires --sampler)")
+    ap.add_argument("--history-budget", type=int, default=64,
+                    help="byte budget for the historical-activation "
+                         "store (MiB; 0 = reject all write-backs, i.e. "
+                         "degrade to plain sampling)")
     ap.add_argument("--feature-budget", type=int, default=64,
                     help="device byte budget for the feature store "
                          "(MiB; 0 = gather everything from host)")
@@ -181,13 +196,18 @@ def main(argv=None) -> int:
     mask = (rng.random(graph.num_vertices)
             < args.train_frac).astype(np.float32)
 
+    if args.variance_reduction and not args.sampler:
+        raise SystemExit("--variance-reduction requires --sampler")
     sampler_kw = None
     if args.sampler:
         fanouts = tuple(int(f) for f in args.fanout.split(","))
         sampler_kw = dict(batch_size=args.batch_size, fanouts=fanouts,
                           reshuffle_each_epoch=args.reshuffle,
                           pipeline_depth=args.pipeline_depth,
-                          pipeline_workers=args.pipeline_workers)
+                          pipeline_workers=args.pipeline_workers,
+                          variance_reduction=args.variance_reduction)
+        if args.variance_reduction:
+            set_cache_budget(history_bytes=args.history_budget << 20)
     suite = "train-sampled" if args.sampler else "train"
 
     svc = GCNService(mesh_dims)
@@ -253,7 +273,20 @@ def main(argv=None) -> int:
                 pipeline_depth=rep.pipeline_depth,
                 pipeline_overlap_fraction=round(
                     rep.pipeline_overlap_fraction, 4),
+                variance_reduction=rep.variance_reduction,
             )
+            if rep.variance_reduction:
+                rec.update(
+                    history_bytes=rep.history_bytes,
+                    history_write_rows=rep.history_write_rows,
+                    history_read_rows=rep.history_read_rows,
+                    history_fallback_rows=rep.history_fallback_rows,
+                    history_evictions=rep.history_evictions,
+                )
+                print(f"  history: {rep.history_bytes / 2**10:.1f} KiB "
+                      f"resident, {rep.history_write_rows} rows written, "
+                      f"{rep.history_read_rows} read / "
+                      f"{rep.history_fallback_rows} fallback")
             print(f"  sampled: {rep.batches_per_epoch} batches/epoch, "
                   f"buckets {rep.vertex_buckets}, batch-plan hit rate "
                   f"{rep.batch_plan_hit_rate:.2f}, "
@@ -343,7 +376,10 @@ def main(argv=None) -> int:
                                           args.fanout.split(",")],
                               "reshuffle_each_epoch": args.reshuffle,
                               "pipeline_depth": args.pipeline_depth,
-                              "pipeline_workers": args.pipeline_workers}
+                              "pipeline_workers": args.pipeline_workers,
+                              "variance_reduction":
+                                  args.variance_reduction,
+                              "history_budget_mib": args.history_budget}
             if pipeline_rec is not None:
                 rec["pipeline"] = pipeline_rec
         write_record(args.json, suite, rec)

@@ -110,20 +110,23 @@ def fresh_caches():
     each other's rows (regression-pinned in test_feature_store.py).
     The store's shape knobs (``block_vertices``/``hot_fraction``) are
     saved/restored too."""
-    from repro.gcn import cache, featurestore
+    from repro.gcn import cache, featurestore, history
 
     store = featurestore.default_store()
+    hist = history.default_history()
     cache.clear_all()
     store.clear()  # belt and braces: no host columns survive either
     saved = (cache._PLANS.budget_bytes, cache._ELL.budget_bytes,
              cache._PREP.budget_bytes, cache._STEPS.max_entries,
              cache._BATCH.budget_bytes, store.budget_bytes,
-             store.block_vertices, store.hot_fraction)
+             store.block_vertices, store.hot_fraction,
+             hist.budget_bytes)
     yield cache
     store.block_vertices, store.hot_fraction = saved[6], saved[7]
     cache.set_cache_budget(plan_bytes=saved[0], ell_bytes=saved[1],
                            prep_bytes=saved[2], step_entries=saved[3],
-                           batch_bytes=saved[4], feature_bytes=saved[5])
+                           batch_bytes=saved[4], feature_bytes=saved[5],
+                           history_bytes=saved[8])
     cache.clear_all()
     store.clear()
 

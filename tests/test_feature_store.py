@@ -383,3 +383,71 @@ def test_fresh_caches_clears_host_column_store_between_tests(
     np.testing.assert_array_equal(hb.gather(np.arange(V)), fb)
     s = hb.stats()
     assert s["dense_bytes"] == V * F * 4  # exactly this test's accesses
+
+
+# ---------------------------------------------------------------------------
+# budget-math corners: unset (None) and zero budgets (PR 10 bugfix sweep)
+# ---------------------------------------------------------------------------
+
+
+def test_unset_budget_is_unlimited_and_survives_register(erdos_graph):
+    """``budget_bytes=None`` means *unlimited*, not *zero*: every block
+    the access pattern touches is admitted, the hot-fraction math never
+    multiplies through ``None``, and ``set_budget(None)`` after a
+    finite budget restores unlimited admission."""
+    from repro.gcn.featurestore import FeatureStore
+
+    g = erdos_graph(V, E, seed=3)
+    store = FeatureStore(budget_bytes=None, block_vertices=32)
+    handle = store.register(g, _feats(seed=3))
+    np.testing.assert_array_equal(handle.gather(np.arange(V)),
+                                  _feats(seed=3))
+    assert store.budget_bytes is None
+    assert store.device_bytes > 0  # blocks were admitted, unbounded
+
+    # finite -> None round-trip keeps serving identical bits
+    store.set_budget(0)
+    assert store.device_bytes == 0
+    store.set_budget(None)
+    nodes = np.arange(0, V, 3)
+    np.testing.assert_array_equal(handle.gather(nodes),
+                                  _feats(seed=3)[nodes])
+    assert store.device_bytes > 0
+
+
+def test_zero_budget_store_is_host_only_but_bit_exact(erdos_graph):
+    """``budget_bytes=0`` is a degenerate but LEGAL configuration: no
+    block is ever admitted (``device_bytes == 0`` throughout, no pins),
+    yet every gather is bit-exact from the host tier."""
+    from repro.gcn.featurestore import FeatureStore
+
+    g = erdos_graph(V, E, seed=4)
+    feats = _feats(seed=4)
+    store = FeatureStore(budget_bytes=0, block_vertices=32)
+    handle = store.register(g, feats)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        nodes = rng.integers(0, V, size=rng.integers(1, 96))
+        np.testing.assert_array_equal(handle.gather(nodes), feats[nodes])
+        assert store.device_bytes == 0
+    assert handle.stats()["pinned"] == 0
+    assert handle.stats()["hits"] == 0  # nothing resident to hit
+
+
+def test_budget_validation_rejects_garbage():
+    """Negative budgets (constructor AND ``set_budget``), non-positive
+    block sizes and out-of-range hot fractions fail loudly instead of
+    corrupting the admission math downstream."""
+    from repro.gcn.featurestore import FeatureStore
+
+    with pytest.raises(ValueError, match="budget_bytes"):
+        FeatureStore(budget_bytes=-1)
+    with pytest.raises(ValueError, match="block_vertices"):
+        FeatureStore(block_vertices=0)
+    with pytest.raises(ValueError, match="hot_fraction"):
+        FeatureStore(hot_fraction=1.5)
+    store = FeatureStore(budget_bytes=1 << 20)
+    with pytest.raises(ValueError, match="budget_bytes"):
+        store.set_budget(-7)
+    # the failed set_budget must not have clobbered the old budget
+    assert store.budget_bytes == 1 << 20

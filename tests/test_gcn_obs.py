@@ -274,6 +274,34 @@ def test_train_counters_exact(obs_reset, fresh_caches, gcn_setup):
     assert snap["metrics"]["train.steps"]["value"] == steps
 
 
+def test_sample_memo_hit_accounting_is_exact(obs_reset, fresh_caches,
+                                             gcn_setup):
+    """``sample.memo_hits`` + ``sample.batches`` (misses, i.e. actual
+    samples) == every ``sample_memoized`` call the fit made — the memo
+    ledger closes exactly, so cache-efficiency claims about the sampled
+    path are measured, not inferred. With fixed seed sets only epoch 0
+    samples; every later epoch is all hits."""
+    obs = obs_reset
+    tr, _, feats, _, _ = _trainer(gcn_setup)
+    epochs = 4
+    rep = tr.fit_sampled(feats, epochs=epochs, batch_size=64,
+                         fanouts=(4, 4))
+    B = rep.batches_per_epoch
+    assert obs.metrics.value("sample.batches") == B
+    assert obs.metrics.value("sample.memo_hits") == (epochs - 1) * B
+    assert (obs.metrics.value("sample.memo_hits")
+            + obs.metrics.value("sample.batches")) == epochs * B
+
+    # reshuffling defeats the memo: every epoch samples, zero hits
+    obs.metrics.reset()
+    tr2, _, feats2, _, _ = _trainer(gcn_setup)
+    rep2 = tr2.fit_sampled(feats2, epochs=2, batch_size=64,
+                           fanouts=(4, 4), reshuffle_each_epoch=True)
+    assert obs.metrics.value("sample.batches") == \
+        2 * rep2.batches_per_epoch
+    assert obs.metrics.value("sample.memo_hits") == 0
+
+
 # ---------------------------------------------------------------------------
 # disabled mode
 # ---------------------------------------------------------------------------

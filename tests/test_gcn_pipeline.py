@@ -307,6 +307,43 @@ def test_pipeline_get_contract_and_close_idempotence():
     assert not _no_pipe_threads()
 
 
+def test_pipeline_get_returns_committed_result_despite_racing_close():
+    """The close-vs-get race regression (PR 10): a result already
+    COMMITTED to the reorder buffer must be delivered even when
+    ``close()`` lands between the consumer entering ``get`` and
+    popping the slot — the old implementation checked the closed flag
+    before the buffer and raised, silently dropping a prepared batch.
+    The ``_drain_barrier`` hook holds ``close()`` at its widest race
+    window (closed flag set + waiters notified, buffer still intact)
+    so the interleaving is deterministic, not timing-dependent."""
+    from repro.gcn.pipeline import SamplePipeline
+
+    pipe = SamplePipeline([10, 20], lambda t: t + 1, depth=2, workers=1)
+    # wait until the worker has committed result 0
+    deadline = time.time() + 5.0
+    while 0 not in pipe._ready:
+        assert time.time() < deadline, "worker never committed task 0"
+        time.sleep(0.001)
+
+    barrier = threading.Barrier(2)
+    pipe._drain_barrier = barrier.wait
+    closer = threading.Thread(target=pipe.close)
+    closer.start()
+    # close() has set the flag and notified; it is now parked at the
+    # barrier with the buffer untouched
+    while not pipe._closed:
+        time.sleep(0.001)
+
+    assert pipe.get(0) == 11  # committed result survives the close
+    barrier.wait()  # release close(): it joins workers, drops buffer
+    closer.join(timeout=5.0)
+    assert not closer.is_alive()
+    # after close completes, further gets fail loudly as before
+    with pytest.raises(RuntimeError, match="closed"):
+        pipe.get(1)
+    assert not _no_pipe_threads()
+
+
 def test_pipeline_worker_error_reraises_and_drains():
     from repro.gcn.pipeline import SamplePipeline
 

@@ -1,0 +1,360 @@
+"""Control-variate (historical-aggregation) sampled training — PR 10.
+
+The tentpole's correctness pins, in dependency order:
+
+  * **full-fanout identity** — with no dropped edges into any
+    loss-relevant vertex, ``variance_reduction=True`` is bit-identical
+    to the plain path: same loss, same grads, same multi-epoch
+    parameter trajectory (property-tested over seeds/backends via the
+    hypothesis shim). This is the strongest possible statement that the
+    correction composes OUTSIDE the sampled term;
+  * **missing-edge complement** — ``sampling.missing_in_edges`` is the
+    exact complement of ``induce_in_edges`` over the same parent CSR
+    (together they repartition every parent edge whose dst is in the
+    batch);
+  * **no extra exchange** — the CV backward carries exactly the plain
+    step's ppermute payload on the same batch session (the history term
+    is differentiation-inert), so the bench's fanout-2-CV vs
+    fanout-8-plain byte comparison isolates the fanout effect;
+  * **write-back coverage** — after one epoch, the history rows marked
+    written are exactly the union of the batches' subgraph vertices,
+    and the report's ``history_write_rows`` ledger closes;
+  * **pipelined determinism** — the pipelined CV trajectory (history
+    reads on the training thread, in consumption order; tracing ON) is
+    bit-identical to serial;
+  * **graceful degradation** — a zero history budget rejects every
+    write-back: CV silently degrades toward plain sampling (layer-0
+    correction stays exact) and the loss still decreases;
+  * **HistoryStore unit contract** — LRU eviction under the byte
+    budget, whole-entry admission (reject, never partial), budget
+    validation, the cache-layer wiring (``set_cache_budget`` /
+    ``cache_stats`` / ``clear_all`` / plan-evict cascade).
+
+Runs in-process on the 1-CPU view (mesh ``(1, 1)``).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+V, E, F, C = 256, 2048, 8, 4
+
+
+def _trainer(gcn_setup, **kw):
+    from repro.gcn import GCNTrainer
+
+    eng, feats, labels, mask = gcn_setup(**kw)
+    return GCNTrainer(eng, labels, mask), eng, feats, labels, mask
+
+
+def _leaves_equal(a, b):
+    import jax
+
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# full-fanout identity (the parity anchor)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 3), impl=st.sampled_from(["jnp", "pallas"]))
+def test_full_fanout_cv_loss_grad_bit_identical(seed, impl):
+    """One batch, full fanout: CV loss and every grad leaf equal the
+    plain path bit-for-bit, on both aggregation backends."""
+    import jax
+
+    from repro.config import get_gcn_config
+    from repro.core.graph import erdos
+    from repro.gcn import GCNEngine, GCNTrainer, cache
+
+    cache.clear_all()
+    rng = np.random.default_rng(seed)
+    g = erdos(V, E, seed=seed)
+    feats = rng.normal(size=(V, F)).astype(np.float32)
+    labels = rng.integers(0, C, size=V)
+    mask = (rng.random(V) < 0.8).astype(np.float32)
+    eng = GCNEngine.build(get_gcn_config("gcn-gcn-rd", "smoke"), g, (1, 1))
+    eng.init_params(jax.random.PRNGKey(seed), [F, 8, C])
+    tr = GCNTrainer(eng, labels, train_mask=mask)
+    seeds = np.flatnonzero(mask > 0)[:64]
+
+    l0, g0 = tr.sampled_loss_and_grad(feats, seeds, fanouts=(-1, -1),
+                                      agg_impl=impl)
+    l1, g1 = tr.sampled_loss_and_grad(feats, seeds, fanouts=(-1, -1),
+                                      agg_impl=impl,
+                                      variance_reduction=True)
+    assert float(l0) == float(l1)
+    _leaves_equal(g0, g1)
+
+
+def test_full_fanout_cv_fit_trajectory_bit_identical(fresh_caches,
+                                                     gcn_setup):
+    """Multi-epoch ``fit_sampled``: the whole VR trajectory (per-epoch
+    losses AND final params) equals plain at full fanout, write-backs
+    and all."""
+    tr0, _, feats, _, _ = _trainer(gcn_setup)
+    rep0 = tr0.fit_sampled(feats, epochs=3, batch_size=64,
+                           fanouts=(-1, -1))
+    fresh_caches.clear_all()
+    tr1, _, feats1, _, _ = _trainer(gcn_setup)
+    rep1 = tr1.fit_sampled(feats1, epochs=3, batch_size=64,
+                           fanouts=(-1, -1), variance_reduction=True)
+    assert [h["loss"] for h in rep0.history] == \
+        [h["loss"] for h in rep1.history]
+    _leaves_equal(rep0.params, rep1.params)
+    assert rep1.variance_reduction and not rep0.variance_reduction
+
+
+# ---------------------------------------------------------------------------
+# missing_in_edges: the exact complement
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 4), nbatch=st.sampled_from([1, 32, 128, 256]))
+def test_missing_in_edges_is_exact_complement(seed, nbatch):
+    """induced + missing repartition EVERY parent edge whose dst is in
+    the batch: counts add up, and each edge lands on exactly the side
+    its src membership dictates (weights carried through unchanged)."""
+    from repro.core.graph import erdos
+    from repro.core import sampling
+
+    g = erdos(V, E, seed=seed)
+    rng = np.random.default_rng(seed)
+    indptr, src, vals = sampling.csr_in_with_values(
+        g, rng.normal(size=E).astype(np.float32))
+    nodes = np.sort(rng.choice(V, size=nbatch, replace=False))
+
+    sub, svals = sampling.induce_in_edges(indptr, src, vals, nodes)
+    mdst, msrc, mvals = sampling.missing_in_edges(indptr, src, vals,
+                                                  nodes)
+    in_batch = np.zeros(V, bool)
+    in_batch[nodes] = True
+    # every parent edge into a batch dst, by construction
+    total = int(sum(indptr[v + 1] - indptr[v] for v in nodes))
+    assert sub.src.size + msrc.size == total
+    assert np.all(~in_batch[msrc])  # missing edges: src outside
+    assert np.all(in_batch[nodes[sub.src]])  # induced: src inside
+    # weight multiset is preserved across the split
+    kept = np.concatenate([np.asarray(svals), np.asarray(mvals)])
+    want = np.concatenate([vals[indptr[v]:indptr[v + 1]] for v in nodes])
+    np.testing.assert_array_equal(np.sort(kept), np.sort(want))
+
+
+# ---------------------------------------------------------------------------
+# no extra exchange: CV backward payload == plain
+# ---------------------------------------------------------------------------
+
+
+def test_cv_exchange_payload_equals_plain(fresh_caches, gcn_setup):
+    """On the same sampled batch session, the traced CV backward moves
+    exactly the plain backward's ppermute bytes — the history term adds
+    no exchange, so per-step bytes shrink with the fanout and nothing
+    else."""
+    from repro.gcn.train import _train_exchange_bytes
+
+    tr, eng, feats, _, mask = _trainer(gcn_setup)
+    seeds = np.flatnonzero(mask > 0)[:64]
+    bs = tr._batch_session(
+        tr._sampled_batch(tr._sampler((2, 2), 0), seeds))
+    params = eng._resolve_params(None)
+    plain = _train_exchange_bytes(bs.engine, params, tr.impl)
+    cv = _train_exchange_bytes(bs.engine, params, tr.impl, cv=True)
+    assert cv == plain
+
+
+# ---------------------------------------------------------------------------
+# write-back coverage
+# ---------------------------------------------------------------------------
+
+
+def test_write_back_rows_are_exactly_batch_vertices(fresh_caches,
+                                                    gcn_setup):
+    """After one VR epoch the history's written mask covers exactly the
+    union of the epoch's subgraph vertex sets, and the report's
+    ``history_write_rows`` equals (hidden layers) x (sum of subgraph
+    sizes)."""
+    from repro.gcn import history
+
+    tr, eng, feats, _, mask = _trainer(gcn_setup)
+    rep = tr.fit_sampled(feats, epochs=1, batch_size=64, fanouts=(2, 2),
+                         variance_reduction=True)
+    # replay the (deterministic, memoized) sampling to recover the
+    # per-batch vertex sets the fit consumed
+    sampler = tr._sampler((2, 2), 0)
+    train_nodes = np.flatnonzero(mask > 0)
+    expect = np.zeros(V, bool)
+    rows = 0
+    for seeds in sampler.epoch_batches(train_nodes, 64, epoch=0):
+        batch = tr._sampled_batch(sampler, seeds)
+        expect[batch.nodes] = True
+        rows += int(batch.nodes.size)
+    hist = history.default_history()
+    got = hist.read(eng.graph_fp, 1, np.arange(V))
+    assert got is not None
+    np.testing.assert_array_equal(got[1], expect)
+    assert rep.history_write_rows == rows  # one hidden layer (F,8,C)
+
+
+# ---------------------------------------------------------------------------
+# pipelined CV: bit-identical to serial, tracing on
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_cv_fit_bit_identical_to_serial(fresh_caches,
+                                                  gcn_setup):
+    """History is read on the training thread in consumption order, so
+    overlapping prepare with execution — with tracing ON, and with its
+    spans landing in the known-phase set — changes nothing about the
+    VR trajectory."""
+    from repro.gcn import obs
+
+    tr0, _, feats, _, _ = _trainer(gcn_setup)
+    rep0 = tr0.fit_sampled(feats, epochs=3, batch_size=64,
+                           fanouts=(2, 2), variance_reduction=True)
+    fresh_caches.clear_all()
+    capacity = obs.trace._buf.maxlen
+    obs.trace.configure(enabled=True, capacity=capacity)
+    obs.trace.clear()
+    try:
+        tr1, _, feats1, _, _ = _trainer(gcn_setup)
+        rep1 = tr1.fit_sampled(feats1, epochs=3, batch_size=64,
+                               fanouts=(2, 2), variance_reduction=True,
+                               pipeline_depth=2, pipeline_workers=2)
+        names = {e["name"] for e in obs.trace.events()}
+    finally:
+        obs.trace.configure(enabled=False)
+        obs.trace.clear()
+    assert [h["loss"] for h in rep0.history] == \
+        [h["loss"] for h in rep1.history]
+    _leaves_equal(rep0.params, rep1.params)
+    assert rep1.pipeline_depth == 2
+    # the CV phases traced, and only known phases appeared
+    assert {"history_agg", "history_write"} <= names
+    assert names <= set(obs.KNOWN_PHASES)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation under eviction
+# ---------------------------------------------------------------------------
+
+
+def test_zero_history_budget_degrades_gracefully(fresh_caches, gcn_setup):
+    """``history_bytes=0`` rejects every write-back: no entry ever
+    exists, every layer>=1 correction falls back to zero (plain
+    sampling), and training still converges — VR never makes things
+    crash-or-garbage, it only sharpens the estimate when memory
+    allows."""
+    from repro.gcn import history
+
+    fresh_caches.set_cache_budget(history_bytes=0)
+    tr, _, feats, _, _ = _trainer(gcn_setup)
+    rep = tr.fit_sampled(feats, epochs=4, batch_size=64, fanouts=(2, 2),
+                         variance_reduction=True)
+    s = history.default_history().stats()
+    assert s["entries"] == 0 and s["rejected_writes"] > 0
+    assert rep.history_write_rows == 0
+    assert rep.history_bytes == 0
+    assert rep.history[-1]["loss"] < rep.history[0]["loss"]
+
+
+def test_mid_fit_budget_shrink_then_regrow(fresh_caches, gcn_setup):
+    """Shrinking the history budget mid-run (epoch boundary) evicts the
+    table; the next fit re-warms it through write-backs — the
+    eviction/re-warm cycle is loss-monotone-harmless, not fatal."""
+    from repro.gcn import history
+
+    tr, _, feats, _, _ = _trainer(gcn_setup)
+    tr.fit_sampled(feats, epochs=2, batch_size=64, fanouts=(2, 2),
+                   variance_reduction=True)
+    hist = history.default_history()
+    assert hist.stats()["entries"] == 1
+    fresh_caches.set_cache_budget(history_bytes=0)  # evict everything
+    assert hist.stats()["entries"] == 0
+    fresh_caches.set_cache_budget(history_bytes=None)  # lift the cap
+    rep = tr.fit_sampled(feats, epochs=2, batch_size=64, fanouts=(2, 2),
+                         variance_reduction=True)
+    assert hist.stats()["entries"] == 1  # re-warmed
+    assert rep.history_write_rows > 0
+    assert np.isfinite(rep.history[-1]["loss"])
+
+
+# ---------------------------------------------------------------------------
+# HistoryStore unit contract
+# ---------------------------------------------------------------------------
+
+
+def test_history_store_read_write_and_fallback_masks():
+    from repro.gcn.history import HistoryStore
+
+    h = HistoryStore()
+    h.ensure_height("g", 10)
+    vals = np.arange(6, dtype=np.float32).reshape(3, 2)
+    assert h.write("g", 1, [2, 5, 7], vals) == 3
+    rows, valid = h.read("g", 1, [0, 2, 5, 7, 9])
+    np.testing.assert_array_equal(valid, [False, True, True, True, False])
+    np.testing.assert_array_equal(rows[1:4], vals)
+    np.testing.assert_array_equal(rows[0], [0.0, 0.0])
+    assert h.read("g", 2, [0]) is None  # absent layer: hard fallback
+    assert h.version("g", 1) == 1 and h.version("g", 2) == 0
+    s = h.stats()
+    assert s["write_rows"] == 3 and s["read_rows"] == 3
+    assert s["fallback_rows"] == 2 + 1
+
+
+def test_history_store_budget_lru_and_rejection():
+    from repro.gcn.history import HistoryStore
+
+    entry_bytes = 8 * 4 * 4 + 8  # (8,4) f32 + (8,) bool
+    h = HistoryStore(budget_bytes=2 * entry_bytes)
+    h.ensure_height("g", 8)
+    r = np.zeros((8, 4), np.float32)
+    nodes = np.arange(8)
+    assert h.write("g", 1, nodes, r) == 8
+    assert h.write("g", 2, nodes, r) == 8
+    h.read("g", 1, nodes)  # touch layer 1: layer 2 becomes LRU
+    assert h.write("g", 3, nodes, r) == 8  # evicts layer 2
+    assert h.read("g", 2, nodes) is None
+    assert h.read("g", 1, nodes) is not None
+    assert h.stats()["evictions"] == 1
+    assert h.stats()["bytes"] <= 2 * entry_bytes
+    # an entry that can never fit is rejected whole, not truncated
+    big = np.zeros((8, 4096), np.float32)
+    assert h.write("g", 4, nodes, big) == 0
+    assert h.stats()["rejected_writes"] == 1
+    # shrink-to-zero drops everything immediately
+    h.set_budget(0)
+    assert h.stats()["entries"] == 0 and h.stats()["bytes"] == 0
+    with pytest.raises(ValueError, match="budget_bytes"):
+        h.set_budget(-1)
+    with pytest.raises(ValueError, match="budget_bytes"):
+        HistoryStore(budget_bytes=-5)
+
+
+def test_history_cache_wiring_and_plan_evict_cascade(fresh_caches):
+    """The cache layer budgets, reports, clears and cascades the
+    default history store exactly like the feature store."""
+    from repro.gcn import cache
+    from repro.gcn.history import default_history
+
+    hist = default_history()
+    hist.ensure_height("gfp", 4)
+    hist.write("gfp", 1, [0, 1], np.ones((2, 3), np.float32))
+    assert cache.cache_stats()["history"]["entries"] == 1
+    cache.set_cache_budget(history_bytes=1 << 20)
+    assert hist.budget_bytes == 1 << 20
+    # the plan-eviction cascade releases that graph's history with it
+    key = cache.PlanKey(graph_fp="gfp", model="gcn",
+                        message_passing="rd", use_rounds=True,
+                        mesh_dims=(1, 1), agg_buffer_bytes=4096,
+                        bidir=False, alpha=1.0, feat_in=8, model_gen=0)
+    cache._on_plan_evict(key, None)
+    assert cache.cache_stats()["history"]["entries"] == 0
+    hist.write("gfp", 1, [0], np.ones((1, 3), np.float32))
+    cache.clear_all()
+    assert cache.cache_stats()["history"]["entries"] == 0
